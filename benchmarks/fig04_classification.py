@@ -1,0 +1,55 @@
+"""Figure 4 + Figures 16-19 (Appendix B): the model-performance study.
+
+Classifies the synthetic 49-model population (sub-linear / linear /
+super-linear) per the paper's §2.2 ratio test, at several batch sizes, and
+emits the per-size throughput/latency table for two exemplar models (the
+densenet121 / xlnet-large-cased analogues of Figure 3).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import SyntheticPaperProfiles
+
+
+def classify_at_slo(prof: SyntheticPaperProfiles, slo_ms: float) -> Dict[str, int]:
+    counts = {"sub-linear": 0, "linear": 0, "super-linear": 0}
+    for m in prof.services():
+        counts[prof.classify(m, slo_ms)] += 1
+    return counts
+
+
+def run() -> Dict:
+    prof = SyntheticPaperProfiles(n_models=49, seed=0)
+    by_slo = {slo: classify_at_slo(prof, slo) for slo in (30.0, 100.0, 1e9)}
+    # Figure-3-style exemplars: most sub-linear and most super-linear model
+    subs = [m for m in prof.services() if prof.classify(m) == "sub-linear"]
+    sups = [m for m in prof.services() if prof.classify(m) == "super-linear"]
+    exemplars = {}
+    for m in (subs[:1] + sups[:1]):
+        exemplars[m] = {
+            s: {
+                "throughput": round(prof.throughput(m, s, 100.0), 1),
+                "latency_b8": round(prof.latency_ms(m, s, 8), 2)
+                if prof.feasible(m, s) else None,
+            }
+            for s in prof.sizes()
+        }
+    return {"classification": by_slo, "exemplars": exemplars}
+
+
+def main() -> str:
+    res = run()
+    lines = ["slo_ms,sub-linear,linear,super-linear"]
+    for slo, c in res["classification"].items():
+        lines.append(f"{slo},{c['sub-linear']},{c['linear']},{c['super-linear']}")
+    nonlin = sum(
+        v for k, v in res["classification"][100.0].items() if k != "linear"
+    )
+    lines.append(f"# non-linear models at 100ms SLO: {nonlin}/49 (paper: majority)")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,44 @@
+"""Figure 12: improvement of the slow algorithm (GA+MCTS) over the fast
+greedy per GA round, on each simulation workload.  Paper: 1-3% GPUs saved,
+monotone (elitism)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import TwoPhaseOptimizer, a100_rules
+
+from benchmarks.common import SIM_WORKLOADS, simulation_profile, simulation_workload
+
+
+def run(rounds: int = 4) -> Dict[str, List[float]]:
+    prof = simulation_profile()
+    out = {}
+    for name in SIM_WORKLOADS:
+        wl = simulation_workload(name, prof)
+        opt = TwoPhaseOptimizer(
+            a100_rules(), prof, wl, ga_rounds=rounds, ga_population=4,
+            mcts_iterations=50, seed=0,
+        )
+        rep = opt.run()
+        base = rep.ga_history[0]
+        out[name] = [h / base for h in rep.ga_history]
+    return out
+
+
+def main() -> str:
+    res = run()
+    lines = ["workload," + ",".join(f"round{i}" for i in range(max(len(v) for v in res.values())))]
+    for name, hist in res.items():
+        lines.append(name + "," + ",".join(f"{h:.4f}" for h in hist))
+    final = {k: v[-1] for k, v in res.items()}
+    best = 1.0 - min(final.values())
+    lines.append(f"# max improvement over greedy: {best:.1%} (paper: 1-3%)")
+    # monotone non-increasing per elitism
+    for name, hist in res.items():
+        assert all(a >= b for a, b in zip(hist, hist[1:])), name
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,73 @@
+"""Figure 13: deployment transitions between the day and night real-world
+workloads — end-to-end runtime (serial vs dependency-parallel), action
+counts per transition, and per-action latencies (13c)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import (
+    ConfigSpace,
+    Controller,
+    GreedyFast,
+    SimulatedCluster,
+    a100_rules,
+)
+from repro.core.cluster import ACTION_SECONDS
+
+from benchmarks.common import day_night_workloads, realworld_profile
+
+
+def run() -> Dict:
+    rules = a100_rules()
+    prof = realworld_profile()
+    wl_day, wl_night = day_night_workloads(prof)
+    dep_day = GreedyFast(ConfigSpace(rules, prof, wl_day)).solve()
+    dep_night = GreedyFast(ConfigSpace(rules, prof, wl_night)).solve()
+
+    ctrl = Controller(rules, prof)
+    cluster = SimulatedCluster(rules, dep_day.num_gpus + 2)
+    ctrl.deploy_fresh(cluster, dep_day)
+
+    day2night = ctrl.transition(cluster, dep_night)
+    night2day = ctrl.transition(cluster, dep_day)
+    return {
+        "gpus": {"day": dep_day.num_gpus, "night": dep_night.num_gpus},
+        "day2night": {
+            "serial_s": day2night.serial_seconds,
+            "parallel_s": day2night.parallel_seconds,
+            "actions": day2night.action_counts,
+        },
+        "night2day": {
+            "serial_s": night2day.serial_seconds,
+            "parallel_s": night2day.parallel_seconds,
+            "actions": night2day.action_counts,
+        },
+        "action_seconds": dict(ACTION_SECONDS),
+    }
+
+
+def main() -> str:
+    res = run()
+    lines = [
+        f"# day uses {res['gpus']['day']} GPUs, night uses {res['gpus']['night']}",
+        "transition,serial_s,parallel_s,creates,deletes,migrates,repartitions",
+    ]
+    for t in ("day2night", "night2day"):
+        a = res[t]["actions"]
+        lines.append(
+            f"{t},{res[t]['serial_s']:.0f},{res[t]['parallel_s']:.0f},"
+            f"{a.get('create',0)},{a.get('delete',0)},{a.get('migrate',0)},{a.get('repartition',0)}"
+        )
+    for t in ("day2night", "night2day"):
+        assert res[t]["parallel_s"] <= 1800, "transitions must finish within 30min (paper §8.2)"
+    d2n, n2d = res["day2night"]["actions"], res["night2day"]["actions"]
+    lines.append(
+        f"# day2night deletes>={d2n.get('delete',0)}>= creates {d2n.get('create',0)}; "
+        f"night2day creates {n2d.get('create',0)} >= deletes {n2d.get('delete',0)} (paper Fig13b)"
+    )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

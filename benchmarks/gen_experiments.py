@@ -1,0 +1,48 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run
+artifacts.  Run after any re-sweep:
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments > experiments/roofline_table.md
+"""
+
+from __future__ import annotations
+
+from benchmarks.roofline_table import load_all
+
+
+def fmt(v, scale=1.0, digits=3):
+    return f"{v/scale:.{digits}g}"
+
+
+def main() -> str:
+    rows = load_all()
+    base = [r for r in rows if "+" not in r["mesh"]]
+    variants = [r for r in rows if "+" in r["mesh"]]
+    base.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | dominant "
+        "| useful_flops | peak_GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in base:
+        pk = (r.get("peak_memory_per_device") or 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3g} | {r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | {pk:.1f} |"
+        )
+    lines.append("")
+    lines.append("### §Perf variants")
+    lines.append(lines[0])
+    lines.append(lines[1])
+    for r in sorted(variants, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        pk = (r.get("peak_memory_per_device") or 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3g} | {r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | {pk:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,75 @@
+"""Beyond-paper: exact optimality gap on small instances.
+
+The paper bounds MIG-Serving's quality only against a constraint-free LP
+bound ("likely impossible to achieve").  On small instances we solve the
+≤2-service config space exactly (branch-and-bound, repro.core.exact) and
+combine the LP bound with the universal per-service bound — giving the
+true gap of the fast greedy and the two-phase optimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    SLO,
+    SyntheticPaperProfiles,
+    TwoPhaseOptimizer,
+    Workload,
+    a100_rules,
+    lower_bound_gpus,
+)
+from repro.core.exact import PairSpaceExact, per_service_lower_bound
+
+
+def run(n_instances: int = 4) -> List[Dict]:
+    out = []
+    for seed in range(n_instances):
+        prof = SyntheticPaperProfiles(n_models=4, seed=seed)
+        rng = np.random.default_rng(seed)
+        wl = Workload.make(
+            {m: SLO(float(rng.lognormal(6.2, 0.5)), 100.0) for m in prof.services()}
+        )
+        opt = TwoPhaseOptimizer(
+            a100_rules(), prof, wl, ga_rounds=6, ga_population=6,
+            mcts_iterations=150, seed=0,
+        )
+        rep = opt.run()
+        bb = PairSpaceExact(opt.space, node_limit=500_000)
+        exact, done = bb.solve(rep.fast_deployment)
+        out.append(
+            {
+                "seed": seed,
+                "greedy": rep.fast_deployment.num_gpus,
+                "two_phase": rep.best_deployment.num_gpus,
+                "pair_exact": exact.num_gpus,
+                "exact_complete": done,
+                "lp_bound": lower_bound_gpus(a100_rules(), prof, wl),
+                "per_service_bound": per_service_lower_bound(opt.space),
+            }
+        )
+    return out
+
+
+def main() -> str:
+    rows = run()
+    lines = ["seed,greedy,two_phase,pair_exact,complete,lp_bound,per_service_bound"]
+    hits = 0
+    for r in rows:
+        lines.append(
+            f"{r['seed']},{r['greedy']},{r['two_phase']},{r['pair_exact']},"
+            f"{r['exact_complete']},{r['lp_bound']},{r['per_service_bound']}"
+        )
+        if r["two_phase"] <= r["pair_exact"]:
+            hits += 1
+    lines.append(
+        f"# two-phase matches or beats the pair-space optimum on {hits}/{len(rows)} "
+        f"small instances (packed >2-service configs escape the pair space)"
+    )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

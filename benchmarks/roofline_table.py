@@ -1,0 +1,63 @@
+"""§Roofline benchmark: aggregate the dry-run artifacts into the per-(arch ×
+shape × mesh) roofline table (compute/memory/collective terms, dominant
+bottleneck, MODEL_FLOPS ratio).  Source data: experiments/dryrun/*.json
+written by repro.launch.dryrun."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_all(pattern: str = "*.json") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful_flops | peak_mem/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for r in rows:
+        pk = r.get("peak_memory_per_device")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+            f"| {pk/1e9:.1f} GB |" if pk else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} | - |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> str:
+    rows = [r for r in load_all() if "__16x16.json" not in "" ]
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    n_total = len(single)
+    dominant = {}
+    for r in single:
+        dominant[r["dominant"]] = dominant.get(r["dominant"], 0) + 1
+    lines = [f"# {len(rows)} dry-run artifacts, {n_total} single-pod baselines"]
+    lines.append("dominant_term," + ",".join(f"{k}:{v}" for k, v in sorted(dominant.items())))
+    worst = sorted(single, key=lambda r: r["useful_flops_ratio"])[:3]
+    for r in worst:
+        lines.append(
+            f"# worst useful-flops: {r['arch']} {r['shape']} ratio={r['useful_flops_ratio']:.2f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(main())

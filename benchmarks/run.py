@@ -1,0 +1,61 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark), where
+``derived`` is each benchmark's headline number, followed by the detailed
+per-figure output blocks.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import (
+    fig01_10_cost,
+    fig04_classification,
+    fig09_gpu_savings,
+    fig11_mps,
+    fig12_slow_improvement,
+    fig13_transition,
+    fig14_slo_satisfaction,
+    optimality_gap,
+    roofline_table,
+)
+
+BENCHES = [
+    ("fig01_10_cost", fig01_10_cost.main),
+    ("fig04_classification", fig04_classification.main),
+    ("fig09_gpu_savings", fig09_gpu_savings.main),
+    ("fig11_mps", fig11_mps.main),
+    ("fig12_slow_improvement", fig12_slow_improvement.main),
+    ("fig13_transition", fig13_transition.main),
+    ("fig14_slo_satisfaction", fig14_slo_satisfaction.main),
+    ("optimality_gap", optimality_gap.main),
+    ("roofline_table", roofline_table.main),
+]
+
+
+def _derived(report: str) -> str:
+    """Last '#' comment line = the benchmark's headline."""
+    heads = [l.strip("# ").strip() for l in report.splitlines() if l.startswith("#")]
+    return (heads[-1] if heads else "").replace(",", ";")
+
+
+def main() -> None:
+    rows = []
+    blocks = []
+    for name, fn in BENCHES:
+        t0 = time.monotonic()
+        report = fn()
+        us = (time.monotonic() - t0) * 1e6
+        rows.append(f"{name},{us:.0f},{_derived(report)}")
+        blocks.append(f"==== {name} ====\n{report}")
+    print("name,us_per_call,derived")
+    print("\n".join(rows))
+    print()
+    print("\n\n".join(blocks))
+
+
+if __name__ == "__main__":
+    main()

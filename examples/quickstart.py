@@ -1,0 +1,54 @@
+"""Quickstart: schedule DNN services onto reconfigurable accelerator slices.
+
+Runs the whole MIG-Serving pipeline in miniature on the literal A100 rules:
+profile → two-phase optimizer (greedy + GA/MCTS) → compare against static
+baselines and the lower bound.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    SLO,
+    SyntheticPaperProfiles,
+    TwoPhaseOptimizer,
+    Workload,
+    a100_rules,
+    baseline_homogeneous,
+    baseline_static_mix,
+    lower_bound_gpus,
+)
+
+
+def main() -> None:
+    rules = a100_rules()
+    prof = SyntheticPaperProfiles(n_models=12, seed=1)
+    rng = np.random.default_rng(0)
+    wl = Workload.make(
+        {m: SLO(float(rng.lognormal(8.0, 0.7)), 100.0) for m in prof.services()}
+    )
+
+    print("model classification (paper §2.2):")
+    for m in prof.services():
+        print(f"  {m:16s} {prof.classify(m, 100.0)}")
+
+    opt = TwoPhaseOptimizer(rules, prof, wl, ga_rounds=3, ga_population=4,
+                            mcts_iterations=60, seed=0)
+    rep = opt.run()
+
+    print("\nGPUs used:")
+    print(f"  A100-7/7 (no MIG)   : {baseline_homogeneous(rules, prof, wl, 7)}")
+    print(f"  A100-MIX (static)   : {baseline_static_mix(rules, prof, wl)}")
+    print(f"  greedy (fast algo)  : {rep.fast_deployment.num_gpus}  ({rep.fast_seconds:.2f}s)")
+    print(f"  MIG-Serving (2-phase): {rep.best_deployment.num_gpus}  ({rep.total_seconds:.2f}s)")
+    print(f"  lower bound         : {lower_bound_gpus(rules, prof, wl)}")
+    print(f"\nGA history (best per round): {rep.ga_history}")
+    ex = rep.best_deployment.configs[0]
+    print(f"\nexample GPU config: partition={ex.partition}")
+    for a in ex.assignments:
+        print(f"  {a.size}/7 instance -> {a.service or '(idle)'}  batch={a.batch}  {a.throughput:.0f} req/s")
+
+
+if __name__ == "__main__":
+    main()

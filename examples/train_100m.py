@@ -1,0 +1,23 @@
+"""Train the ~100M-parameter example config for a few steps on CPU.
+
+Thin wrapper over the real driver; the full run is
+``python -m repro.launch.train --repro-100m --steps 300``.
+
+  PYTHONPATH=src python examples/train_100m.py [steps]
+"""
+
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main() -> None:
+    steps = sys.argv[1] if len(sys.argv) > 1 else "5"
+    sys.argv = [
+        "train", "--repro-100m", "--steps", steps, "--batch", "4", "--seq", "64",
+    ]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

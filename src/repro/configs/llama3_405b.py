@@ -1,0 +1,30 @@
+"""llama3-405b [dense] — GQA, 128k vocab.  [arXiv:2407.21783]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    arch_type="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab_size=128256,
+    rope_theta=5e5,
+    citation="arXiv:2407.21783",
+)
+
+SMOKE = ModelConfig(
+    name="llama3-smoke",
+    arch_type="dense",
+    num_layers=2,
+    d_model=128,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=384,
+    vocab_size=512,
+    citation="arXiv:2407.21783 (reduced)",
+)

@@ -1,0 +1,56 @@
+"""MIG-Serving core: the Reconfigurable Machine Scheduling Problem in practice.
+
+Public surface of the paper's contribution:
+
+  * rule-sets:   :class:`repro.core.mig.A100Rules`,
+                 :class:`repro.core.tpu_slice.TpuSliceRules`
+  * profiles:    :class:`repro.core.profiles.SyntheticPaperProfiles`,
+                 :class:`repro.core.profiles.RooflineProfiles`
+  * optimizer:   :class:`repro.core.optimizer.TwoPhaseOptimizer`
+  * controller:  :class:`repro.core.controller.Controller`
+"""
+
+from repro.core.cluster import Action, SimulatedCluster, parallel_makespan
+from repro.core.controller import Controller, TransitionReport
+from repro.core.deployment import (
+    ConfigSpace,
+    Deployment,
+    GPUConfig,
+    InstanceAssignment,
+    OptimizerProcedure,
+    Workload,
+)
+from repro.core.ga import GeneticOptimizer, crossover, mutate_swap
+from repro.core.greedy import GreedyFast
+from repro.core.lower_bound import (
+    baseline_homogeneous,
+    baseline_static_mix,
+    lower_bound_gpus,
+)
+from repro.core.mcts import MCTSSlow
+from repro.core.exact import PairSpaceExact, per_service_lower_bound
+from repro.core.mig import A100Rules, a100_rules
+from repro.core.online_profiles import MeasuredProfile
+from repro.core.optimizer import BeamGreedy, OptimizeReport, TwoPhaseOptimizer
+from repro.core.profiles import (
+    ArchPerfSpec,
+    PerfProfile,
+    RooflineProfiles,
+    SyntheticPaperProfiles,
+    TpuChip,
+)
+from repro.core.rms import SLO, Instance, ReconfigRules, Service
+from repro.core.tpu_slice import TpuSliceRules, tpu_slice_rules
+
+__all__ = [
+    "A100Rules", "a100_rules", "Action", "ArchPerfSpec", "BeamGreedy",
+    "ConfigSpace", "Controller", "Deployment", "GeneticOptimizer", "GPUConfig",
+    "GreedyFast", "Instance", "InstanceAssignment", "MCTSSlow",
+    "OptimizeReport", "OptimizerProcedure", "parallel_makespan", "PerfProfile",
+    "ReconfigRules", "RooflineProfiles", "Service", "SimulatedCluster", "SLO",
+    "SyntheticPaperProfiles", "TpuChip", "TpuSliceRules", "tpu_slice_rules",
+    "TransitionReport", "TwoPhaseOptimizer", "Workload",
+    "baseline_homogeneous", "baseline_static_mix", "crossover",
+    "lower_bound_gpus", "mutate_swap", "MeasuredProfile",
+    "PairSpaceExact", "per_service_lower_bound",
+]

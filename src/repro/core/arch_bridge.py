@@ -1,0 +1,42 @@
+"""Bridge: assigned architectures → scheduler performance profiles.
+
+This is the beyond-paper closed loop (DESIGN.md §7.1): the same architecture
+configs the dry-run compiles are turned into :class:`ArchPerfSpec`s, so
+:class:`RooflineProfiles` can hand the MIG-Serving optimizer analytically-
+derived (throughput, latency) numbers per (arch × TPU slice size).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.profiles import ArchPerfSpec, RooflineProfiles
+
+
+def arch_perf_specs(
+    arch_ids: Optional[Sequence[str]] = None, context: int = 4096
+) -> List[ArchPerfSpec]:
+    out = []
+    for aid in arch_ids or ARCH_IDS:
+        cfg = get_config(aid)
+        out.append(
+            ArchPerfSpec(
+                name=aid,
+                params=cfg.param_count(),
+                active_params=cfg.active_param_count(),
+                kv_bytes_per_token=cfg.kv_bytes_per_token(),
+                context=context,
+            )
+        )
+    return out
+
+
+def tpu_arch_profiles(
+    arch_ids: Optional[Sequence[str]] = None,
+    context: int = 4096,
+    sizes: Sequence[int] = (16, 32, 64, 128, 256),
+) -> RooflineProfiles:
+    """Default slice sizes are pod-granularity (PodSliceRules) — the only
+    granularity on which every assigned arch fits (DESIGN.md §4)."""
+    return RooflineProfiles(arch_perf_specs(arch_ids, context), sizes=sizes)

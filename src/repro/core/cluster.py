@@ -1,0 +1,182 @@
+"""Simulated GPU/TPU cluster and the controller's action vocabulary (§4, §6).
+
+The controller's four action types — instance creation, deletion, migration
+(local/remote), and device repartition — are implemented against an
+in-memory cluster state with the paper's measured action latencies
+(Figure 13c).  On the real system these would be k8s operations (§7); here
+the actuation layer is simulated (DESIGN.md §8) while the planning algorithm
+is implemented exactly.
+
+The cluster records a **throughput trace**: after every applied action, the
+per-service aggregate throughput.  The controller's transparency guarantee —
+during a transition every service's throughput stays ≥ min(old, new)
+required throughput (§1, §6) — is asserted from this trace by the tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.rms import Partition, ReconfigRules
+
+# Action latencies in seconds, read off the paper's Figure 13c.
+ACTION_SECONDS = {
+    "create": 62.0,
+    "delete": 2.0,
+    "repartition": 1.0,
+    "migrate_local": 64.0,
+    "migrate_remote": 70.0,
+}
+
+GPUS_PER_MACHINE = 8  # the paper's testbed machines hold 8 A100s each
+
+
+@dataclasses.dataclass
+class InstanceRec:
+    uid: int
+    size: int
+    service: Optional[str]
+    throughput: float = 0.0
+
+
+@dataclasses.dataclass
+class GPUState:
+    gpu_id: int
+    instances: Dict[int, InstanceRec] = dataclasses.field(default_factory=dict)
+
+    @property
+    def machine(self) -> int:
+        return self.gpu_id // GPUS_PER_MACHINE
+
+    def partition(self) -> Partition:
+        return tuple(sorted(r.size for r in self.instances.values()))
+
+    def busy(self) -> bool:
+        return any(r.service for r in self.instances.values())
+
+
+# -- actions -------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: str  # create | delete | repartition | migrate
+    gpu: int
+    size: int = 0
+    service: Optional[str] = None
+    throughput: float = 0.0
+    uid: int = -1
+    dst_gpu: int = -1  # migrate only
+    add_sizes: Tuple[int, ...] = ()  # repartition only
+    remove_uids: Tuple[int, ...] = ()  # repartition only
+
+    def seconds(self) -> float:
+        if self.kind == "migrate":
+            local = (
+                self.gpu // GPUS_PER_MACHINE == self.dst_gpu // GPUS_PER_MACHINE
+            )
+            return ACTION_SECONDS["migrate_local" if local else "migrate_remote"]
+        return ACTION_SECONDS[self.kind]
+
+    def gpus_touched(self) -> Tuple[int, ...]:
+        return (self.gpu, self.dst_gpu) if self.kind == "migrate" else (self.gpu,)
+
+
+class SimulatedCluster:
+    """In-memory cluster with legality enforcement and a throughput trace."""
+
+    def __init__(self, rules: ReconfigRules, n_gpus: int):
+        self.rules = rules
+        self.gpus: Dict[int, GPUState] = {i: GPUState(i) for i in range(n_gpus)}
+        self._uid = itertools.count()
+        self.trace: List[Tuple[float, Dict[str, float]]] = []
+        self.clock = 0.0
+        self.actions_applied: List[Action] = []
+
+    # -- queries ----------------------------------------------------------------
+    def throughput(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for g in self.gpus.values():
+            for r in g.instances.values():
+                if r.service:
+                    out[r.service] = out.get(r.service, 0.0) + r.throughput
+        return out
+
+    def find_room(self, size: int, prefer: Sequence[int] = ()) -> Optional[int]:
+        """A GPU that can legally add a ``size`` instance right now."""
+        order = list(prefer) + [g for g in self.gpus if g not in prefer]
+        for gid in order:
+            cand = tuple(sorted(self.gpus[gid].partition() + (size,)))
+            if self.rules.is_legal_partition(cand):
+                return gid
+        return None
+
+    def grow(self, n: int = 1) -> List[int]:
+        new_ids = []
+        base = max(self.gpus) + 1 if self.gpus else 0
+        for i in range(n):
+            self.gpus[base + i] = GPUState(base + i)
+            new_ids.append(base + i)
+        return new_ids
+
+    def gpus_in_use(self) -> int:
+        return sum(1 for g in self.gpus.values() if g.busy())
+
+    # -- mutation ----------------------------------------------------------------
+    def apply(self, a: Action) -> int:
+        """Apply one action; returns the uid of a created instance (or -1)."""
+        created = -1
+        if a.kind == "create":
+            g = self.gpus[a.gpu]
+            new_part = tuple(sorted(g.partition() + (a.size,)))
+            if not self.rules.is_legal_partition(new_part):
+                raise ValueError(f"illegal create {a.size} on gpu{a.gpu} {g.partition()}")
+            created = next(self._uid)
+            g.instances[created] = InstanceRec(created, a.size, a.service, a.throughput)
+        elif a.kind == "delete":
+            g = self.gpus[a.gpu]
+            g.instances.pop(a.uid)
+        elif a.kind == "migrate":
+            g = self.gpus[a.gpu]
+            rec = g.instances.pop(a.uid)
+            dst = self.gpus[a.dst_gpu]
+            new_part = tuple(sorted(dst.partition() + (rec.size,)))
+            if not self.rules.is_legal_partition(new_part):
+                raise ValueError(f"illegal migrate to gpu{a.dst_gpu}")
+            created = next(self._uid)
+            dst.instances[created] = dataclasses.replace(rec, uid=created)
+        elif a.kind == "repartition":
+            g = self.gpus[a.gpu]
+            for uid in a.remove_uids:
+                rec = g.instances[uid]
+                if rec.service is not None:
+                    raise ValueError("repartition may only touch idle instances")
+                g.instances.pop(uid)
+            for s in a.add_sizes:
+                uid = next(self._uid)
+                g.instances[uid] = InstanceRec(uid, s, None)
+            if not self.rules.is_legal_partition(g.partition()):
+                raise ValueError(f"illegal repartition on gpu{a.gpu}: {g.partition()}")
+        else:
+            raise ValueError(a.kind)
+        self.clock += a.seconds()
+        self.actions_applied.append(a)
+        self.trace.append((self.clock, self.throughput()))
+        return created
+
+
+def parallel_makespan(actions: Sequence[Action]) -> float:
+    """Dependency-aware makespan: actions conflict iff they touch a common
+    GPU (§6 "actions can run in parallel if the affected GPUs are separate");
+    order among conflicting actions follows the plan order (list scheduling)."""
+    ready: Dict[int, float] = {}
+    makespan = 0.0
+    for a in actions:
+        start = max((ready.get(g, 0.0) for g in a.gpus_touched()), default=0.0)
+        end = start + a.seconds()
+        for g in a.gpus_touched():
+            ready[g] = end
+        makespan = max(makespan, end)
+    return makespan

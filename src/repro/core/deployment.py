@@ -1,0 +1,271 @@
+"""Deployments, GPU configurations, utilities and completion rates (§5.1).
+
+Vocabulary (paper §5.1):
+
+  * **workload** — services with SLOs (required throughput + latency bound).
+  * **GPU configuration** — one device's partition plus a service assignment
+    (and batch size) per instance.
+  * **utility** of a config — vector over services: fraction of each service's
+    required throughput this one device contributes.
+  * **completion rates** — vector over services: fraction of required
+    throughput currently met (capped at 1 for scoring).
+  * **deployment** — a list of GPU configurations; valid iff completion
+    rates are all ≥ 1.
+
+An *optimizer procedure* (§5.1) maps (profiles, workload, completion rates)
+→ a list of GPU configs whose summed utility covers the remaining need.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiles import PerfProfile
+from repro.core.rms import Partition, ReconfigRules, Service, SLO
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    services: Tuple[Service, ...]
+
+    @staticmethod
+    def make(slos: Dict[str, SLO]) -> "Workload":
+        return Workload(
+            tuple(
+                Service(name=n, slo=s, index=i) for i, (n, s) in enumerate(slos.items())
+            )
+        )
+
+    @property
+    def names(self) -> List[str]:
+        return [s.name for s in self.services]
+
+    @property
+    def n(self) -> int:
+        return len(self.services)
+
+    def required(self) -> np.ndarray:
+        return np.array([s.slo.throughput for s in self.services], dtype=np.float64)
+
+    def index(self, name: str) -> int:
+        for s in self.services:
+            if s.name == name:
+                return s.index
+        raise KeyError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceAssignment:
+    """One instance inside a GPU config: ``service is None`` means idle."""
+
+    size: int
+    service: Optional[str]
+    batch: int = 0
+    throughput: float = 0.0  # req/s this instance sustains for its service
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUConfig:
+    """A device partition plus per-instance service assignments."""
+
+    partition: Partition
+    assignments: Tuple[InstanceAssignment, ...]
+
+    def __post_init__(self):
+        assert tuple(sorted(a.size for a in self.assignments)) == tuple(
+            sorted(self.partition)
+        ), "assignments must cover the partition"
+
+    def services_used(self) -> Tuple[str, ...]:
+        return tuple(sorted({a.service for a in self.assignments if a.service}))
+
+    def utility(self, workload: Workload) -> np.ndarray:
+        """Fraction of each service's SLO throughput this device contributes."""
+        u = np.zeros(workload.n)
+        req = workload.required()
+        for a in self.assignments:
+            if a.service is not None:
+                i = workload.index(a.service)
+                u[i] += a.throughput / req[i]
+        return u
+
+    def canonical(self) -> Tuple:
+        """Hashable form that ignores instance ordering (instances of equal
+        size are interchangeable — the mutation insight, §5.2)."""
+        return tuple(
+            sorted((a.size, a.service or "", a.batch) for a in self.assignments)
+        )
+
+
+@dataclasses.dataclass
+class Deployment:
+    configs: List[GPUConfig]
+
+    @property
+    def num_gpus(self) -> int:
+        return len(self.configs)
+
+    def utility(self, workload: Workload) -> np.ndarray:
+        u = np.zeros(workload.n)
+        for c in self.configs:
+            u += c.utility(workload)
+        return u
+
+    def completion_rates(self, workload: Workload) -> np.ndarray:
+        return self.utility(workload)
+
+    def is_valid(self, workload: Workload, atol: float = 1e-9) -> bool:
+        return bool(np.all(self.completion_rates(workload) >= 1.0 - atol))
+
+    def copy(self) -> "Deployment":
+        return Deployment(list(self.configs))
+
+
+def make_assignment(
+    profile: PerfProfile, workload: Workload, size: int, service: Optional[str]
+) -> InstanceAssignment:
+    """Assign ``service`` to a ``size`` instance at the paper's batching rule:
+    largest batch whose latency meets the SLO."""
+    if service is None:
+        return InstanceAssignment(size, None)
+    slo = workload.services[workload.index(service)].slo
+    b = profile.best_batch(service, size, slo.latency_ms)
+    if b == 0:
+        return InstanceAssignment(size, None)  # infeasible: leave idle
+    tput = profile.throughput(service, size, slo.latency_ms)
+    return InstanceAssignment(size, service, b, tput)
+
+
+# ---------------------------------------------------------------------------
+# Config-space enumeration (§5.1: "the utility space is enormous")
+# ---------------------------------------------------------------------------
+
+
+class ConfigSpace:
+    """All GPU configs mixing at most two services (Fig. 15 line 2), scored
+    vectorially.
+
+    For each full partition we group equal-sized instances; for a service
+    pair (a, b) each size-group of multiplicity m admits m+1 splits.  Configs
+    are deduplicated by canonical form.  The utility of each config touches
+    ≤ 2 services, so scoring is two sparse gathers (see ``score_all``).
+    """
+
+    def __init__(
+        self,
+        rules: ReconfigRules,
+        profile: PerfProfile,
+        workload: Workload,
+    ):
+        self.rules = rules
+        self.profile = profile
+        self.workload = workload
+        self._tput: Dict[Tuple[str, int], float] = {}
+        for svc in workload.services:
+            for size in rules.instance_sizes:
+                self._tput[(svc.name, size)] = profile.throughput(
+                    svc.name, size, svc.slo.latency_ms
+                )
+        self.configs: List[GPUConfig] = []
+        self._ia: List[int] = []  # service index a
+        self._ib: List[int] = []  # service index b (may equal a)
+        self._ua: List[float] = []  # utility toward a
+        self._ub: List[float] = []  # utility toward b
+        self._build()
+        self.ia = np.array(self._ia, dtype=np.int64)
+        self.ib = np.array(self._ib, dtype=np.int64)
+        self.ua = np.array(self._ua, dtype=np.float64)
+        self.ub = np.array(self._ub, dtype=np.float64)
+
+    # -- enumeration -----------------------------------------------------------
+    def _config_for_split(
+        self, partition: Partition, groups: List[Tuple[int, int]], pick: Tuple[int, ...], a: str, b: str
+    ) -> Optional[GPUConfig]:
+        assigns: List[InstanceAssignment] = []
+        for (size, mult), ja in zip(groups, pick):
+            for _ in range(ja):
+                assigns.append(make_assignment(self.profile, self.workload, size, a))
+            for _ in range(mult - ja):
+                assigns.append(make_assignment(self.profile, self.workload, size, b))
+        cfg = GPUConfig(partition, tuple(assigns))
+        if all(x.service is None for x in cfg.assignments):
+            return None
+        return cfg
+
+    def _build(self) -> None:
+        req = self.workload.required()
+        names = self.workload.names
+        seen = set()
+        partitions = self.rules.full_partitions()
+        pairs = list(itertools.combinations(range(len(names)), 2)) + [
+            (i, i) for i in range(len(names))
+        ]
+        for partition in partitions:
+            groups = [
+                (size, sum(1 for s in partition if s == size))
+                for size in sorted(set(partition))
+            ]
+            ranges = [range(m + 1) for _, m in groups]
+            for (i, j) in pairs:
+                a, b = names[i], names[j]
+                for pick in itertools.product(*ranges):
+                    if i == j and any(p != groups[k][1] for k, p in enumerate(pick)):
+                        continue  # single-service: only the all-a split
+                    cfg = self._config_for_split(partition, groups, pick, a, b)
+                    if cfg is None:
+                        continue
+                    key = cfg.canonical()
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    ta = sum(
+                        x.throughput for x in cfg.assignments if x.service == a
+                    )
+                    tb = sum(
+                        x.throughput for x in cfg.assignments if x.service == b
+                    )
+                    self.configs.append(cfg)
+                    self._ia.append(i)
+                    self._ib.append(j)
+                    self._ua.append(ta / req[i])
+                    self._ub.append(tb / req[j] if j != i else 0.0)
+
+    # -- scoring (§5.3) ----------------------------------------------------------
+    def score_all(self, completion: np.ndarray) -> np.ndarray:
+        """score(config) = Σ_i (1 − c_i)·u_i with c clamped to [0,1]."""
+        need = np.clip(1.0 - completion, 0.0, None)
+        return need[self.ia] * self.ua + need[self.ib] * self.ub
+
+    def utility_of(self, idx: int) -> np.ndarray:
+        u = np.zeros(self.workload.n)
+        u[self.ia[idx]] += self.ua[idx]
+        u[self.ib[idx]] += self.ub[idx]
+        return u
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+
+class OptimizerProcedure(abc.ABC):
+    """§5.1: given completion rates, emit configs covering the residual need.
+
+    Implementations: the fast greedy (Appendix A.1), the MCTS slow algorithm
+    (Appendix A.2), and the beyond-paper beam-greedy.  MIG-Serving "is
+    designed to be able to switch algorithms easily" (§7) — this ABC is that
+    switch point.
+    """
+
+    def __init__(self, space: ConfigSpace):
+        self.space = space
+
+    @abc.abstractmethod
+    def produce(self, completion: np.ndarray) -> List[GPUConfig]:
+        ...
+
+    def solve(self) -> Deployment:
+        return Deployment(self.produce(np.zeros(self.space.workload.n)))

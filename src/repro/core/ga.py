@@ -1,0 +1,161 @@
+"""The tailored Genetic Algorithm gluing fast and slow algorithms (§5.2).
+
+Chromosome = deployment; gene = GPU config.
+
+  * **Crossover** (paper §5.2): randomly erase some GPU configs — completion
+    drops below 100% — then run the *slow algorithm* against the residual to
+    refill.  This mixes fast- and slow-algorithm genes and keeps the slow
+    algorithm's problem size small.
+  * **Mutation**: swap services between equal-sized instances running
+    different services (inference has no affinity, §5.2).  Mutations do not
+    change completion rates — they diversify the service mixes crossover can
+    later split.
+
+GA keeps the originals in each round's selection (elitism), so the best
+deployment only improves; it stops on timeout/rounds or when the best stopped
+improving for ``patience`` rounds (paper: ten).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.deployment import (
+    ConfigSpace,
+    Deployment,
+    GPUConfig,
+    InstanceAssignment,
+    OptimizerProcedure,
+)
+
+
+def _fitness(dep: Deployment, space: ConfigSpace) -> Tuple[int, float]:
+    """Primary: fewer devices.  Secondary: less over-provisioned throughput
+    (slack), so equal-GPU deployments with tighter packing rank better."""
+    c = dep.completion_rates(space.workload)
+    return (dep.num_gpus, float(np.sum(np.clip(c - 1.0, 0.0, None))))
+
+
+def mutate_swap(dep: Deployment, rng: np.random.Generator, swaps: int = 4) -> Deployment:
+    """Swap services between same-size instances of different configs."""
+    configs = [list(c.assignments) for c in dep.configs]
+    flat = [
+        (gi, ii)
+        for gi, assigns in enumerate(configs)
+        for ii, a in enumerate(assigns)
+        if a.service is not None
+    ]
+    for _ in range(swaps):
+        if len(flat) < 2:
+            break
+        i1 = rng.integers(len(flat))
+        g1, a1 = flat[i1]
+        s1 = configs[g1][a1]
+        cands = [
+            (g, a)
+            for (g, a) in flat
+            if configs[g][a].size == s1.size
+            and configs[g][a].service != s1.service
+            and (g, a) != (g1, a1)
+        ]
+        if not cands:
+            continue
+        g2, a2 = cands[rng.integers(len(cands))]
+        s2 = configs[g2][a2]
+        configs[g1][a1], configs[g2][a2] = (
+            InstanceAssignment(s1.size, s2.service, s2.batch, s2.throughput),
+            InstanceAssignment(s2.size, s1.service, s1.batch, s1.throughput),
+        )
+    return Deployment(
+        [
+            GPUConfig(dep.configs[gi].partition, tuple(assigns))
+            for gi, assigns in enumerate(configs)
+        ]
+    )
+
+
+def crossover(
+    dep: Deployment,
+    space: ConfigSpace,
+    slow: OptimizerProcedure,
+    rng: np.random.Generator,
+    erase_frac: float = 0.25,
+) -> Deployment:
+    """Erase a random subset of configs and refill with the slow algorithm."""
+    n = dep.num_gpus
+    k = max(1, int(round(erase_frac * n)))
+    erase = set(rng.choice(n, size=min(k, n), replace=False).tolist())
+    kept = [c for i, c in enumerate(dep.configs) if i not in erase]
+    c = np.zeros(space.workload.n)
+    for cfg in kept:
+        c += cfg.utility(space.workload)
+    refill = slow.produce(c)
+    return Deployment(kept + refill)
+
+
+@dataclasses.dataclass
+class GAResult:
+    best: Deployment
+    history: List[int]  # best num_gpus per round (round 0 = seed)
+
+
+class GeneticOptimizer:
+    """§5.2 two-phase glue: population of deployments evolved by
+    crossover(slow-algorithm refill) + mutation(swap)."""
+
+    def __init__(
+        self,
+        space: ConfigSpace,
+        slow: OptimizerProcedure,
+        population: int = 6,
+        rounds: int = 10,
+        patience: int = 10,
+        erase_frac: float = 0.25,
+        seed: int = 0,
+        time_budget_s: Optional[float] = None,
+    ):
+        self.space = space
+        self.slow = slow
+        self.population = population
+        self.rounds = rounds
+        self.patience = patience
+        self.erase_frac = erase_frac
+        self.rng = np.random.default_rng(seed)
+        self.time_budget_s = time_budget_s
+
+    def run(self, seed_deployment: Deployment) -> GAResult:
+        space = self.space
+        pop: List[Deployment] = [seed_deployment]
+        # diversify the initial population with mutated copies
+        while len(pop) < self.population:
+            pop.append(mutate_swap(seed_deployment, self.rng))
+        history = [min(p.num_gpus for p in pop)]
+        best = min(pop, key=lambda d: _fitness(d, space))
+        stale = 0
+        t0 = time.monotonic()
+        for _ in range(self.rounds):
+            if self.time_budget_s and time.monotonic() - t0 > self.time_budget_s:
+                break
+            children: List[Deployment] = []
+            for parent in pop:
+                child = crossover(parent, space, self.slow, self.rng, self.erase_frac)
+                children.append(mutate_swap(child, self.rng))
+            # elitism: originals compete with children (§5.2)
+            merged = pop + children
+            merged.sort(key=lambda d: _fitness(d, space))
+            pop = merged[: self.population]
+            new_best = pop[0]
+            if _fitness(new_best, space) < _fitness(best, space):
+                best = new_best
+                stale = 0
+            else:
+                stale += 1
+            history.append(best.num_gpus)
+            if stale >= self.patience:
+                break
+        assert best.is_valid(space.workload)
+        return GAResult(best=best, history=history)

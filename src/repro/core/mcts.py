@@ -1,0 +1,217 @@
+"""The slow algorithm: customized Monte Carlo Tree Search (§5.3, Appendix A.2).
+
+Tree shape (Figure 7): nodes are completion-rate vectors, edges are GPU
+configs, leaves are all-≥100% nodes; the objective is the *shortest* path
+(fewest devices).  Vanilla MCTS fails here for the paper's two reasons,
+addressed exactly as the paper does:
+
+  1. **Child explosion** — each expansion samples 5 not-fully-satisfied
+     services, scores only configs touching them, and keeps the top-K
+     (K=10) as edges.
+  2. **Slow/inaccurate rollout** — the classic random playout estimates a
+     *random* path, not the shortest.  We use the paper's memoized
+     randomized estimation: a pool of "good candidate" configs is
+     pre-computed per *type* of completion rates (the frozenset of unmet
+     services, needs bucketed); a rollout repeatedly applies a random
+     pool member and the step count is memoized by the bucketed signature.
+
+Selection is UCT adapted to minimization (lower estimated total depth is
+better).  Every completed rollout yields a concrete deployment suffix, so the
+search is *anytime*: we track the best full config-sequence seen.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.deployment import ConfigSpace, GPUConfig, OptimizerProcedure
+
+
+def _bucket_signature(completion: np.ndarray, buckets: int = 8) -> Tuple:
+    """The paper's "type of completion rates": unmet services with their
+    residual need quantized to ``buckets`` levels."""
+    need = np.clip(1.0 - completion, 0.0, None)
+    # ceil so that any strictly-positive residual lands in bucket >= 1:
+    # met and nearly-met services must not share a signature, or cached
+    # pools go stale and rollouts stall.
+    q = np.minimum(np.ceil(need * buckets).astype(np.int64), buckets)
+    return tuple(int(x) for x in q)
+
+
+@dataclasses.dataclass
+class _Node:
+    completion: np.ndarray
+    depth: int
+    children: Dict[int, "_Node"] = dataclasses.field(default_factory=dict)
+    edges: Optional[List[int]] = None  # config indices (top-K cut)
+    visits: int = 0
+    total: float = 0.0  # sum of estimated total path lengths
+
+    def q(self) -> float:
+        return self.total / self.visits if self.visits else math.inf
+
+    def done(self) -> bool:
+        return bool(np.all(self.completion >= 1.0 - 1e-9))
+
+
+class MCTSSlow(OptimizerProcedure):
+    def __init__(
+        self,
+        space: ConfigSpace,
+        iterations: int = 300,
+        top_k: int = 10,
+        sample_services: int = 5,
+        ucb_c: float = 0.8,
+        pool_size: int = 12,
+        seed: int = 0,
+    ):
+        super().__init__(space)
+        self.iterations = iterations
+        self.top_k = top_k
+        self.sample_services = sample_services
+        self.ucb_c = ucb_c
+        self.pool_size = pool_size
+        self.rng = np.random.default_rng(seed)
+        self._pool_cache: Dict[Tuple, List[int]] = {}
+        self._rollout_memo: Dict[Tuple, Tuple[float, List[int]]] = {}
+
+    # -- edge generation: the paper's top-K child cut ---------------------------
+    def _edges(self, completion: np.ndarray) -> List[int]:
+        space = self.space
+        unmet = np.where(completion < 1.0 - 1e-9)[0]
+        if len(unmet) == 0:
+            return []
+        k = min(self.sample_services, len(unmet))
+        picked = set(self.rng.choice(unmet, size=k, replace=False).tolist())
+        mask = np.array(
+            [int(ia) in picked or int(ib) in picked for ia, ib in zip(space.ia, space.ib)]
+        )
+        scores = space.score_all(completion)
+        scores = np.where(mask, scores, -1.0)
+        order = np.argsort(-scores)[: self.top_k]
+        return [int(i) for i in order if scores[i] > 0.0]
+
+    # -- memoized randomized estimation (Appendix A.2) ---------------------------
+    def _pool(self, completion: np.ndarray) -> List[int]:
+        sig = _bucket_signature(completion)
+        pool = self._pool_cache.get(sig)
+        if pool is None:
+            scores = self.space.score_all(completion)
+            order = np.argsort(-scores)[: self.pool_size]
+            pool = [int(i) for i in order if scores[i] > 0.0]
+            self._pool_cache[sig] = pool
+        return pool
+
+    def _rollout(self, completion: np.ndarray) -> Tuple[float, List[int]]:
+        """Estimated #devices to finish from here, plus the config sequence."""
+        sig = _bucket_signature(completion)
+        memo = self._rollout_memo.get(sig)
+        if memo is not None:
+            return memo
+        c = completion.copy()
+        path: List[int] = []
+        steps = 0.0
+        while np.any(c < 1.0 - 1e-9):
+            pool = self._pool(c)
+            if not pool:
+                # residual unsatisfiable via pooled configs: bail with +inf
+                self._rollout_memo[sig] = (math.inf, [])
+                return math.inf, []
+            idx = int(self.rng.choice(pool))
+            c = c + self.space.utility_of(idx)
+            path.append(idx)
+            steps += 1.0
+            if steps > 10_000:
+                return math.inf, []
+        self._rollout_memo[sig] = (steps, path)
+        return steps, path
+
+    # -- UCT for minimization -----------------------------------------------------
+    def _select_child(self, node: _Node) -> Tuple[int, _Node]:
+        assert node.edges
+        best, best_val = None, math.inf
+        for e in node.edges:
+            child = node.children.get(e)
+            if child is None or child.visits == 0:
+                return e, child if child else self._make_child(node, e)
+            explore = self.ucb_c * math.sqrt(math.log(node.visits) / child.visits)
+            q = child.q()
+            val = (q if math.isfinite(q) else 1e18) - explore
+            if val < best_val:
+                best_val, best = val, (e, child)
+        return best
+
+    def _make_child(self, node: _Node, edge: int) -> _Node:
+        child = _Node(
+            completion=node.completion + self.space.utility_of(edge),
+            depth=node.depth + 1,
+        )
+        node.children[edge] = child
+        return child
+
+    # -- main loop ------------------------------------------------------------------
+    def produce(self, completion: np.ndarray) -> List[GPUConfig]:
+        space = self.space
+        root = _Node(completion=completion.astype(np.float64).copy(), depth=0)
+        best_len = math.inf
+        best_path: List[int] = []
+
+        for _ in range(self.iterations):
+            node = root
+            path: List[int] = []
+            # selection / expansion
+            while not node.done():
+                if node.edges is None:
+                    node.edges = self._edges(node.completion)
+                if not node.edges:
+                    break
+                unvisited = [e for e in node.edges if e not in node.children]
+                if unvisited:
+                    e = int(self.rng.choice(unvisited))
+                    node = self._make_child(node, e)
+                    path.append(e)
+                    break
+                e, node = self._select_child(node)
+                path.append(e)
+            # estimation
+            est, suffix = self._rollout(node.completion)
+            total = node.depth - root.depth + est
+            if total < best_len and math.isfinite(total):
+                best_len = total
+                best_path = path + suffix
+            # backpropagation
+            back = root
+            back.visits += 1
+            back.total += total
+            for e in path:
+                back = back.children[e]
+                back.visits += 1
+                back.total += total
+
+        if not best_path and not root.done():
+            raise RuntimeError("MCTS found no completing path")
+        # Repair: memoized rollouts are keyed by *bucketed* signatures, so a
+        # reused suffix may undershoot the exact residual.  Greedily top up.
+        c = completion.astype(np.float64).copy()
+        out: List[int] = []
+        for i in best_path:
+            if not np.any(c < 1.0 - 1e-9):
+                break  # drop superfluous tail configs
+            c = c + space.utility_of(i)
+            out.append(i)
+        guard = 0
+        while np.any(c < 1.0 - 1e-9):
+            guard += 1
+            if guard > 10_000:
+                raise RuntimeError("MCTS repair failed to converge")
+            scores = space.score_all(c)
+            idx = int(np.argmax(scores))
+            if scores[idx] <= 0.0:
+                raise RuntimeError("MCTS repair: residual unsatisfiable")
+            c = c + space.utility_of(idx)
+            out.append(idx)
+        return [space.configs[i] for i in out]

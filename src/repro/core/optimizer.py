@@ -1,0 +1,140 @@
+"""The two-phase optimizer pipeline (§5.2, Figure 6) and algorithm registry.
+
+Phase 1 runs the *fast algorithm* (greedy) to get a valid deployment quickly;
+phase 2 runs the tailored GA whose crossover refills with the *slow
+algorithm* (MCTS).  Both template algorithms are ``OptimizerProcedure``
+subclasses and can be swapped (§7: "MIG-SERVING is designed to be able to
+switch algorithms easily") — the registry also exposes the beyond-paper
+``beam`` fast algorithm (DESIGN.md §7.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.deployment import (
+    ConfigSpace,
+    Deployment,
+    GPUConfig,
+    OptimizerProcedure,
+)
+from repro.core.ga import GAResult, GeneticOptimizer
+from repro.core.greedy import GreedyFast
+from repro.core.mcts import MCTSSlow
+from repro.core.profiles import PerfProfile
+from repro.core.rms import ReconfigRules
+from repro.core.deployment import Workload
+
+
+class BeamGreedy(OptimizerProcedure):
+    """Beyond-paper fast algorithm: beam search of width B over the same
+    heuristic score.  B=1 degenerates to the paper's greedy; B>1 keeps the
+    B best partial deployments per round and returns the shortest finisher."""
+
+    def __init__(self, space: ConfigSpace, beam: int = 4, branch: int = 4):
+        super().__init__(space)
+        self.beam = beam
+        self.branch = branch
+
+    def produce(self, completion: np.ndarray) -> List[GPUConfig]:
+        space = self.space
+        # state: (neg potential, completion, config-idx list)
+        beams = [(completion.astype(np.float64).copy(), [])]
+        done: Optional[List[int]] = None
+        for _ in range(100_000):
+            nxt = []
+            for c, path in beams:
+                if not np.any(c < 1.0 - 1e-9):
+                    if done is None or len(path) < len(done):
+                        done = path
+                    continue
+                if done is not None and len(path) + 1 >= len(done):
+                    continue  # cannot beat the incumbent
+                scores = space.score_all(c)
+                order = np.argsort(-scores)[: self.branch]
+                for idx in order:
+                    if scores[idx] <= 0.0:
+                        continue
+                    nxt.append((c + space.utility_of(int(idx)), path + [int(idx)]))
+            if not nxt:
+                break
+            # keep the B states with the least residual need
+            nxt.sort(key=lambda s: float(np.sum(np.clip(1.0 - s[0], 0.0, None))))
+            beams = nxt[: self.beam]
+        if done is None:
+            # all beams pruned (incumbent-bound) before finishing — fall back
+            return GreedyFast(space).produce(completion)
+        return [space.configs[i] for i in done]
+
+
+FAST_ALGORITHMS: Dict[str, Callable[[ConfigSpace], OptimizerProcedure]] = {
+    "greedy": lambda s: GreedyFast(s),
+    "beam": lambda s: BeamGreedy(s),
+}
+
+SLOW_ALGORITHMS: Dict[str, Callable[[ConfigSpace], OptimizerProcedure]] = {
+    "mcts": lambda s: MCTSSlow(s),
+    "greedy": lambda s: GreedyFast(s),
+}
+
+
+@dataclasses.dataclass
+class OptimizeReport:
+    fast_deployment: Deployment
+    best_deployment: Deployment
+    ga_history: List[int]
+    fast_seconds: float
+    total_seconds: float
+
+
+class TwoPhaseOptimizer:
+    def __init__(
+        self,
+        rules: ReconfigRules,
+        profile: PerfProfile,
+        workload: Workload,
+        fast: str = "greedy",
+        slow: str = "mcts",
+        ga_rounds: int = 10,
+        ga_population: int = 6,
+        mcts_iterations: int = 200,
+        seed: int = 0,
+        time_budget_s: Optional[float] = None,
+    ):
+        self.space = ConfigSpace(rules, profile, workload)
+        self.fast = FAST_ALGORITHMS[fast](self.space)
+        if slow == "mcts":
+            self.slow: OptimizerProcedure = MCTSSlow(
+                self.space, iterations=mcts_iterations, seed=seed
+            )
+        else:
+            self.slow = SLOW_ALGORITHMS[slow](self.space)
+        self.ga = GeneticOptimizer(
+            self.space,
+            self.slow,
+            population=ga_population,
+            rounds=ga_rounds,
+            seed=seed,
+            time_budget_s=time_budget_s,
+        )
+
+    def run(self, skip_phase2: bool = False) -> OptimizeReport:
+        t0 = time.monotonic()
+        fast_dep = self.fast.solve()
+        t1 = time.monotonic()
+        assert fast_dep.is_valid(self.space.workload)
+        if skip_phase2:
+            return OptimizeReport(fast_dep, fast_dep, [fast_dep.num_gpus], t1 - t0, t1 - t0)
+        result: GAResult = self.ga.run(fast_dep)
+        t2 = time.monotonic()
+        return OptimizeReport(
+            fast_deployment=fast_dep,
+            best_deployment=result.best,
+            ga_history=result.history,
+            fast_seconds=t1 - t0,
+            total_seconds=t2 - t0,
+        )

@@ -1,0 +1,239 @@
+"""Performance profiles: throughput/latency of a service on each instance size.
+
+The optimizer (§5) consumes only a profile: for service *m* on an instance of
+size *s*, what throughput can it sustain with per-request latency below the
+SLO?  The paper measured 49 hub models on A100 instances (§2.2, Appendix B);
+this module provides two profile sources:
+
+  * :class:`SyntheticPaperProfiles` — a seeded generator reproducing the
+    paper's measurement-study *shape*: sub-linear / linear / super-linear
+    scaling classes, batch-dependent latency, minimum instance sizes for
+    large models.  Used for the paper-faithful experiments (Figures 4/9/12…).
+
+  * :class:`RooflineProfiles` — the beyond-paper closed loop (DESIGN.md §7):
+    profiles *derived* from an analytic TPU roofline over the assigned
+    architectures (weights/KV bytes vs FLOPs on a slice of ``s`` chips),
+    so the scheduler consumes the same numbers the dry-run roofline reports.
+
+Both implement :class:`PerfProfile`.
+
+Latency model (both sources): a serving instance runs requests at batch ``b``;
+``latency(m, s, b)`` must stay under the SLO.  MIG-Serving "always chooses the
+largest batch sizes possible, as far as the inference latency is smaller than
+what required by SLOs" (§7 of the paper) — :meth:`PerfProfile.throughput`
+implements exactly that.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+BATCH_CANDIDATES: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+class PerfProfile(abc.ABC):
+    """Throughput/latency oracle consumed by the optimizer."""
+
+    @abc.abstractmethod
+    def services(self) -> List[str]:
+        ...
+
+    @abc.abstractmethod
+    def sizes(self) -> Sequence[int]:
+        """Instance sizes this profile covers (must match the rule-set)."""
+
+    @abc.abstractmethod
+    def latency_ms(self, model: str, size: int, batch: int) -> float:
+        """Per-request latency at the given batch (inf if infeasible)."""
+
+    def feasible(self, model: str, size: int) -> bool:
+        return math.isfinite(self.latency_ms(model, size, 1))
+
+    def min_size(self, model: str) -> int:
+        for s in sorted(self.sizes()):
+            if self.feasible(model, s):
+                return s
+        raise ValueError(f"{model} fits on no instance size")
+
+    def best_batch(self, model: str, size: int, latency_slo_ms: float) -> int:
+        """Largest batch whose latency meets the SLO (0 if none)."""
+        best = 0
+        for b in BATCH_CANDIDATES:
+            if self.latency_ms(model, size, b) <= latency_slo_ms:
+                best = b
+        return best
+
+    def throughput(self, model: str, size: int, latency_slo_ms: float) -> float:
+        """Sustained req/s on one instance at the best SLO-compliant batch."""
+        b = self.best_batch(model, size, latency_slo_ms)
+        if b == 0:
+            return 0.0
+        return b * 1000.0 / self.latency_ms(model, size, b)
+
+    # -- the paper's §2.2 classification --------------------------------------
+    def classify(self, model: str, latency_slo_ms: float = 1e9) -> str:
+        """sub-linear / linear / super-linear, per §2.2's ratio test,
+        normalized so the thresholds [6.5, 7.5]/7 transfer to any device size."""
+        sizes = sorted(self.sizes())
+        full = sizes[-1]
+        smallest = self.min_size(model)
+        unit = self.throughput(model, smallest, latency_slo_ms) / smallest
+        if unit <= 0:
+            return "infeasible"
+        ratio = self.throughput(model, full, latency_slo_ms) / unit
+        lo, hi = 6.5 / 7.0 * full, 7.5 / 7.0 * full
+        if ratio < lo:
+            return "sub-linear"
+        if ratio > hi:
+            return "super-linear"
+        return "linear"
+
+
+# ---------------------------------------------------------------------------
+# Synthetic paper-like profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _SyntheticModel:
+    name: str
+    unit_tput: float  # req/s per slice-unit at saturation on min instance
+    alpha: float  # throughput ~ size**alpha  (alpha<1 sub-linear, >1 super)
+    overhead_ms: float  # fixed per-batch launch overhead
+    min_size: int  # smallest instance the model fits on
+
+
+class SyntheticPaperProfiles(PerfProfile):
+    """Seeded generator mirroring the paper's 49-model study (§2.2, App. B).
+
+    Scaling classes are drawn so that non-linear models are prevalent
+    (the paper's Figure 4): roughly 45% sub-linear, 30% linear, 25%
+    super-linear at moderate batch sizes.
+    """
+
+    def __init__(
+        self,
+        n_models: int = 24,
+        seed: int = 0,
+        sizes: Sequence[int] = (1, 2, 3, 4, 7),
+    ):
+        rng = np.random.default_rng(seed)
+        self._sizes = tuple(sizes)
+        full = max(sizes)
+        self._models: Dict[str, _SyntheticModel] = {}
+        classes = rng.choice(
+            ["sub", "lin", "sup"], size=n_models, p=[0.45, 0.30, 0.25]
+        )
+        for i in range(n_models):
+            cls = classes[i]
+            if cls == "sub":
+                alpha = float(rng.uniform(0.55, 0.85))
+            elif cls == "lin":
+                alpha = float(rng.uniform(0.95, 1.05))
+            else:
+                alpha = float(rng.uniform(1.15, 1.45))
+            unit = float(rng.uniform(40.0, 400.0))
+            overhead = float(rng.uniform(1.0, 6.0))
+            # ~20% of models are "large": need a 2- or 3-slice instance
+            if rng.random() < 0.2:
+                min_size = int(rng.choice([s for s in sizes if 1 < s < full]))
+            else:
+                min_size = min(sizes)
+            name = f"model{i:02d}-{cls}"
+            self._models[name] = _SyntheticModel(name, unit, alpha, overhead, min_size)
+
+    def services(self) -> List[str]:
+        return list(self._models)
+
+    def sizes(self) -> Sequence[int]:
+        return self._sizes
+
+    def latency_ms(self, model: str, size: int, batch: int) -> float:
+        m = self._models[model]
+        if size < m.min_size:
+            return math.inf
+        rate = m.unit_tput * (size ** m.alpha)  # req/s at saturation
+        return m.overhead_ms + batch * 1000.0 / rate
+
+
+# ---------------------------------------------------------------------------
+# Roofline-derived profiles (beyond-paper; DESIGN.md §7.1)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchPerfSpec:
+    """The numbers the analytic roofline needs about one architecture.
+
+    Derived from the arch configs (``repro.configs``): parameter counts and
+    per-token KV/state bytes.  ``active_params`` < ``params`` for MoE.
+    """
+
+    name: str
+    params: float  # total parameters
+    active_params: float  # parameters touched per token (MoE: shared+top-k)
+    kv_bytes_per_token: float  # decode cache traffic per token per request
+    context: int = 4096  # typical serving context for the profile
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuChip:
+    flops: float = 197e12  # bf16 FLOP/s (v5e)
+    hbm_bw: float = 819e9  # bytes/s
+    hbm_bytes: float = 16e9  # capacity
+    ici_bw: float = 50e9  # bytes/s per link
+
+
+class RooflineProfiles(PerfProfile):
+    """Decode-roofline profile: latency of one decode step on an ``s``-chip
+    slice at batch ``b`` is
+
+        max( weights_active/(s·BW) + b·kv_ctx/(s·BW),   2·N_active·b/(s·F) )
+        + dispatch overhead
+
+    Weight streaming dominates small batches (memory-bound → per-chip
+    throughput grows super-linearly with slice size at a fixed latency SLO,
+    the paper's xlnet regime); KV streaming dominates long contexts
+    (sub-linear, densenet regime).  A model is infeasible on a slice whose
+    aggregate HBM cannot hold weights + cache headroom — the paper's
+    "smallest instance that can run M".
+    """
+
+    def __init__(
+        self,
+        archs: Sequence[ArchPerfSpec],
+        sizes: Sequence[int] = (1, 2, 4, 8, 16),
+        chip: TpuChip = TpuChip(),
+        dtype_bytes: float = 2.0,
+        overhead_ms: float = 0.3,
+    ):
+        self._archs = {a.name: a for a in archs}
+        self._sizes = tuple(sizes)
+        self.chip = chip
+        self.dtype_bytes = dtype_bytes
+        self.overhead_ms = overhead_ms
+
+    def services(self) -> List[str]:
+        return list(self._archs)
+
+    def sizes(self) -> Sequence[int]:
+        return self._sizes
+
+    def latency_ms(self, model: str, size: int, batch: int) -> float:
+        a = self._archs[model]
+        c = self.chip
+        weight_bytes = a.params * self.dtype_bytes
+        kv_ctx = a.kv_bytes_per_token * a.context
+        hbm_need = weight_bytes + batch * kv_ctx
+        if hbm_need > 0.9 * size * c.hbm_bytes:
+            return math.inf
+        mem_s = (a.active_params * self.dtype_bytes + batch * kv_ctx) / (
+            size * c.hbm_bw
+        )
+        comp_s = 2.0 * a.active_params * batch / (size * c.flops)
+        return (max(mem_s, comp_s)) * 1000.0 + self.overhead_ms

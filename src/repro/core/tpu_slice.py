@@ -1,0 +1,182 @@
+"""TPU-pod slice rules — the TPU-native adaptation of MIG (DESIGN.md §2).
+
+A 16×16 v5e pod is carved into 16 *allocation domains* of 4×4 = 16 chips.
+Within a domain, instances are aligned rectangular submeshes:
+
+  size  1 : 1×1 at any chip
+  size  2 : 1×2 at even columns
+  size  4 : 2×2 at even rows/cols
+  size  8 : 2×4 at row 0 or 2, col 0
+  size 16 : 4×4 (the whole domain)
+
+Alignment is the TPU analogue of MIG's peculiar rules: XLA requires an
+ICI-contiguous rectangular mesh, so *n free chips do not imply an n-chip
+slice is allocatable* — the same abstract property the paper identifies on
+A100 ("no 4/7 + 3/7").  Non-power-of-two sizes mirror A100's forbidden
+5/7 and 6/7 instances.
+
+Partial reconfiguration: any subset of a domain's rectangles can be re-tiled
+while other rectangles keep serving — matching MIG's on-the-fly repartition.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, FrozenSet, List, Sequence, Tuple
+
+from repro.core.rms import Partition, ReconfigRules
+
+DOMAIN_SHAPE = (4, 4)
+
+# size -> (height, width) of the rectangle
+SLICE_SHAPES: Dict[int, Tuple[int, int]] = {
+    1: (1, 1),
+    2: (1, 2),
+    4: (2, 2),
+    8: (2, 4),
+    16: (4, 4),
+}
+
+
+def _placements(size: int) -> Tuple[FrozenSet[Tuple[int, int]], ...]:
+    h, w = SLICE_SHAPES[size]
+    rows, cols = DOMAIN_SHAPE
+    out = []
+    for r in range(0, rows - h + 1, h):
+        for c in range(0, cols - w + 1, w):
+            out.append(
+                frozenset((r + dr, c + dc) for dr in range(h) for dc in range(w))
+            )
+    return tuple(out)
+
+
+PLACEMENTS: Dict[int, Tuple[FrozenSet[Tuple[int, int]], ...]] = {
+    s: _placements(s) for s in SLICE_SHAPES
+}
+
+
+class TpuSliceRules(ReconfigRules):
+    """Legality oracle for rectangular slices of a 4×4 TPU allocation domain."""
+
+    @property
+    def device_size(self) -> int:
+        return 16
+
+    @property
+    def instance_sizes(self) -> Sequence[int]:
+        return (1, 2, 4, 8, 16)
+
+    def is_legal_partition(self, partition: Partition) -> bool:
+        partition = tuple(sorted(partition, reverse=True))
+        if sum(partition) > self.device_size:
+            return False
+        return self._placeable(partition)
+
+    @functools.lru_cache(maxsize=None)
+    def _placeable(self, partition: Partition) -> bool:
+        def rec(idx: int, occupied: FrozenSet[Tuple[int, int]]) -> bool:
+            if idx == len(partition):
+                return True
+            for pl in PLACEMENTS[partition[idx]]:
+                if not (pl & occupied):
+                    if rec(idx + 1, occupied | pl):
+                        return True
+            return False
+
+        return rec(0, frozenset())
+
+    @functools.lru_cache(maxsize=None)
+    def _legal_cache(self) -> Tuple[Partition, ...]:
+        out = set()
+        sizes = self.instance_sizes
+
+        def rec(cur: Tuple[int, ...]) -> None:
+            for s in sizes:
+                cand = tuple(sorted(cur + (s,)))
+                if sum(cand) > self.device_size or cand in out:
+                    continue
+                if self.is_legal_partition(cand):
+                    out.add(cand)
+                    rec(cand)
+
+        rec(())
+        return tuple(sorted(out))
+
+    def legal_partitions(self) -> List[Partition]:
+        return list(self._legal_cache())
+
+
+@functools.lru_cache(maxsize=None)
+def tpu_slice_rules() -> TpuSliceRules:
+    return TpuSliceRules()
+
+
+class PodSliceRules(TpuSliceRules):
+    """Coarse granularity: the allocation domain is one whole 16×16 pod and
+    slices are {16, 32, 64, 128, 256} chips (4×4 … 16×16 rectangles).
+
+    Same placement engine as :class:`TpuSliceRules` — a pod is a 4×4 grid of
+    16-chip units — with sizes reported in chips.  This granularity hosts the
+    ≥200B assigned architectures (deepseek-v2/v3, llama3-405b), which need
+    more than a 16-chip slice to hold their weights (DESIGN.md §4).
+    """
+
+    UNIT = 16  # chips per placement-grid cell
+
+    @property
+    def device_size(self) -> int:
+        return 256
+
+    @property
+    def instance_sizes(self) -> Sequence[int]:
+        return (16, 32, 64, 128, 256)
+
+    def _to_units(self, partition: Partition) -> Partition:
+        assert all(s % self.UNIT == 0 for s in partition), partition
+        return tuple(s // self.UNIT for s in partition)
+
+    def is_legal_partition(self, partition: Partition) -> bool:
+        partition = tuple(sorted(partition, reverse=True))
+        if any(s % self.UNIT != 0 for s in partition):
+            return False
+        if sum(partition) > self.device_size:
+            return False
+        return self._placeable(self._to_units(partition))
+
+    @functools.lru_cache(maxsize=None)
+    def _legal_cache(self) -> Tuple[Partition, ...]:
+        base = TpuSliceRules._legal_cache(self)
+        # base is in units of 16 chips (the parent enumerates sizes 1..16)
+        return tuple(
+            tuple(self.UNIT * s for s in p)
+            for p in base
+        )
+
+    def legal_partitions(self):
+        out = set()
+        sizes = self.instance_sizes
+
+        def rec(cur):
+            for s in sizes:
+                cand = tuple(sorted(cur + (s,)))
+                if sum(cand) > self.device_size or cand in out:
+                    continue
+                if self.is_legal_partition(cand):
+                    out.add(cand)
+                    rec(cand)
+
+        rec(())
+        return sorted(out)
+
+
+@functools.lru_cache(maxsize=None)
+def pod_slice_rules() -> PodSliceRules:
+    return PodSliceRules()
+
+
+def slice_mesh_shape(size: int) -> Tuple[int, int]:
+    """The (rows, cols) mesh shape a serving engine uses for a slice."""
+    if size in SLICE_SHAPES:
+        return SLICE_SHAPES[size]
+    h, w = SLICE_SHAPES[size // PodSliceRules.UNIT]
+    return (4 * h, 4 * w)  # pod-granularity slice

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the serving hot-spots, with pure-jnp oracles.
+
+The paper's contribution is the scheduling layer, not a kernel — but the
+services it schedules are dominated by three compute hot-spots, implemented
+here as TPU-native Pallas kernels (validated in interpret mode on CPU):
+
+  * flash_attention — block-tiled causal prefill attention
+  * decode_attention — single-token attention over a KV cache
+  * ssm_scan — chunked SSD (Mamba2) scan with VMEM-carried state
+  * paged_attention — paged-KV decode with a scalar-prefetched page table
+
+``ops`` holds the jit'd public wrappers; ``ref`` the oracles.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,109 @@
+"""Pallas TPU decode attention (single-token serving hot-spot).
+
+One query token per request attends over the full KV cache.  Decode is
+HBM-bandwidth-bound (the cache is streamed once), so the kernel's job is to
+keep the streaming dense and the softmax state in VMEM: the kv-sequence loop
+is the innermost grid dimension, carrying (m, l, acc) scratch across blocks
+exactly like the prefill kernel, with all H = KV·G heads of one request
+processed per program so the q tile is loaded once.
+
+Layouts: q (B, H, D); k/v (B, S, KV, D); valid (B, S) int32 mask (ring-cache
+or prefix validity decided by the caller).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, valid_ref,
+    o_ref,
+    m_ref, l_ref, acc_ref,
+    *, scale: float, groups: int,
+):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (H, D)
+    k = k_ref[0].astype(jnp.float32)  # (BK, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    ok = valid_ref[0] != 0  # (BK,)
+    H, D = q.shape
+    BK, KV, _ = k.shape
+    qg = q.reshape(KV, groups, D)
+    # scores (KV, G, BK)
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(ok[None, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]  # (KV, G)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    p = jnp.exp(s - m_cur[:, :, None])
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=2)
+    # pv: (KV, G, D)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * alpha[:, :, None] + pv
+    m_ref[...] = m_cur
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, :, None]).reshape(H, D).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    valid: jax.Array,  # (B, S) int32
+    *,
+    scale: Optional[float] = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    grid = (B, S // block_k)
+    kernel = functools.partial(_decode_kernel, scale=scale, groups=G)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, D), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_k, KV, D), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_k), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: deliberately simple (no blocking, no
+online softmax, sequential SSM recurrence) so the tests' assert_allclose has
+an unambiguous reference.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, KV, S, D)
+    v: jax.Array,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    q5 = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", q5, kf) * scale
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    valid: jax.Array,  # (S,) bool
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    q5 = q.reshape(B, KV, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", q5, k.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def ssm_scan_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (already softplus'd)
+    A: jax.Array,  # (H,)       (negative)
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence — the unambiguous oracle.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T ;  y_t = C_t · h_t
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t * A[None, :])  # (B,H)
+        h = h * dA[:, :, None, None] + jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, b_t)
+        y = jnp.einsum("bn,bhpn->bhp", c_t, h)
+        return h, y
+
+    init = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (
+        x.astype(jnp.float32).transpose(1, 0, 2, 3),
+        dt.astype(jnp.float32).transpose(1, 0, 2),
+        B_.astype(jnp.float32).transpose(1, 0, 2),
+        C_.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,  # (B, H, D)
+    pool_k: jax.Array,  # (num_pages, page_size, KV, D)
+    pool_v: jax.Array,
+    page_tables: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,  # (B,) int32
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Gather each request's pages into a flat cache, then flat decode."""
+    B, H, D = q.shape
+    _, page_size, KV, _ = pool_k.shape
+    max_pages = page_tables.shape[1]
+    S = max_pages * page_size
+    k = pool_k[page_tables].reshape(B, S, KV, D)
+    v = pool_v[page_tables].reshape(B, S, KV, D)
+    pos = jnp.arange(S)[None, :]
+    out = []
+    for b in range(B):  # oracle clarity over speed
+        valid = pos[0] < lengths[b]
+        out.append(decode_attention_ref(q[b:b+1], k[b:b+1], v[b:b+1], valid, scale))
+    return jnp.concatenate(out, axis=0)

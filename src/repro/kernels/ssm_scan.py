@@ -1,0 +1,118 @@
+"""Pallas TPU chunked SSD scan (Mamba2 hot-spot).
+
+TPU adaptation of the SSD algorithm (DESIGN.md §2): the chunk loop is the
+innermost grid dimension and the running inter-chunk state (H, P, N) lives in
+VMEM scratch across grid steps — the TPU's sequential grid replaces the GPU
+implementation's persistent-CTA carry.  Within a chunk the quadratic
+C·B^T ⊙ decay matmuls map onto the MXU with (L × L) tiles.
+
+Layouts: x (B, S, H, P); dt (B, S, H) pre-softplus'd; A (1, H) negative;
+B_/C_ (B, S, N).  Returns y (B, S, H, P) and the final state (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref,
+    y_ref, final_ref,
+    state_ref,  # scratch: (H, P, N) f32
+    *, chunk: int,
+):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (L, H, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (L, H)
+    A = a_ref[0].astype(jnp.float32)  # (H,)
+    Bm = b_ref[0].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)  # (L, N)
+    L = x.shape[0]
+
+    dA = dt * A[None, :]  # (L, H) negative
+    dA_cs = jnp.cumsum(dA, axis=0)  # inclusive
+
+    # intra-chunk
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (L, L)
+    li = dA_cs[:, None, :]  # (L,1,H)
+    lj = dA_cs[None, :, :]  # (1,L,H)
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))  # (L,L,H)
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+        <= jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    )
+    m = jnp.where(tri[:, :, None], cb[:, :, None] * decay * dt[None, :, :], 0.0)
+    y_intra = jnp.einsum("ijh,jhp->ihp", m, x)
+
+    # inter-chunk: contribution of the state entering this chunk
+    entering = state_ref[...]  # (H, P, N)
+    y_inter = jnp.einsum("in,hpn->ihp", Cm, entering) * jnp.exp(
+        jnp.clip(dA_cs, -60.0, 0.0)
+    )[:, :, None]
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update
+    last = dA_cs[-1:, :]  # (1,H)
+    seg = jnp.exp(jnp.clip(last - dA_cs, -60.0, 0.0))  # (L,H)
+    new_contrib = jnp.einsum("jh,jn,jhp->hpn", seg * dt, Bm, x)
+    chunk_decay = jnp.exp(jnp.clip(last[0], -60.0, 0.0))  # (H,)
+    state_ref[...] = entering * chunk_decay[:, None, None] + new_contrib
+
+    @pl.when(ci == nc - 1)
+    def _emit_final():
+        final_ref[0] = state_ref[...].astype(final_ref.dtype)
+
+
+def ssm_scan_bshp(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    grid = (Bb, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, H), lambda b, c: (0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, P, N), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.reshape(1, H), B_, C_)
+    return y, final

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any other import: jax locks the device
+# count at first initialization, and the production meshes need 512
+# placeholder host devices (16×16 single-pod uses the first 256).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination and record the roofline inputs.
+
+For each combo this driver:
+  1. builds the production mesh (16×16, and 2×16×16 with ``--multi-pod``),
+  2. builds the step (train/prefill/serve) with abstract ShapeDtypeStruct
+     inputs — no allocation anywhere,
+  3. ``jax.jit(fn, in_shardings, out_shardings).lower(...).compile()``,
+  4. prints ``memory_analysis()`` / ``cost_analysis()`` and parses the
+     post-SPMD HLO for collective bytes,
+  5. writes ``experiments/dryrun/<arch>__<shape>__<mesh>.json`` for the
+     roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Failures here (sharding mismatch, unsupported collective) are bugs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, build_step
+from repro.roofline.analysis import (
+    RooflineReport,
+    collective_bytes,
+    hlo_cost,
+    model_step_flops,
+)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    seq_axis: Optional[str] = "model",
+    zero1: bool = False,
+    infer_shard_data: bool = False,
+    act_tp: bool = False,
+    donate_cache: bool = False,
+    batch_all_axes: bool = False,
+    kv_hint: bool = False,
+    moe_shard_capacity: bool = False,
+    moe_shard_map: bool = False,
+    out_dir: str = OUT_DIR,
+    tag: str = "",
+    verbose: bool = True,
+) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    chips = mesh.size
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    t0 = time.monotonic()
+    bundle = build_step(
+        cfg, shape_name, mesh, seq_axis=seq_axis, zero1=zero1,
+        infer_shard_data=infer_shard_data, act_tp=act_tp,
+        batch_all_axes=batch_all_axes, kv_hint=kv_hint,
+        moe_shard_capacity=moe_shard_capacity, moe_shard_map=moe_shard_map,
+    )
+    donate = (1,) if (donate_cache and shape.kind == "decode") else ()
+    with mesh:
+        lowered = jax.jit(
+            bundle.fn,
+            in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=donate,
+        ).lower(*bundle.args)
+        compiled = lowered.compile()
+    t1 = time.monotonic()
+
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # trip-count-aware accounting: cost_analysis() visits while (scan)
+    # bodies once, undercounting scanned models by the layer count
+    parsed = hlo_cost(hlo)
+    flops = float(parsed["flops"])
+    bytes_accessed = float(parsed["bytes"])
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+        )
+        out_bytes = float(getattr(mem, "output_size_in_bytes", 0))
+    except Exception:
+        mem, peak, out_bytes = None, None, None
+    coll = collective_bytes(hlo)
+
+    report = RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name + (f"+{tag}" if tag else ""),
+        chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=coll,
+        model_flops=model_step_flops(bundle.cfg, shape),
+        peak_memory_per_device=peak,
+        output_bytes_per_device=out_bytes,
+    )
+    d = report.to_dict()
+    d["compile_seconds"] = t1 - t0
+    d["raw_cost_analysis_flops"] = float(cost.get("flops", 0.0))
+    d["raw_cost_analysis_bytes"] = float(cost.get("bytes accessed", 0.0))
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}{('__' + tag) if tag else ''}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(d, f, indent=2)
+    if verbose:
+        print(
+            f"[dryrun] {arch:18s} {shape_name:12s} mesh={mesh_name:8s} "
+            f"compile={t1-t0:6.1f}s flops/dev={flops:.3e} bytes/dev={bytes_accessed:.3e} "
+            f"coll/dev={sum(coll.values()):.3e} dominant={report.dominant}"
+        )
+        if mem is not None:
+            print(f"         memory_analysis: peak/dev={peak:.3e}B out/dev={out_bytes:.3e}B")
+    return d
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-axis", default="model")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--infer-shard-data", action="store_true")
+    ap.add_argument("--act-tp", action="store_true")
+    ap.add_argument("--donate-cache", action="store_true")
+    ap.add_argument("--batch-all-axes", action="store_true")
+    ap.add_argument("--kv-hint", action="store_true")
+    ap.add_argument("--moe-shard-capacity", action="store_true")
+    ap.add_argument("--moe-shard-map", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    combos = (
+        [(a, s) for a in ARCH_IDS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = []
+    for arch, shape in combos:
+        try:
+            run_one(
+                arch, shape, multi_pod=args.multi_pod,
+                seq_axis=None if args.seq_axis == "none" else args.seq_axis,
+                zero1=args.zero1, infer_shard_data=args.infer_shard_data,
+                act_tp=args.act_tp, donate_cache=args.donate_cache,
+                batch_all_axes=args.batch_all_axes, kv_hint=args.kv_hint,
+                moe_shard_capacity=args.moe_shard_capacity,
+                moe_shard_map=args.moe_shard_map,
+                out_dir=args.out_dir, tag=args.tag,
+            )
+        except Exception as e:  # noqa: BLE001 — report all failures at the end
+            failures.append((arch, shape, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(combos)} combos")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,271 @@
+"""Input shapes, argument structs and shardings for every launch step.
+
+``input_specs(cfg, shape, mesh)`` produces weak-type-correct
+ShapeDtypeStruct stand-ins for every model input — shardable, no device
+allocation — plus the matching NamedShardings.  ``build_step`` returns the
+jit-able step function and its in/out shardings for (arch × shape × mesh):
+
+  train_4k     -> train_step   (params, opt_state, batch)
+  prefill_32k  -> prefill      (params, tokens|embeds)
+  decode_32k   -> serve_step   (params, cache, token, pos) — 1 new token
+  long_500k    -> serve_step with a 524288-token context (ring cache /
+                  SSM state; dense archs use the sliding-window variant)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import long_context_variant
+from repro.models import Model
+from repro.models.config import ModelConfig
+from repro.training import adamw
+from repro.training.train_loop import make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    long_context: bool = False
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1, long_context=True),
+}
+
+
+def _dp_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """Data-parallel axes actually usable for this batch size."""
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return axes if axes and batch % size == 0 and batch >= size else ()
+
+
+def _shard(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def shape_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    if shape.long_context and cfg.arch_type != "ssm":
+        return long_context_variant(cfg)
+    return cfg
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything dryrun/launchers need for one (arch × shape × mesh)."""
+
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStructs (or real arrays for drivers)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    model: Model
+    cfg: ModelConfig
+
+
+def _batch_struct(cfg: ModelConfig, shape: ShapeSpec, dp) -> Tuple[Dict, Dict]:
+    B, S = shape.global_batch, shape.seq_len
+    structs: Dict[str, Any] = {
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    specs: Dict[str, Any] = {"labels": P(dp, None)}
+    if cfg.modality == "text":
+        structs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["tokens"] = P(dp, None)
+    else:
+        structs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        specs["embeds"] = P(dp, None, None)
+    return structs, specs
+
+
+def build_step(
+    arch_cfg: ModelConfig,
+    shape_name: str,
+    mesh: Mesh,
+    seq_axis: Optional[str] = "model",
+    remat: bool = True,
+    zero1: bool = False,
+    infer_shard_data: bool = False,
+    act_tp: bool = False,
+    batch_all_axes: bool = False,
+    kv_hint: bool = False,
+    moe_shard_capacity: bool = False,
+    moe_shard_map: bool = False,
+) -> StepBundle:
+    """§Perf knobs beyond the paper-faithful baseline:
+      zero1            — shard optimizer moments over the data axis too
+      infer_shard_data — inference weights sharded over data AND model axes
+                         (serving has no gradient sync, so the data axis is
+                         free real estate for weight shards)
+      act_tp           — residual-stream feature dim constrained to "model"
+                         (turns TP all-reduces into reduce-scatter pairs)
+    """
+    shape = SHAPES[shape_name]
+    cfg = shape_config(arch_cfg, shape)
+    dp = _dp_axes(mesh, shape.global_batch)
+    if (
+        batch_all_axes
+        and shape.kind == "decode"
+        and cfg.arch_type in ("dense", "vlm", "audio", "moe")
+        and shape.global_batch % mesh.size == 0
+    ):
+        # decode batch over every mesh axis: attention becomes fully local
+        # per chip (no cache resharding); weights are all-gathered instead.
+        # (SSM/hybrid caches shard their head dim on "model" — skip those.)
+        dp = tuple(mesh.axis_names)
+        seq_axis = None
+    model = Model(
+        cfg,
+        remat=remat and shape.kind == "train",
+        mesh_axes=tuple(mesh.axis_names),
+        act_tp=act_tp and shape.kind != "decode",
+        kv_hint=P(dp, None, None, None) if kv_hint else None,
+        moe_buf_spec=P("model", "data", None) if moe_shard_capacity else None,
+        moe_shard_map_mesh=mesh if moe_shard_map else None,
+    )
+    # abstract params + specs (no allocation)
+    params, pspecs = model.init(None, abstract=True)
+    if infer_shard_data and shape.kind != "train":
+        pspecs = _dual_axis_specs(pspecs, params, mesh)
+    param_sh = _shard(mesh, pspecs)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt = jax.eval_shape(adamw.init, params)
+        opt_specs = adamw.AdamWState(
+            step=P(),
+            mu=_zero1_specs(pspecs, opt.mu, mesh) if zero1 else pspecs,
+            nu=_zero1_specs(pspecs, opt.nu, mesh) if zero1 else pspecs,
+        )
+        opt_sh = _shard(mesh, opt_specs)
+        batch, bspecs = _batch_struct(cfg, shape, dp)
+        batch_sh = _shard(mesh, bspecs)
+        fn = make_train_step(model, opt_cfg)
+        metrics_sh = None  # replicated scalars
+        return StepBundle(
+            fn=fn,
+            args=(params, opt, batch),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, metrics_sh),
+            model=model,
+            cfg=cfg,
+        )
+
+    if shape.kind == "prefill":
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.modality == "text":
+            inp = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            inp_spec = P(dp, None)
+            fn = lambda p, tokens: model.prefill(p, tokens=tokens)
+        else:
+            inp = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+            inp_spec = P(dp, None, None)
+            fn = lambda p, embeds: model.prefill(p, embeds=embeds)
+        cache_specs = model.cache_specs(seq_axis=seq_axis)
+        logits_spec = P(dp, None, "model")
+        return StepBundle(
+            fn=fn,
+            args=(params, inp),
+            in_shardings=(param_sh, NamedSharding(mesh, inp_spec)),
+            out_shardings=(
+                NamedSharding(mesh, logits_spec),
+                _shard(mesh, cache_specs),
+            ),
+            model=model,
+            cfg=cfg,
+        )
+
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    # rebind cache specs to the usable dp axes (batch=1 cannot shard)
+    cache_specs = model.cache_specs(seq_axis=seq_axis, dp=dp)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = lambda p, c, t, i: model.decode_step(p, c, t, i)
+    return StepBundle(
+        fn=fn,
+        args=(params, cache, token, pos),
+        in_shardings=(
+            param_sh,
+            _shard(mesh, cache_specs),
+            NamedSharding(mesh, P(dp, None)),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(
+            NamedSharding(mesh, P(dp, None, "model")),
+            _shard(mesh, cache_specs),
+        ),
+        model=model,
+        cfg=cfg,
+    )
+
+
+def input_specs(
+    arch_cfg: ModelConfig, shape_name: str, mesh: Mesh, **kwargs
+) -> Tuple[Tuple[Any, ...], Tuple[Any, ...]]:
+    """ShapeDtypeStruct stand-ins + NamedShardings for every model input of
+    one (arch × shape × mesh) step — weak-type-correct, shardable, no device
+    allocation.  (Thin veneer over :func:`build_step` for callers that only
+    need the argument specs.)"""
+    bundle = build_step(arch_cfg, shape_name, mesh, **kwargs)
+    return bundle.args, bundle.in_shardings
+
+
+def _dp_axes_names(mesh: Mesh, dp: Tuple[str, ...]):
+    """Mesh-axis tuple for a Model whose batch axes are restricted to dp."""
+    return tuple(a for a in mesh.axis_names if a == "model" or a in dp)
+
+
+def _dual_axis_specs(pspecs, params_like, mesh: Mesh):
+    """Inference weight sharding over BOTH axes: keep the "model" dim and
+    additionally shard the largest unsharded, divisible dim over "data"."""
+    data = mesh.shape.get("data", 1)
+
+    def upgrade(spec, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        # choose the largest eligible dim for the data shard
+        best, best_dim = None, 0
+        for i, (p_, dim) in enumerate(zip(parts, leaf.shape)):
+            if p_ is None and dim % data == 0 and dim >= data and dim > best_dim:
+                best, best_dim = i, dim
+        if best is not None and best_dim >= 1024:  # skip tiny tensors
+            parts[best] = "data"
+        return P(*parts)
+
+    return jax.tree.map(
+        upgrade, pspecs, params_like, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _zero1_specs(pspecs, opt_like, mesh: Mesh):
+    """ZeRO-1: additionally shard optimizer moments over the data axis on the
+    largest dimension that is unsharded and divisible (beyond-paper §Perf)."""
+    data = mesh.shape.get("data", 1)
+
+    def upgrade(spec, leaf):
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (p_, dim) in enumerate(zip(parts, leaf.shape)):
+            if p_ is None and dim % data == 0 and dim >= data:
+                parts[i] = "data"
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree.map(
+        upgrade, pspecs, opt_like, is_leaf=lambda x: isinstance(x, P)
+    )

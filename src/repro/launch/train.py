@@ -1,0 +1,87 @@
+"""Training driver.
+
+Runs real steps on CPU for smoke/100M-scale configs; the full production
+configs are exercised through :mod:`repro.launch.dryrun` (no allocation).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+      --steps 20 --batch 4 --seq 64
+  PYTHONPATH=src python -m repro.launch.train --repro-100m --steps 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import Model
+from repro.models.config import ModelConfig
+from repro.training import adamw, checkpoint, data, make_train_step
+
+# ~100M-parameter dense config for the end-to-end training example
+REPRO_100M = ModelConfig(
+    name="repro-100m",
+    arch_type="dense",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=4,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=8192,
+    citation="in-repo 100M example config",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--repro-100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.repro_100m:
+        cfg = REPRO_100M
+    elif args.arch:
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    else:
+        cfg = get_smoke_config("qwen3-8b")
+
+    model = Model(cfg, remat=False)
+    params, _ = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M")
+
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=max(1, args.steps // 10))
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    dcfg = data.DataConfig(batch=args.batch, seq_len=args.seq, seed=args.seed)
+
+    t0 = time.monotonic()
+    first = last = None
+    for i, batch in enumerate(data.batches(cfg, dcfg, args.steps)):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {loss:.4f} gnorm {float(metrics['grad_norm']):.3f}")
+    dt = time.monotonic() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"done: {args.steps} steps, {toks/dt:.0f} tok/s, loss {first:.3f} -> {last:.3f}")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params)
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

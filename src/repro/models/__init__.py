@@ -1,0 +1,6 @@
+"""JAX model zoo for the assigned architectures."""
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+__all__ = ["Model", "ModelConfig"]

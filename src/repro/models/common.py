@@ -1,0 +1,139 @@
+"""Shared model components: norms, RoPE, initializers, the ParamFactory.
+
+All models are functional: parameters are pytrees of ``jnp`` arrays created by
+a :class:`ParamFactory`, which records a matching pytree of
+``PartitionSpec``s as it goes — so every architecture automatically ships
+its sharding plan (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+class ParamFactory:
+    """Creates parameters and records their PartitionSpecs in one pass.
+
+    ``stack_depth`` > 0 prepends a layer axis of that length (for
+    scan-over-layers parameter stacks) and a leading ``None`` spec dim.
+    """
+
+    def __init__(
+        self,
+        key: Optional[jax.Array],
+        dtype: Any,
+        stack_depth: int = 0,
+        abstract: bool = False,
+    ):
+        self._key = key
+        self.dtype = dtype
+        self.stack_depth = stack_depth
+        self.abstract = abstract  # emit ShapeDtypeStructs (dry-run lowering)
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def subfactory(self, name: str, stack_depth: Optional[int] = None) -> "ParamFactory":
+        f = ParamFactory(
+            None if self.abstract else self._next_key(),
+            self.dtype,
+            self.stack_depth if stack_depth is None else stack_depth,
+            abstract=self.abstract,
+        )
+        self.params[name] = f.params
+        self.specs[name] = f.specs
+        return f
+
+    def add(
+        self,
+        name: str,
+        shape: Sequence[int],
+        spec: Sequence[Optional[str]],
+        init: str = "normal",
+        scale: Optional[float] = None,
+    ) -> None:
+        shape = tuple(shape)
+        assert len(spec) == len(shape), (name, shape, spec)
+        if self.stack_depth:
+            shape = (self.stack_depth,) + shape
+            spec = (None,) + tuple(spec)
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(shape, self.dtype)
+            self.specs[name] = P(*spec)
+            return
+        if init == "zeros":
+            arr = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            arr = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = scale if scale is not None else 1.0 / np.sqrt(max(1, fan_in))
+            arr = (
+                jax.random.normal(self._next_key(), shape, jnp.float32) * std
+            ).astype(self.dtype)
+        elif init == "constant":
+            arr = jnp.full(shape, scale, self.dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = arr
+        self.specs[name] = P(*spec)
+
+
+# -- norms ---------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+# -- rotary embeddings ------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- misc --------------------------------------------------------------------------
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset: int = 0) -> jax.Array:
+    """(q_len, kv_len) additive mask; query i may see kv j <= i + q_offset."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    return jnp.where(kj <= qi, 0.0, -1e30).astype(jnp.float32)
+
+
+def batch_spec(mesh_axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    """The data-parallel axes: ('pod','data') on a multi-pod mesh, ('data',)
+    on a single pod."""
+    return tuple(a for a in mesh_axes if a in ("pod", "data"))

@@ -1,0 +1,28 @@
+"""Dense feed-forward (SwiGLU) block."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory
+from repro.models.config import ModelConfig
+
+
+def mlp_init(f: ParamFactory, cfg: ModelConfig, d_ff: int = 0) -> None:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.mlp_gated:
+        f.add("w_gate", (d, ff), (None, "model"))
+    f.add("w_up", (d, ff), (None, "model"))
+    f.add("w_down", (ff, d), ("model", None))
+
+
+def mlp_forward(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:  # non-gated (GPT-BigCode style, e.g. granite-20b)
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]

@@ -1,0 +1,224 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Prefill/train uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks of length Q, linear recurrence across chunks.
+Decode maintains the (B, H, P, N) state plus a depthwise-conv tail.
+
+The scan itself is routed through :mod:`repro.models.kernels_bridge` so the
+Pallas ``ssm_scan`` kernel can take over on TPU; the pure-jnp chunked path
+below is the oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamFactory, rmsnorm
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def ssm_init(f: ParamFactory, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_ch = di + 2 * n
+    # separate projections so each output dim shards cleanly on "model"
+    # (a packed w_in would be sliced across shard boundaries)
+    f.add("w_z", (d, di), (None, "model"))
+    f.add("w_xbc", (d, conv_ch), (None, "model"))
+    f.add("w_dt", (d, H), (None, "model"))
+    f.add("conv_w", (cfg.conv_width, conv_ch), (None, "model"))
+    f.add("conv_b", (conv_ch,), ("model",), init="zeros")
+    f.add("A_log", (H,), (None,), init="zeros")
+    f.add("dt_bias", (H,), (None,), init="zeros")
+    f.add("D", (H,), (None,), init="ones")
+    f.add("ssm_norm", (di,), ("model",), init="ones")
+    f.add("w_out", (di, d), ("model", None))
+
+
+def _project(p: Params, x: jax.Array):
+    """(z, xBC, dt) input projections."""
+    return x @ p["w_z"], x @ p["w_xbc"], x @ p["w_dt"]
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    B_: jax.Array,  # (B, S, N)
+    C_: jax.Array,  # (B, S, N)
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD; returns (y, final_state (B,H,P,N))."""
+    Bb, S, H, Pd = x.shape
+    N = B_.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xr = x.reshape(Bb, nc, chunk, H, Pd)
+    dtr = dt.reshape(Bb, nc, chunk, H)
+    Br = B_.reshape(Bb, nc, chunk, N)
+    Cr = C_.reshape(Bb, nc, chunk, N)
+
+    dA = dtr * A[None, None, None, :]  # (B,nc,L,H), negative
+    dA_cs = jnp.cumsum(dA, axis=2)  # inclusive cumsum over L
+
+    # -- intra-chunk (quadratic within the chunk) ------------------------------
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # (B,nc,L,L)
+    li = dA_cs[:, :, :, None, :]  # i
+    lj = dA_cs[:, :, None, :, :]  # j
+    decay = jnp.exp(
+        jnp.clip(li - lj, -60.0, 0.0)
+    )  # (B,nc,L,L,H); j<=i => nonpositive exponent
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = cb[..., None] * decay * dtr[:, :, None, :, :]
+    m = jnp.where(mask[None, None, :, :, None], m, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xr)
+
+    # -- per-chunk summary state -------------------------------------------------
+    last = dA_cs[:, :, -1:, :]  # (B,nc,1,H)
+    seg = jnp.exp(jnp.clip(last - dA_cs, -60.0, 0.0))  # decay from j to chunk end
+    states = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn", seg * dtr, Br, xr
+    )  # (B,nc,H,P,N)
+
+    # -- inter-chunk recurrence ----------------------------------------------------
+    chunk_decay = jnp.exp(jnp.clip(last[:, :, 0, :], -60.0, 0.0))  # (B,nc,H)
+
+    def body(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = jnp.zeros((Bb, H, Pd, N), x.dtype)
+    final, prev_states = jax.lax.scan(
+        body,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcin,bchpn->bcihp", Cr, prev_states
+    ) * jnp.exp(jnp.clip(dA_cs, -60.0, 0.0))[..., None]
+    y = (y_intra + y_inter).reshape(Bb, S, H, Pd)
+    return y, final
+
+
+def ssd_step(
+    state: jax.Array,  # (B, H, P, N)
+    x_t: jax.Array,  # (B, H, P)
+    dt_t: jax.Array,  # (B, H)
+    A: jax.Array,  # (H,)
+    B_t: jax.Array,  # (B, N)
+    C_t: jax.Array,  # (B, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """One recurrence step; returns (y_t (B,H,P), new_state)."""
+    dA = jnp.exp(jnp.clip(dt_t * A[None, :], -60.0, 0.0))  # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+    new_state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_t, new_state)
+    return y, new_state
+
+
+# =============================================================================
+# Block-level forward / decode
+# =============================================================================
+
+
+def ssm_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S, d = x.shape
+    di, n, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _project(p, x)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B, S, H, hd)
+    B_ = xBC[..., di : di + n]
+    C_ = xBC[..., di + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs.astype(jnp.float32), dt, A, B_.astype(jnp.float32),
+                       C_.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def ssm_prefill(
+    p: Params, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Like :func:`ssm_forward` but also emits the decode cache
+    (final SSD state + raw conv tail)."""
+    B, S, d = x.shape
+    di, n, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC_raw, dt = _project(p, x)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B, S, H, hd)
+    B_ = xBC[..., di : di + n]
+    C_ = xBC[..., di + n :]
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final = ssd_chunked(xs.astype(jnp.float32), dt_, A, B_.astype(jnp.float32),
+                           C_.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    cache = {"conv": xBC_raw[:, S - (cfg.conv_width - 1) :], "state": final}
+    return y @ p["w_out"], cache
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype: Any) -> Dict[str, jax.Array]:
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig, dp):
+    from jax.sharding import PartitionSpec as P
+
+    # state (B, H, P, N): shard heads over "model" (matches w_xbc sharding)
+    return {"conv": P(dp, None, "model"), "state": P(dp, "model", None, None)}
+
+
+def ssm_decode(
+    p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d)."""
+    B = x.shape[0]
+    di, n, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _project(p, x)  # (B,1,·)
+    hist = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B,W,C)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"]
+    xBC1 = jax.nn.silu(conv_out)  # (B,C)
+    new_conv = hist[:, 1:, :]
+    xs = xBC1[:, :di].reshape(B, H, hd)
+    B_ = xBC1[:, di : di + n]
+    C_ = xBC1[:, di + n :]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_step(
+        cache["state"], xs.astype(jnp.float32), dt1, A,
+        B_.astype(jnp.float32), C_.astype(jnp.float32),
+    )
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"conv": new_conv, "state": new_state}

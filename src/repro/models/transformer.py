@@ -1,0 +1,497 @@
+"""Config-driven decoder models for all assigned architecture families.
+
+Layer stacks are *scanned* (``jax.lax.scan`` over stacked parameters) so HLO
+size — and therefore dry-run compile time — is O(1) in depth even for the
+126-layer llama3-405b (DESIGN.md §5).  Heterogeneous stacks are handled as:
+
+  * dense / vlm / audio : one scanned stack of (attn + SwiGLU) blocks
+  * moe                 : ``first_dense_layers`` unrolled dense blocks, then a
+                          scanned stack of (attn + MoE) blocks
+  * ssm                 : one scanned stack of Mamba2 blocks
+  * hybrid (Zamba2)     : scanned *superblocks* of ``shared_attn_every``
+                          Mamba2 sublayers + one invocation of a single
+                          weight-shared GQA block (closed over, not scanned)
+
+Public surface: :class:`Model` with ``init`` / ``forward`` / ``init_cache`` /
+``decode_step``.  ``forward`` accepts token ids or — for the stub-modality
+architectures (vlm/audio) — precomputed frontend embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import DTYPES, ParamFactory, batch_spec, rmsnorm
+from repro.models.config import ModelConfig
+from repro.models.mlp import mlp_forward, mlp_init
+
+Params = Dict[str, Any]
+
+
+def _attn_init(f: ParamFactory, cfg: ModelConfig) -> None:
+    if cfg.attention_kind == "mla":
+        attn.mla_init(f, cfg)
+    else:
+        attn.gqa_init(f, cfg)
+
+
+def _attn_forward(p, cfg, x, positions, use_kernels, kv_hint=None):
+    if cfg.attention_kind == "mla":
+        return attn.mla_forward(p, cfg, x, positions, use_kernels, kv_hint=kv_hint)
+    return attn.gqa_forward(p, cfg, x, positions, use_kernels, kv_hint=kv_hint)
+
+
+def _attn_decode(p, cfg, x, cache, pos):
+    if cfg.attention_kind == "mla":
+        return attn.mla_decode(p, cfg, x, cache, pos)
+    return attn.gqa_decode(p, cfg, x, cache, pos)
+
+
+def _attn_init_cache(cfg, batch, max_len, dtype):
+    if cfg.attention_kind == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len, dtype)
+    return attn.gqa_init_cache(cfg, batch, max_len, dtype)
+
+
+def _attn_cache_specs(cfg, dp, seq_axis):
+    if cfg.attention_kind == "mla":
+        return attn.mla_cache_specs(cfg, dp, seq_axis)
+    return attn.gqa_cache_specs(cfg, dp, seq_axis)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    use_kernels: bool = False
+    remat: bool = True
+    mesh_axes: Tuple[str, ...] = ("data", "model")
+    # §Perf knob: constrain the residual stream's feature dim to the model
+    # axis between blocks — XLA SPMD then lowers TP all-reduces into
+    # reduce-scatter + all-gather pairs (sequence-parallel-style savings).
+    act_tp: bool = False
+    # §Perf knob: PartitionSpec pinned onto full-sequence k/v above the
+    # blocked-attention tile loop (prevents per-tile re-gathers).
+    kv_hint: object = None
+    # §Perf knob: PartitionSpec for the MoE (E, C, d) expert buffer —
+    # shards capacity over "data" so expert GEMMs are not replicated.
+    moe_buf_spec: object = None
+    # §Perf knob (H4 resolution): explicit shard_map expert dispatch —
+    # requires the mesh object; zero-byte dispatch, no replicated GEMMs.
+    moe_shard_map_mesh: object = None
+
+    def _constrain(self, x: jax.Array) -> jax.Array:
+        if not self.act_tp:
+            return x
+        dp = batch_spec(self.mesh_axes)
+        return jax.lax.with_sharding_constraint(x, P(dp, None, "model"))
+
+    # ------------------------------------------------------------------ init --
+    def init(
+        self, key: Optional[jax.Array], abstract: bool = False
+    ) -> Tuple[Params, Params]:
+        """Returns (params, partition-spec tree).  ``abstract=True`` emits
+        ShapeDtypeStructs instead of arrays — the dry-run's no-allocation
+        path (DESIGN.md §5)."""
+        cfg = self.cfg
+        dtype = DTYPES[cfg.dtype]
+        f = ParamFactory(key, dtype, abstract=abstract)
+        f.add("embed", (cfg.padded_vocab, cfg.d_model), ("model", None), scale=0.02)
+        if not cfg.tie_embeddings:
+            f.add("head", (cfg.d_model, cfg.padded_vocab), (None, "model"))
+        f.add("final_norm", (cfg.d_model,), (None,), init="ones")
+
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            lf = f.subfactory("layers", stack_depth=cfg.num_layers)
+            self._dense_block_init(lf, cfg)
+        elif cfg.arch_type == "moe":
+            for i in range(cfg.first_dense_layers):
+                df = f.subfactory(f"dense_{i}")
+                self._dense_block_init(df, cfg)
+            n_moe = cfg.num_layers - cfg.first_dense_layers
+            lf = f.subfactory("layers", stack_depth=n_moe)
+            self._moe_block_init(lf, cfg)
+        elif cfg.arch_type == "ssm":
+            lf = f.subfactory("layers", stack_depth=cfg.num_layers)
+            lf.add("ln", (cfg.d_model,), (None,), init="ones")
+            ssm_mod.ssm_init(lf, cfg)
+        elif cfg.arch_type == "hybrid":
+            k = cfg.shared_attn_every
+            assert cfg.num_layers % k == 0, "hybrid depth must divide superblock"
+            sf = f.subfactory("shared_attn")
+            sf.add("ln", (cfg.d_model,), (None,), init="ones")
+            _attn_init(sf, cfg)
+            lf = f.subfactory("layers", stack_depth=cfg.num_layers // k)
+            for i in range(k):
+                mf = lf.subfactory(f"mamba_{i}")
+                mf.add("ln", (cfg.d_model,), (None,), init="ones")
+                ssm_mod.ssm_init(mf, cfg)
+        else:
+            raise ValueError(cfg.arch_type)
+        if cfg.mtp:
+            mf = f.subfactory("mtp")
+            mf.add("proj", (2 * cfg.d_model, cfg.d_model), (None, "model"))
+            mf.add("norm", (cfg.d_model,), (None,), init="ones")
+        return f.params, f.specs
+
+    def _dense_block_init(self, f: ParamFactory, cfg: ModelConfig) -> None:
+        f.add("ln1", (cfg.d_model,), (None,), init="ones")
+        af = f.subfactory("attn")
+        _attn_init(af, cfg)
+        f.add("ln2", (cfg.d_model,), (None,), init="ones")
+        mf = f.subfactory("mlp")
+        mlp_init(mf, cfg)
+
+    def _moe_block_init(self, f: ParamFactory, cfg: ModelConfig) -> None:
+        f.add("ln1", (cfg.d_model,), (None,), init="ones")
+        af = f.subfactory("attn")
+        _attn_init(af, cfg)
+        f.add("ln2", (cfg.d_model,), (None,), init="ones")
+        mf = f.subfactory("moe")
+        moe_mod.moe_init(mf, cfg)
+
+    # --------------------------------------------------------------- forward --
+    def embed(self, params: Params, tokens: jax.Array) -> jax.Array:
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def logits(self, params: Params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        out = h @ head
+        if cfg.padded_vocab != cfg.vocab_size:
+            # mask the padding ids so sampling/softmax never sees them
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            out = jnp.where(pad_mask, jnp.asarray(-1e30, out.dtype), out)
+        return out
+
+    def _dense_block(self, p, cfg, x, positions):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = self._constrain(x + _attn_forward(p["attn"], cfg, h, positions, self.use_kernels, self.kv_hint))
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return self._constrain(x + mlp_forward(p["mlp"], h))
+
+    def _moe_fn(self, p, cfg, h):
+        if self.moe_shard_map_mesh is not None:
+            mesh = self.moe_shard_map_mesh
+            dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            return moe_mod.moe_forward_shard_map(p, cfg, h, mesh, dp_axes=dp)
+        return moe_mod.moe_forward(p, cfg, h, self.moe_buf_spec)
+
+    def _moe_block(self, p, cfg, x, positions):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = self._constrain(x + _attn_forward(p["attn"], cfg, h, positions, self.use_kernels, self.kv_hint))
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        out, aux = self._moe_fn(p["moe"], cfg, h)
+        return self._constrain(x + out), aux
+
+    def _hybrid_superblock(self, p, shared, cfg, x, positions):
+        for i in range(cfg.shared_attn_every):
+            mp = p[f"mamba_{i}"]
+            h = rmsnorm(x, mp["ln"], cfg.norm_eps)
+            x = x + ssm_mod.ssm_forward(mp, cfg, h)
+        h = rmsnorm(x, shared["ln"], cfg.norm_eps)
+        return x + _attn_forward(shared, cfg, h, positions, self.use_kernels)
+
+    def forward(
+        self,
+        params: Params,
+        tokens: Optional[jax.Array] = None,
+        embeds: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence forward.  Returns (logits, aux_loss)."""
+        h, aux = self.hidden(params, tokens=tokens, embeds=embeds)
+        return self.logits(params, h), aux
+
+    def hidden(
+        self,
+        params: Params,
+        tokens: Optional[jax.Array] = None,
+        embeds: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence forward up to (pre-final-norm) hidden states."""
+        cfg = self.cfg
+        if embeds is None:
+            x = self.embed(params, tokens)
+        else:
+            x = embeds.astype(DTYPES[cfg.dtype])
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        aux_total = jnp.zeros((), jnp.float32)
+
+        maybe_remat = jax.checkpoint if self.remat else (lambda fn: fn)
+
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            @maybe_remat
+            def body(x, lp):
+                return self._dense_block(lp, cfg, x, positions), None
+
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        elif cfg.arch_type == "moe":
+            for i in range(cfg.first_dense_layers):
+                x = self._dense_block(params[f"dense_{i}"], cfg, x, positions)
+
+            @maybe_remat
+            def body(x, lp):
+                x, aux = self._moe_block(lp, cfg, x, positions)
+                return x, aux
+
+            x, auxs = jax.lax.scan(body, x, params["layers"])
+            aux_total = aux_total + jnp.sum(auxs)
+        elif cfg.arch_type == "ssm":
+            @maybe_remat
+            def body(x, lp):
+                h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+                return x + ssm_mod.ssm_forward(lp, cfg, h), None
+
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        elif cfg.arch_type == "hybrid":
+            shared = params["shared_attn"]
+
+            @maybe_remat
+            def body(x, lp):
+                return self._hybrid_superblock(lp, shared, cfg, x, positions), None
+
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, aux_total
+
+    # ----------------------------------------------------------------- cache --
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        dtype = DTYPES[cfg.dtype]
+
+        def stack(n, make):
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(n)])
+
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            return {
+                "layers": stack(
+                    cfg.num_layers, lambda: _attn_init_cache(cfg, batch, max_len, dtype)
+                )
+            }
+        if cfg.arch_type == "moe":
+            out: Params = {}
+            for i in range(cfg.first_dense_layers):
+                out[f"dense_{i}"] = _attn_init_cache(cfg, batch, max_len, dtype)
+            out["layers"] = stack(
+                cfg.num_layers - cfg.first_dense_layers,
+                lambda: _attn_init_cache(cfg, batch, max_len, dtype),
+            )
+            return out
+        if cfg.arch_type == "ssm":
+            return {
+                "layers": stack(
+                    cfg.num_layers, lambda: ssm_mod.ssm_init_cache(cfg, batch, dtype)
+                )
+            }
+        if cfg.arch_type == "hybrid":
+            def superblock():
+                c = {
+                    f"mamba_{i}": ssm_mod.ssm_init_cache(cfg, batch, dtype)
+                    for i in range(cfg.shared_attn_every)
+                }
+                c["attn"] = _attn_init_cache(cfg, batch, max_len, dtype)
+                return c
+
+            return {
+                "layers": stack(cfg.num_layers // cfg.shared_attn_every, superblock)
+            }
+        raise ValueError(cfg.arch_type)
+
+    def cache_specs(
+        self, seq_axis: Optional[str] = None, dp: Optional[Tuple[str, ...]] = None
+    ) -> Params:
+        cfg = self.cfg
+        dp = batch_spec(self.mesh_axes) if dp is None else dp
+
+        def with_layer(spec_tree):
+            return jax.tree.map(
+                lambda s: P(*((None,) + tuple(s))), spec_tree,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+
+        a_specs = _attn_cache_specs(cfg, dp, seq_axis)
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            return {"layers": with_layer(a_specs)}
+        if cfg.arch_type == "moe":
+            out: Params = {}
+            for i in range(cfg.first_dense_layers):
+                out[f"dense_{i}"] = a_specs
+            out["layers"] = with_layer(a_specs)
+            return out
+        if cfg.arch_type == "ssm":
+            return {"layers": with_layer(ssm_mod.ssm_cache_specs(cfg, dp))}
+        if cfg.arch_type == "hybrid":
+            sb = {
+                f"mamba_{i}": ssm_mod.ssm_cache_specs(cfg, dp)
+                for i in range(cfg.shared_attn_every)
+            }
+            sb["attn"] = a_specs
+            return {"layers": with_layer(sb)}
+        raise ValueError(cfg.arch_type)
+
+    # ---------------------------------------------------------------- prefill --
+    def prefill(
+        self,
+        params: Params,
+        tokens: Optional[jax.Array] = None,
+        embeds: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Params]:
+        """Full-sequence serving prefill: last-token logits + the decode cache
+        for every layer (stacked along the scan axis)."""
+        cfg = self.cfg
+        if embeds is None:
+            x = self.embed(params, tokens)
+        else:
+            x = embeds.astype(DTYPES[cfg.dtype])
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        cache: Params = {}
+
+        def attn_prefill(p, h):
+            if cfg.attention_kind == "mla":
+                return attn.mla_prefill(p, cfg, h, positions, self.use_kernels,
+                                        kv_hint=self.kv_hint)
+            return attn.gqa_prefill(p, cfg, h, positions, self.use_kernels,
+                                    kv_hint=self.kv_hint)
+
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            def body(x, lp):
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, c = attn_prefill(lp["attn"], h)
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                return x + mlp_forward(lp["mlp"], h), c
+
+            x, cs = jax.lax.scan(body, x, params["layers"])
+            cache["layers"] = cs
+        elif cfg.arch_type == "moe":
+            for i in range(cfg.first_dense_layers):
+                lp = params[f"dense_{i}"]
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, c = attn_prefill(lp["attn"], h)
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                x = x + mlp_forward(lp["mlp"], h)
+                cache[f"dense_{i}"] = c
+
+            def body(x, lp):
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, c = attn_prefill(lp["attn"], h)
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                out, _ = self._moe_fn(lp["moe"], cfg, h)
+                return x + out, c
+
+            x, cs = jax.lax.scan(body, x, params["layers"])
+            cache["layers"] = cs
+        elif cfg.arch_type == "ssm":
+            def body(x, lp):
+                h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+                y, c = ssm_mod.ssm_prefill(lp, cfg, h)
+                return x + y, c
+
+            x, cs = jax.lax.scan(body, x, params["layers"])
+            cache["layers"] = cs
+        elif cfg.arch_type == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(x, lp):
+                c = {}
+                for i in range(cfg.shared_attn_every):
+                    mp = lp[f"mamba_{i}"]
+                    h = rmsnorm(x, mp["ln"], cfg.norm_eps)
+                    y, ci = ssm_mod.ssm_prefill(mp, cfg, h)
+                    x = x + y
+                    c[f"mamba_{i}"] = ci
+                h = rmsnorm(x, shared["ln"], cfg.norm_eps)
+                a, ca = attn_prefill(shared, h)
+                c["attn"] = ca
+                return x + a, c
+
+            x, cs = jax.lax.scan(body, x, params["layers"])
+            cache["layers"] = cs
+        else:
+            raise ValueError(cfg.arch_type)
+        return self.logits(params, x[:, -1:]), cache
+
+    # ----------------------------------------------------------------- decode --
+    def decode_step(
+        self, params: Params, cache: Params, token: jax.Array, pos: jax.Array
+    ) -> Tuple[jax.Array, Params]:
+        """token: (B, 1) int32; pos: scalar int32.  Returns (logits, cache)."""
+        cfg = self.cfg
+        x = self.embed(params, token)
+        new_cache: Params = {}
+
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            def body(x, xs):
+                lp, lc = xs
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nc = _attn_decode(lp["attn"], cfg, h, lc, pos)
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                return x + mlp_forward(lp["mlp"], h), nc
+
+            x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.arch_type == "moe":
+            for i in range(cfg.first_dense_layers):
+                lp = params[f"dense_{i}"]
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nc = _attn_decode(lp["attn"], cfg, h, cache[f"dense_{i}"], pos)
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                x = x + mlp_forward(lp["mlp"], h)
+                new_cache[f"dense_{i}"] = nc
+
+            def body(x, xs):
+                lp, lc = xs
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nc = _attn_decode(lp["attn"], cfg, h, lc, pos)
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                out, _ = self._moe_fn(lp["moe"], cfg, h)
+                return x + out, nc
+
+            x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.arch_type == "ssm":
+            def body(x, xs):
+                lp, lc = xs
+                h = rmsnorm(x, lp["ln"], cfg.norm_eps)
+                y, nc = ssm_mod.ssm_decode(lp, cfg, h, lc)
+                return x + y, nc
+
+            x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.arch_type == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(x, xs):
+                lp, lc = xs
+                nc = {}
+                for i in range(cfg.shared_attn_every):
+                    mp = lp[f"mamba_{i}"]
+                    h = rmsnorm(x, mp["ln"], cfg.norm_eps)
+                    y, c = ssm_mod.ssm_decode(mp, cfg, h, lc[f"mamba_{i}"])
+                    x = x + y
+                    nc[f"mamba_{i}"] = c
+                h = rmsnorm(x, shared["ln"], cfg.norm_eps)
+                a, c = _attn_decode(shared, cfg, h, lc["attn"], pos)
+                nc["attn"] = c
+                return x + a, nc
+
+            x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        else:
+            raise ValueError(cfg.arch_type)
+        return self.logits(params, x), new_cache

@@ -1,0 +1,387 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute_term    = HLO_FLOPs   / (chips · peak_FLOP/s)
+  memory_term     = HLO_bytes   / (chips · HBM_bw)
+  collective_term = coll_bytes  / (chips · ICI_link_bw)
+
+``compiled.cost_analysis()`` supplies FLOPs and bytes accessed.
+Collective bytes are **not** in cost_analysis: :func:`collective_bytes`
+parses the post-SPMD HLO text and sums the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+The partitioned module is per-device, so parsed sizes are per-device; the
+spec's global formula multiplies back by chip count (the two cancel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string like ``bf16[128,4096]{1,0}`` (sums all
+    array shapes found, so tuple shapes work too)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"%?[\w.\-]+ = (.+?) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\("
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"\bwhile\(.*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALL_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes from post-SPMD HLO text.
+
+    Computation-graph aware: collectives inside a ``while`` body are
+    multiplied by the loop's ``known_trip_count`` (scan-over-layers would
+    otherwise be undercounted by the layer count); ``conditional`` branches
+    contribute their max; fusion/reducer calls are traversed once.
+    """
+    # -- split into computations -------------------------------------------------
+    comps: Dict[str, List[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m and s.endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str, stack=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {k: 0.0 for k in _COLLECTIVES}
+        total = {k: 0.0 for k in _COLLECTIVES}
+        for line in comps[name]:
+            m = _COLL_RE.match(line)
+            if m:
+                total[m.group(2)] += _shape_bytes(m.group(1))
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                sub = walk(wm.group(1), stack + (name,))
+                for k in total:
+                    total[k] += trips * sub[k]
+                continue
+            cm = _COND_RE.search(line)
+            if cm:
+                branches = [b.strip().lstrip("%") for b in cm.group(1).split(",")]
+                subs = [walk(b, stack + (name,)) for b in branches if b]
+                if subs:
+                    for k in total:
+                        total[k] += max(s[k] for s in subs)
+                continue
+            am = _CALL_RE.search(line)
+            if am and "while" not in line:
+                sub = walk(am.group(1), stack + (name,))
+                for k in total:
+                    total[k] += sub[k]
+        memo[name] = total
+        return total
+
+    root = entry or (next(iter(comps)) if comps else None)
+    if root is None:
+        return {k: 0 for k in _COLLECTIVES}
+    return {k: int(v) for k, v in walk(root).items()}
+
+
+_DOT_RE = re.compile(r"dot\(")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],]+(?:\{[\d,]*\})?)\s+(\w[\w\-]*)")
+_OPERANDS_RE = re.compile(r"\w[\w\-]*\(([^)]*)\)")
+
+
+def _parse_dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def hlo_cost(hlo_text: str) -> Dict[str, float]:
+    """Trip-count-aware FLOPs and bytes from post-SPMD HLO text.
+
+    ``compiled.cost_analysis()`` visits a ``while`` body once, so
+    scan-over-layers models are undercounted by the layer count; this parser
+    walks the computation graph (while bodies × known_trip_count,
+    conditional branches by max, fusion/reducer calls once per call site).
+
+    FLOPs: 2·|out|·K for every ``dot`` (K = contracted extent from the lhs
+    operand's definition); element-wise ops are not counted (they are <1% of
+    matmul FLOPs at these sizes).  Bytes: per op, output bytes + operand
+    bytes (operand shapes resolved through the per-computation symbol
+    table) — the same operands+outputs convention cost_analysis uses, i.e.
+    an upper bound on unique HBM traffic.
+    """
+    comps: Dict[str, List[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for raw in hlo_text.splitlines():
+        s = raw.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(s)
+            if m and s.endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+
+    # symbol tables: op name -> full shape string (per computation)
+    tables: Dict[str, Dict[str, str]] = {}
+    for name, lines in comps.items():
+        t: Dict[str, str] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                t[dm.group(1)] = dm.group(2)
+        tables[name] = t
+
+    memo: Dict[str, Tuple[float, float]] = {}
+
+    # bookkeeping opcodes: no real data movement of their own (tuples alias;
+    # while/conditional/fusion bodies are walked separately; parameters are
+    # read by their consumers)
+    SKIP = {
+        "tuple", "get-tuple-element", "parameter", "while", "conditional",
+        "call", "fusion", "constant", "iota", "after-all", "bitcast",
+        "bitcast-convert", "get-dimension-size",
+        # convert is a CPU-lowering artifact (XLA CPU upcasts bf16 dots to
+        # f32); on the TPU target the MXU consumes bf16 natively
+        "convert",
+    }
+
+    def op_bytes(line: str, table: Dict[str, str]) -> float:
+        """Output bytes of every compute op, plus operand bytes for dots
+        (weight/cache streaming dominates and would otherwise be missed).
+        dynamic-update-slice counts its *update* operand, not the aliased
+        full buffer — inside a loop the buffer is updated in place and the
+        full-shape output would otherwise be multiplied by the trip count."""
+        dm = _DEF_RE.match(line)
+        if not dm:
+            return 0.0
+        opcode = dm.group(3)
+        if opcode in SKIP:
+            return 0.0
+        if opcode == "dynamic-update-slice":
+            om = _OPERANDS_RE.search(line)
+            if om:
+                ops = [o.strip().lstrip("%") for o in om.group(1).split(",")]
+                if len(ops) >= 2:
+                    shape = table.get(ops[1])
+                    if shape and not shape.startswith("("):
+                        return 2.0 * _shape_bytes(shape)  # read+write of slice
+            return 0.0
+        total = float(_shape_bytes(dm.group(2)))
+        if opcode == "dot":
+            om = _OPERANDS_RE.search(line)
+            if om:
+                for operand in om.group(1).split(","):
+                    operand = operand.strip().lstrip("%")
+                    shape = table.get(operand)
+                    if shape and not shape.startswith("("):
+                        total += _shape_bytes(shape)
+        return total
+
+    def dot_flops(line: str, table: Dict[str, str]) -> float:
+        dm = _DEF_RE.match(line)
+        om = _OPERANDS_RE.search(line)
+        cm = _LHS_CONTRACT_RE.search(line)
+        if not (dm and om and cm):
+            return 0.0
+        _, out_dims = _parse_dims(dm.group(2))
+        lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
+        lhs_shape = table.get(lhs_name, "")
+        _, lhs_dims = _parse_dims(lhs_shape)
+        if not lhs_dims:
+            return 0.0
+        k = 1
+        if cm.group(1):
+            for idx in cm.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        return 2.0 * out_n * k
+
+    def walk(name: str, stack=()) -> Tuple[float, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0)
+        table = tables[name]
+        flops = 0.0
+        nbytes = 0.0
+        for line in comps[name]:
+            if _DOT_RE.search(line):
+                flops += dot_flops(line, table)
+            nbytes += op_bytes(line, table)
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                f, b = walk(wm.group(1), stack + (name,))
+                flops += trips * f
+                nbytes += trips * b
+                continue
+            cm2 = _COND_RE.search(line)
+            if cm2:
+                branches = [b.strip().lstrip("%") for b in cm2.group(1).split(",")]
+                subs = [walk(b, stack + (name,)) for b in branches if b]
+                if subs:
+                    flops += max(s[0] for s in subs)
+                    nbytes += max(s[1] for s in subs)
+                continue
+            am = _CALL_RE.search(line) or re.search(r"calls=%?([\w.\-]+)", line)
+            if am and "while" not in line:
+                f, b = walk(am.group(1), stack + (name,))
+                flops += f
+                nbytes += b
+        memo[name] = (flops, nbytes)
+        return memo[name]
+
+    root = entry or (next(iter(comps)) if comps else None)
+    if root is None:
+        return {"flops": 0.0, "bytes": 0.0}
+    f, b = walk(root)
+    return {"flops": f, "bytes": b}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: Dict[str, int]
+    model_flops: float  # 6·N·D (dense) / 6·N_active·D (MoE) for the step
+    peak_memory_per_device: Optional[float] = None
+    output_bytes_per_device: Optional[float] = None
+
+    # -- the three terms (seconds) ------------------------------------------------
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return sum(self.collective_bytes_per_device.values()) / hw.ICI_BW_PER_LINK
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs — catches remat/redundancy."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops": self.model_flops,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "output_bytes_per_device": self.output_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_step_flops(cfg, shape) -> float:
+    """MODEL_FLOPS for one step: 6·N·D for training, 2·N·D for inference
+    (prefill), 2·N_active·B for one decode token — N_active for MoE."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # one decode token
+
+
+def load_report(path: str) -> RooflineReport:
+    with open(path) as f:
+        d = json.load(f)
+    return RooflineReport(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], chips=d["chips"],
+        flops_per_device=d["flops_per_device"],
+        bytes_per_device=d["bytes_per_device"],
+        collective_bytes_per_device=d["collective_bytes_per_device"],
+        model_flops=d["model_flops"],
+        peak_memory_per_device=d.get("peak_memory_per_device"),
+        output_bytes_per_device=d.get("output_bytes_per_device"),
+    )

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (the roofline denominators)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, FLOP/s
+HBM_BW = 819e9  # per chip, bytes/s
+HBM_BYTES = 16e9  # per chip
+ICI_BW_PER_LINK = 50e9  # bytes/s per link
+ICI_LINKS = 4  # torus links per chip (2D mesh)

@@ -1,0 +1,9 @@
+"""Serving runtime: per-instance engines and the service-level router."""
+
+from repro.serving.engine import Engine, Request, ServeStats, run_closed_loop
+from repro.serving.router import InstanceHandle, WeightedRouter
+
+__all__ = [
+    "Engine", "InstanceHandle", "Request", "ServeStats", "WeightedRouter",
+    "run_closed_loop",
+]

@@ -1,0 +1,93 @@
+"""Paged KV-cache pool management (the host side of paged attention).
+
+A :class:`PagePool` owns a fixed page inventory per layer; requests allocate
+pages as their context grows and release them on completion.  The pool is
+the serving-engine counterpart of ``repro.kernels.paged_attention`` — it
+produces the (page_tables, lengths) the kernel consumes.
+
+This is deliberately simple (free-list, no copy-on-write/prefix sharing);
+the point is that MIG-Serving's slice scheduler and a paged engine compose:
+a slice's HBM budget translates directly to ``num_pages``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class RequestPages:
+    rid: int
+    page_ids: List[int]
+    length: int = 0
+
+
+class PagePool:
+    def __init__(self, num_pages: int, page_size: int, max_pages_per_req: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_req = max_pages_per_req
+        self._free: List[int] = list(range(num_pages))
+        self._requests: Dict[int, RequestPages] = {}
+
+    # -- lifecycle ---------------------------------------------------------------
+    def admit(self, rid: int) -> RequestPages:
+        assert rid not in self._requests
+        r = RequestPages(rid, [])
+        self._requests[rid] = r
+        return r
+
+    def release(self, rid: int) -> None:
+        r = self._requests.pop(rid)
+        self._free.extend(r.page_ids)
+
+    def append_tokens(self, rid: int, n: int = 1) -> None:
+        """Grow a request's context by ``n`` tokens, allocating pages on
+        boundary crossings.  Raises :class:`OutOfPages` when the pool (or the
+        per-request table) is exhausted — the engine's admission signal."""
+        r = self._requests[rid]
+        new_len = r.length + n
+        needed = -(-new_len // self.page_size)  # ceil
+        while len(r.page_ids) < needed:
+            if len(r.page_ids) >= self.max_pages_per_req:
+                raise OutOfPages(f"request {rid} exceeds max context")
+            if not self._free:
+                raise OutOfPages("page pool exhausted")
+            r.page_ids.append(self._free.pop())
+        r.length = new_len
+
+    # -- kernel inputs --------------------------------------------------------------
+    def tables(self, rids: List[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """(page_tables (B, max_pages), lengths (B,)) for the given batch.
+        Unused slots point at page 0 (a legal dummy; masked by length)."""
+        B = len(rids)
+        pt = np.zeros((B, self.max_pages_per_req), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, rid in enumerate(rids):
+            r = self._requests[rid]
+            pt[i, : len(r.page_ids)] = r.page_ids
+            lens[i] = r.length
+        return pt, lens
+
+    # -- accounting ---------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self._free) / self.num_pages
+
+    def hbm_bytes(self, kv_heads: int, head_dim: int, n_layers: int,
+                  dtype_bytes: int = 2) -> int:
+        """Pool HBM footprint — what a slice's capacity check consumes."""
+        return (
+            2 * self.num_pages * self.page_size * kv_heads * head_dim
+            * n_layers * dtype_bytes
+        )

@@ -1,0 +1,45 @@
+"""Service router: load-balances one service's requests over its instances.
+
+MIG-Serving "relies on load balancing systems to dispatch user requests
+accordingly" (§7) when a service runs with different batch sizes on
+different-sized instances — this module is that system: weighted round-robin
+proportional to each instance's profiled throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class InstanceHandle:
+    instance_id: int
+    size: int
+    throughput: float  # profiled req/s (the router weight)
+    dispatched: int = 0
+
+
+class WeightedRouter:
+    """Deterministic smooth weighted round-robin."""
+
+    def __init__(self, instances: Sequence[InstanceHandle]):
+        assert instances, "router needs at least one instance"
+        self.instances = list(instances)
+        self._current = [0.0] * len(self.instances)
+
+    def pick(self) -> InstanceHandle:
+        total = sum(i.throughput for i in self.instances)
+        best_i = 0
+        for idx, inst in enumerate(self.instances):
+            self._current[idx] += inst.throughput
+            if self._current[idx] > self._current[best_i]:
+                best_i = idx
+        self._current[best_i] -= total
+        inst = self.instances[best_i]
+        inst.dispatched += 1
+        return inst
+
+    def dispatch_counts(self) -> Dict[int, int]:
+        return {i.instance_id: i.dispatched for i in self.instances}

@@ -1,0 +1,9 @@
+"""Training substrate: AdamW, synthetic data, train step, checkpoints."""
+
+from repro.training import adamw, checkpoint, data
+from repro.training.train_loop import cross_entropy, make_loss_fn, make_train_step
+
+__all__ = [
+    "adamw", "checkpoint", "cross_entropy", "data",
+    "make_loss_fn", "make_train_step",
+]

@@ -1,0 +1,44 @@
+"""Minimal sharded checkpointing: params/opt-state pytrees → .npz files.
+
+Flattens the pytree with '/'-joined key paths; restores exactly.  Good enough
+for the example drivers and deterministic tests (no orbax in this container).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz cannot round-trip ml_dtypes
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, **_flatten(tree))
+
+
+def restore(path: str, like: Any) -> Any:
+    data = np.load(path)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    out = []
+    for (path_keys, leaf) in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return treedef.unflatten(out)

@@ -1,0 +1,75 @@
+"""Training step: loss, grads, AdamW update — all shardable under pjit.
+
+Loss = causal cross-entropy (+ MoE load-balance aux, + the DeepSeek-V3 MTP
+head when configured).  ``make_train_step`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with in/out shardings from :mod:`repro.launch.shardings`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.models.common import rmsnorm
+from repro.models.config import ModelConfig
+from repro.training import adamw
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _mtp_loss(model: Model, params: Any, h: jax.Array, batch: Dict) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction, depth-1: predict label_{t+1}
+    (the token two ahead) from [h_t ; embed(label_t)] through the MTP
+    projection and the shared output head."""
+    cfg = model.cfg
+    labels = batch["labels"]
+    emb_next = jnp.take(params["embed"], labels, axis=0)  # label_t = token t+1
+    feat = jnp.concatenate([h[:, :-1], emb_next[:, :-1]], axis=-1)
+    h_mtp = rmsnorm(feat @ params["mtp"]["proj"], params["mtp"]["norm"], cfg.norm_eps)
+    logits = model.logits(params, h_mtp)
+    return cross_entropy(logits, labels[:, 1:])
+
+
+def make_loss_fn(model: Model):
+    cfg = model.cfg
+
+    def loss_fn(params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        h, aux = model.hidden(
+            params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+        )
+        logits = model.logits(params, h)
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce + cfg.router_aux_weight * aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp:
+            mtp = _mtp_loss(model, params, h, batch)
+            loss = loss + 0.3 * mtp
+            metrics["mtp"] = mtp
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, gnorm = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,122 @@
+"""Controller tests: exchange-and-compact transparency guarantee (§6).
+
+The paper's invariant: during a transition, every service's throughput stays
+>= min(old required, new required).  We assert it from the cluster trace for
+many random day/night workload pairs (hypothesis).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SLO,
+    ConfigSpace,
+    Controller,
+    GreedyFast,
+    SimulatedCluster,
+    SyntheticPaperProfiles,
+    Workload,
+    a100_rules,
+    parallel_makespan,
+)
+from repro.core.controller import _config_content, _gpu_content
+from collections import Counter
+
+
+def make_pair(seed: int, n=5):
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed)
+    rng = np.random.default_rng(seed + 100)
+    day = {m: SLO(float(rng.lognormal(6.8, 0.5)), 100.0) for m in prof.services()}
+    night = {
+        m: SLO(day[m].throughput * float(rng.uniform(0.2, 0.6)), 100.0)
+        for m in prof.services()
+    }
+    return prof, Workload.make(day), Workload.make(night)
+
+
+def deploy(prof, wl):
+    return GreedyFast(ConfigSpace(a100_rules(), prof, wl)).solve()
+
+
+def run_transition(prof, wl_from, wl_to, extra=2):
+    dep_from = deploy(prof, wl_from)
+    dep_to = deploy(prof, wl_to)
+    ctrl = Controller(a100_rules(), prof)
+    cluster = SimulatedCluster(a100_rules(), dep_from.num_gpus + extra)
+    ctrl.deploy_fresh(cluster, dep_from)
+    n0 = len(cluster.actions_applied)
+    report = ctrl.transition(cluster, dep_to)
+    return cluster, report, dep_from, dep_to, n0
+
+
+class TestExchangeAndCompact:
+    def test_day2night_and_back(self):
+        prof, day, night = make_pair(seed=7)
+        cluster, rep, dep_day, dep_night, n0 = run_transition(prof, day, night)
+        # final content == target deployment content
+        want = Counter()
+        for c in dep_night.configs:
+            want += _config_content(c)
+        have = Counter()
+        for g in cluster.gpus.values():
+            have += _gpu_content(g)
+        assert want == have
+        assert rep.final_gpus_busy <= dep_night.num_gpus
+        # invariant from the trace
+        for _, tp in cluster.trace[n0:]:
+            for svc in prof.services():
+                lo = min(
+                    day.services[day.index(svc)].slo.throughput,
+                    night.services[night.index(svc)].slo.throughput,
+                )
+                assert tp.get(svc, 0.0) >= lo - 1e-6
+
+    def test_parallel_not_slower_than_serial(self):
+        prof, day, night = make_pair(seed=3)
+        _, rep, *_ = run_transition(prof, day, night)
+        assert rep.parallel_seconds <= rep.serial_seconds + 1e-9
+
+    def test_shrinking_mostly_deletes_growing_mostly_creates(self):
+        """Figure 13b's qualitative claim."""
+        prof, day, night = make_pair(seed=11)
+        cluster, rep_shrink, *_ = run_transition(prof, day, night)
+        counts_shrink = rep_shrink.action_counts
+        ctrl = Controller(a100_rules(), prof)
+        rep_grow = ctrl.transition(cluster, deploy(prof, day))
+        counts_grow = rep_grow.action_counts
+        assert counts_shrink.get("delete", 0) >= counts_shrink.get("create", 0)
+        assert counts_grow.get("create", 0) >= counts_grow.get("delete", 0)
+
+    @given(seed=st.integers(0, 40))
+    @settings(max_examples=10, deadline=None)
+    def test_invariant_property(self, seed):
+        prof, day, night = make_pair(seed=seed, n=4)
+        cluster, rep, dep_day, dep_night, n0 = run_transition(prof, day, night)
+        for _, tp in cluster.trace[n0:]:
+            for svc in prof.services():
+                lo = min(
+                    day.services[day.index(svc)].slo.throughput,
+                    night.services[night.index(svc)].slo.throughput,
+                )
+                assert tp.get(svc, 0.0) >= lo - 1e-6
+        # every intermediate partition stayed legal is enforced by apply();
+        # final state must carry the full new content
+        want = Counter()
+        for c in dep_night.configs:
+            want += _config_content(c)
+        have = Counter()
+        for g in cluster.gpus.values():
+            have += _gpu_content(g)
+        assert want == have
+
+
+class TestMakespan:
+    def test_disjoint_actions_overlap(self):
+        from repro.core.cluster import Action
+
+        a1 = Action("create", 0, size=1, service="s")
+        a2 = Action("create", 1, size=1, service="s")
+        assert parallel_makespan([a1, a2]) == pytest.approx(a1.seconds())
+        a3 = Action("create", 0, size=1, service="s")
+        assert parallel_makespan([a1, a3]) == pytest.approx(2 * a1.seconds())

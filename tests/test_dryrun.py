@@ -1,0 +1,53 @@
+"""Dry-run integration: the production mesh lowers+compiles in a subprocess
+(the 512-device XLA flag must be set before jax initialises, so these tests
+shell out instead of importing repro.launch.dryrun in-process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(REPO, "src")
+
+
+def run_dryrun(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, timeout=560,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "arch,shape",
+    [("internvl2-1b", "decode_32k"), ("mamba2-370m", "long_500k")],
+)
+def test_single_pod_lowers(arch, shape, tmp_path):
+    r = run_dryrun("--arch", arch, "--shape", shape, "--out-dir", str(tmp_path))
+    assert r.returncode == 0, r.stdout + r.stderr
+    files = list(tmp_path.glob("*.json"))
+    assert len(files) == 1
+    d = json.loads(files[0].read_text())
+    assert d["chips"] == 256
+    assert d["flops_per_device"] > 0
+    assert d["compile_seconds"] > 0
+
+
+@pytest.mark.slow
+def test_multi_pod_lowers(tmp_path):
+    r = run_dryrun(
+        "--arch", "internvl2-1b", "--shape", "train_4k",
+        "--multi-pod", "--out-dir", str(tmp_path),
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    d = json.loads(next(tmp_path.glob("*.json")).read_text())
+    assert d["chips"] == 512
+    assert d["mesh"].startswith("2x16x16")
+    # gradient sync across the pod axis must appear as collectives
+    assert sum(d["collective_bytes_per_device"].values()) > 0

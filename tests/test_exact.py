@@ -1,0 +1,52 @@
+"""Exact pair-space solver + universal lower bound (beyond-paper)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SLO,
+    ConfigSpace,
+    GreedyFast,
+    SyntheticPaperProfiles,
+    Workload,
+    a100_rules,
+    lower_bound_gpus,
+)
+from repro.core.exact import PairSpaceExact, per_service_lower_bound
+
+
+def small(seed, n=3, scale=6.0):
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed)
+    rng = np.random.default_rng(seed)
+    wl = Workload.make(
+        {m: SLO(float(rng.lognormal(scale, 0.5)), 100.0) for m in prof.services()}
+    )
+    return prof, wl
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_exact_not_worse_than_greedy_and_bounded(seed):
+    prof, wl = small(seed)
+    space = ConfigSpace(a100_rules(), prof, wl)
+    greedy = GreedyFast(space).solve()
+    exact, done = PairSpaceExact(space, node_limit=300_000).solve(greedy)
+    assert exact.is_valid(wl)
+    assert exact.num_gpus <= greedy.num_gpus
+    lb = max(lower_bound_gpus(a100_rules(), prof, wl), per_service_lower_bound(space))
+    assert exact.num_gpus >= lb
+    if done:
+        # certified optimum over the pair space
+        assert exact.num_gpus <= greedy.num_gpus
+
+
+def test_per_service_bound_is_valid():
+    """The universal per-service bound never exceeds the certified optimum
+    (it complements the LP bound; for balanced workloads LP dominates)."""
+    for seed in range(4):
+        prof, wl = small(seed)
+        space = ConfigSpace(a100_rules(), prof, wl)
+        ps = per_service_lower_bound(space)
+        assert ps >= 1
+        greedy = GreedyFast(space).solve()
+        exact, done = PairSpaceExact(space, node_limit=200_000).solve(greedy)
+        assert ps <= exact.num_gpus

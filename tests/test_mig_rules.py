@@ -1,0 +1,104 @@
+"""Rule-set tests: A100 MIG legality (§2.1 / Figure 2) and TPU slices."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mig import a100_rules
+from repro.core.rms import validate_partition_universe
+from repro.core.tpu_slice import SLICE_SHAPES, tpu_slice_rules
+
+
+class TestA100Rules:
+    def setup_method(self):
+        self.r = a100_rules()
+
+    def test_universe_valid(self):
+        validate_partition_universe(self.r)
+
+    def test_paper_examples(self):
+        r = self.r
+        # §2.1: "an A100 cannot allocate a 3/7 instance when having a running
+        # 4/7 instance" — the hard-coded no 4+3 rule
+        assert not r.is_legal_partition((3, 4))
+        # "3/7 + 3/7 is possible but not shown in the figure"
+        assert r.is_legal_partition((3, 3))
+        # the shaded Figure-2 example: 4/7 + 2/7 + 1/7
+        assert r.is_legal_partition((1, 2, 4))
+        # 5/7 and 6/7 instances do not exist
+        assert 5 not in r.instance_sizes and 6 not in r.instance_sizes
+
+    def test_free_slices_do_not_imply_allocatable(self):
+        r = self.r
+        # two 3/7 instances leave one free slice, but 2/7 needs an aligned pair
+        assert not r.is_legal_partition((2, 3, 3))
+        # ... while a 1/7 fits
+        assert r.is_legal_partition((1, 3, 3))
+
+    def test_full_partition_count(self):
+        # 11 maximal multisets (NVIDIA's "18 combinations" counts
+        # placement-distinct variants; the scheduler works on multisets)
+        assert len(self.r.full_partitions()) == 11
+
+    def test_seven_is_exclusive(self):
+        assert self.r.is_legal_partition((7,))
+        assert not self.r.is_legal_partition((1, 7))
+
+    def test_rule_reconf_merge_and_split(self):
+        r = self.r
+        # merge two 1/7 into a 2/7 without touching the rest
+        assert r.rule_reconf((1, 1), (2,), (1, 1, 1, 1, 1, 1, 1))
+        # splitting a 4/7 into 4 × 1/7
+        assert r.rule_reconf((4,), (1, 1, 1, 1), (1, 2, 4))
+        # illegal: result contains 4+3
+        assert not r.rule_reconf((1, 2), (3,), (1, 2, 4))
+        # removing something not present
+        assert not r.rule_reconf((3,), (1, 1, 1), (1, 2, 4))
+
+    @given(st.lists(st.sampled_from([1, 2, 3, 4, 7]), min_size=1, max_size=7))
+    @settings(max_examples=200, deadline=None)
+    def test_legality_is_order_invariant_and_downward_closed(self, sizes):
+        r = self.r
+        part = tuple(sorted(sizes))
+        legal = r.is_legal_partition(part)
+        if legal:
+            # any sub-multiset of a legal partition is legal
+            for i in range(len(part)):
+                sub = part[:i] + part[i + 1 :]
+                assert r.is_legal_partition(sub), (part, sub)
+
+
+class TestTpuSliceRules:
+    def setup_method(self):
+        self.r = tpu_slice_rules()
+
+    def test_universe_valid(self):
+        validate_partition_universe(self.r)
+
+    def test_alignment_is_the_mig_analogue(self):
+        r = self.r
+        # 16 chips fully tileable by four 4-chip slices
+        assert r.is_legal_partition((4, 4, 4, 4))
+        # 8+4+4 legal; but three 8s never fit
+        assert r.is_legal_partition((4, 4, 8))
+        assert not r.is_legal_partition((8, 8, 8))
+        # "free chips != allocatable slice": 4+2+2... leaves 8 free chips but
+        # an aligned 2x4 8-slice may be blocked by placement
+        assert sum((2, 2, 4)) + 8 <= 16
+        # power-of-two only (the 5/7-6/7 analogue)
+        assert set(r.instance_sizes) == set(SLICE_SHAPES)
+
+    @given(st.lists(st.sampled_from([1, 2, 4, 8, 16]), min_size=1, max_size=16))
+    @settings(max_examples=150, deadline=None)
+    def test_downward_closed(self, sizes):
+        r = self.r
+        part = tuple(sorted(sizes))
+        if r.is_legal_partition(part):
+            for i in range(len(part)):
+                assert r.is_legal_partition(part[:i] + part[i + 1 :])
+
+    def test_mesh_shapes(self):
+        from repro.core.tpu_slice import slice_mesh_shape
+
+        for s, (h, w) in SLICE_SHAPES.items():
+            assert h * w == s
+            assert slice_mesh_shape(s) == (h, w)

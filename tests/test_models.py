@@ -1,0 +1,165 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU) and
+decode/forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, long_context_variant
+from repro.models import Model
+from repro.training import adamw, data, make_train_step
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg, remat=False)
+    params, specs = m.init(jax.random.PRNGKey(0))
+    assert jax.tree.structure(params) == jax.tree.structure(specs)
+    B, S = 2, 32
+    if cfg.modality == "text":
+        logits, aux = m.forward(
+            params, tokens=jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        )
+    else:
+        logits, aux = m.forward(
+            params, embeds=jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+        )
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg, remat=False)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(m, adamw.AdamWConfig(lr=1e-3)))
+    ostate = adamw.init(params)
+    batch = data.synthetic_batch(cfg, data.DataConfig(batch=2, seq_len=32), 0)
+    params2, ostate2, metrics = step(params, ostate, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "granite-20b", "mamba2-370m",
+                                  "zamba2-1.2b", "deepseek-v2-236b", "musicgen-large"])
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg, remat=False)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    if cfg.modality == "text":
+        full, _ = m.forward(params, tokens=toks)
+    else:
+        full, _ = m.forward(params, embeds=jnp.take(params["embed"], toks, axis=0))
+    cache = m.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = m.decode_step(params, cache, toks[:, t : t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1).astype(jnp.float32)
+    full = full.astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(dec - full))) / (float(jnp.max(jnp.abs(full))) + 1e-9)
+    assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "zamba2-1.2b", "deepseek-v3-671b"])
+def test_prefill_matches_forward_and_seeds_decode(arch):
+    cfg = get_smoke_config(arch)
+    m = Model(cfg, remat=False)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    full, _ = m.forward(params, tokens=toks)
+    lgp, cache = m.prefill(params, tokens=toks)
+    rel = float(jnp.max(jnp.abs(lgp[:, 0].astype(jnp.float32) - full[:, -1].astype(jnp.float32))))
+    assert rel < 1e-3
+    # prefill cache sizes equal prompt length; decoding continues with pos=S...
+    # grow a fresh cache instead (ring semantics differ); here we check the
+    # prefill cache layer-stacks exist with the right leading dim
+    n_layers = {
+        "dense": cfg.num_layers, "vlm": cfg.num_layers, "audio": cfg.num_layers,
+        "moe": cfg.num_layers - cfg.first_dense_layers,
+        "ssm": cfg.num_layers,
+        "hybrid": cfg.num_layers // max(1, cfg.shared_attn_every),
+    }[cfg.arch_type]
+    lead = jax.tree.leaves(cache["layers"])[0].shape[0]
+    assert lead == n_layers
+
+
+def test_sliding_window_variant_limits_cache():
+    cfg = long_context_variant(get_smoke_config("qwen3-8b"), window=8)
+    m = Model(cfg, remat=False)
+    cache = m.init_cache(2, max_len=64)
+    k = cache["layers"]["k"]
+    assert k.shape[2] == 8  # (L, B, W, KV, hd) ring buffer
+    # ring decode still matches full attention within the window ... smoke:
+    params, _ = m.init(jax.random.PRNGKey(0))
+    lg, cache = m.decode_step(params, cache, jnp.zeros((2, 1), jnp.int32), jnp.int32(20))
+    assert not bool(jnp.any(jnp.isnan(lg.astype(jnp.float32))))
+
+
+def test_full_configs_match_assignment():
+    """The exact numbers from the assignment block."""
+    expect = {
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=32000, ssm_state=64),
+        "qwen3-8b": dict(num_layers=36, d_model=4096, num_heads=32, num_kv_heads=8, d_ff=12288, vocab_size=151936),
+        "mamba2-370m": dict(num_layers=48, d_model=1024, d_ff=0, vocab_size=50280, ssm_state=128),
+        "internvl2-1b": dict(num_layers=24, d_model=896, num_heads=14, num_kv_heads=2, d_ff=4864, vocab_size=151655),
+        "phi4-mini-3.8b": dict(num_layers=32, d_model=3072, num_heads=24, num_kv_heads=8, d_ff=8192, vocab_size=200064),
+        "musicgen-large": dict(num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=2048),
+        "deepseek-v2-236b": dict(num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128, vocab_size=102400, num_experts=160, experts_per_token=6, kv_lora_rank=512, moe_d_ff=1536),
+        "granite-20b": dict(num_layers=52, d_model=6144, num_heads=48, num_kv_heads=1, d_ff=24576, vocab_size=49152),
+        "deepseek-v3-671b": dict(num_layers=61, d_model=7168, num_heads=128, num_kv_heads=128, vocab_size=129280, num_experts=256, experts_per_token=8, moe_d_ff=2048, mtp=True),
+        "llama3-405b": dict(num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8, d_ff=53248, vocab_size=128256),
+    }
+    for arch, fields in expect.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+        assert cfg.citation
+
+
+def test_param_counts_plausible():
+    """Sanity: derived parameter counts are in the advertised ballpark."""
+    approx = {
+        "qwen3-8b": (8e9, 0.35),
+        "llama3-405b": (405e9, 0.15),
+        "mamba2-370m": (370e6, 0.35),
+        "deepseek-v2-236b": (236e9, 0.25),
+        "deepseek-v3-671b": (671e9, 0.25),
+        "granite-20b": (20e9, 0.35),
+    }
+    for arch, (n, tol) in approx.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < tol, (arch, got, n)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "musicgen-large"])
+def test_use_kernels_matches_jnp_path(arch):
+    """End-to-end: the Pallas-kernel attention path (interpret mode) agrees
+    with the pure-jnp model forward."""
+    cfg = get_smoke_config(arch)
+    mk = Model(cfg, remat=False, use_kernels=True)
+    mj = Model(cfg, remat=False, use_kernels=False)
+    params, _ = mj.init(jax.random.PRNGKey(0))
+    B, S = 2, 128  # tile-aligned so the kernel path engages
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    if cfg.modality == "text":
+        lk, _ = mk.forward(params, tokens=toks)
+        lj, _ = mj.forward(params, tokens=toks)
+    else:
+        emb = jnp.take(params["embed"], toks, axis=0)
+        lk, _ = mk.forward(params, embeds=emb)
+        lj, _ = mj.forward(params, embeds=emb)
+    err = float(jnp.max(jnp.abs(lk.astype(jnp.float32) - lj.astype(jnp.float32))))
+    assert err < 0.15  # bf16 accumulation-order differences only

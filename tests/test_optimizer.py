@@ -1,0 +1,156 @@
+"""Optimizer tests: config space, greedy, MCTS, GA, two-phase (§5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SLO,
+    BeamGreedy,
+    ConfigSpace,
+    Deployment,
+    GreedyFast,
+    MCTSSlow,
+    SyntheticPaperProfiles,
+    TwoPhaseOptimizer,
+    Workload,
+    a100_rules,
+    baseline_homogeneous,
+    lower_bound_gpus,
+    mutate_swap,
+    tpu_slice_rules,
+)
+
+
+def small_problem(n=8, seed=2, scale=7.2):
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed)
+    rng = np.random.default_rng(seed)
+    slos = {m: SLO(float(rng.lognormal(scale, 0.7)), 100.0) for m in prof.services()}
+    return prof, Workload.make(slos)
+
+
+class TestConfigSpace:
+    def test_utilities_touch_at_most_two_services(self):
+        prof, wl = small_problem()
+        space = ConfigSpace(a100_rules(), prof, wl)
+        assert len(space) > 0
+        for i in range(0, len(space), max(1, len(space) // 50)):
+            u = space.utility_of(i)
+            assert np.count_nonzero(u) <= 2
+            assert np.all(u >= 0)
+
+    def test_scores_match_definition(self):
+        prof, wl = small_problem()
+        space = ConfigSpace(a100_rules(), prof, wl)
+        c = np.linspace(0, 1.2, wl.n)
+        scores = space.score_all(c)
+        need = np.clip(1 - c, 0, None)
+        for i in range(0, len(space), max(1, len(space) // 25)):
+            expect = float(np.sum(need * space.utility_of(i)))
+            assert scores[i] == pytest.approx(expect, rel=1e-9)
+
+    def test_batch_respects_latency_slo(self):
+        prof, wl = small_problem()
+        space = ConfigSpace(a100_rules(), prof, wl)
+        for cfg in space.configs[:: max(1, len(space) // 40)]:
+            for a in cfg.assignments:
+                if a.service is None:
+                    continue
+                slo = wl.services[wl.index(a.service)].slo
+                assert prof.latency_ms(a.service, a.size, a.batch) <= slo.latency_ms
+
+
+class TestGreedy:
+    def test_produces_valid_deployment(self):
+        prof, wl = small_problem()
+        space = ConfigSpace(a100_rules(), prof, wl)
+        dep = GreedyFast(space).solve()
+        assert dep.is_valid(wl)
+
+    def test_beats_or_matches_static_baselines(self):
+        prof, wl = small_problem(n=12, scale=8.0)
+        space = ConfigSpace(a100_rules(), prof, wl)
+        dep = GreedyFast(space).solve()
+        b_whole = baseline_homogeneous(a100_rules(), prof, wl, 7)
+        assert dep.num_gpus <= b_whole
+
+    def test_bounded_below_by_lower_bound(self):
+        prof, wl = small_problem(n=10, scale=8.0)
+        space = ConfigSpace(a100_rules(), prof, wl)
+        dep = GreedyFast(space).solve()
+        lb = lower_bound_gpus(a100_rules(), prof, wl)
+        assert dep.num_gpus >= lb
+
+    def test_tpu_rules_work_too(self):
+        prof = SyntheticPaperProfiles(n_models=6, seed=3, sizes=(1, 2, 4, 8, 16))
+        rng = np.random.default_rng(0)
+        slos = {m: SLO(float(rng.lognormal(7.0, 0.6)), 100.0) for m in prof.services()}
+        wl = Workload.make(slos)
+        space = ConfigSpace(tpu_slice_rules(), prof, wl)
+        dep = GreedyFast(space).solve()
+        assert dep.is_valid(wl)
+
+
+class TestMCTS:
+    def test_valid_and_not_worse_than_greedy_much(self):
+        prof, wl = small_problem(n=8, scale=7.5)
+        space = ConfigSpace(a100_rules(), prof, wl)
+        greedy = GreedyFast(space).solve()
+        dep = Deployment(MCTSSlow(space, iterations=120, seed=0).produce(
+            np.zeros(wl.n)))
+        assert dep.is_valid(wl)
+        assert dep.num_gpus <= greedy.num_gpus + 2
+
+    def test_refill_from_partial_completion(self):
+        prof, wl = small_problem()
+        space = ConfigSpace(a100_rules(), prof, wl)
+        c = np.full(wl.n, 0.6)
+        configs = MCTSSlow(space, iterations=50, seed=1).produce(c)
+        total = c + sum(cfg.utility(wl) for cfg in configs)
+        assert np.all(total >= 1.0 - 1e-9)
+
+
+class TestGA:
+    def test_two_phase_never_worse_than_fast(self):
+        prof, wl = small_problem(n=10, scale=8.0)
+        opt = TwoPhaseOptimizer(
+            a100_rules(), prof, wl, ga_rounds=2, ga_population=3,
+            mcts_iterations=40, seed=0,
+        )
+        rep = opt.run()
+        assert rep.best_deployment.is_valid(wl)
+        assert rep.best_deployment.num_gpus <= rep.fast_deployment.num_gpus
+        # history is monotonically non-increasing (elitism, §5.2)
+        assert all(a >= b for a, b in zip(rep.ga_history, rep.ga_history[1:]))
+
+    def test_mutation_preserves_completion(self):
+        prof, wl = small_problem()
+        space = ConfigSpace(a100_rules(), prof, wl)
+        dep = GreedyFast(space).solve()
+        mut = mutate_swap(dep, np.random.default_rng(0), swaps=6)
+        np.testing.assert_allclose(
+            mut.completion_rates(wl), dep.completion_rates(wl), rtol=1e-9
+        )
+        assert mut.num_gpus == dep.num_gpus
+
+
+class TestBeamGreedy:
+    def test_valid_and_at_least_as_good(self):
+        prof, wl = small_problem(n=8, scale=7.5)
+        space = ConfigSpace(a100_rules(), prof, wl)
+        g = GreedyFast(space).solve()
+        b = Deployment(BeamGreedy(space, beam=3, branch=3).produce(np.zeros(wl.n)))
+        assert b.is_valid(wl)
+        assert b.num_gpus <= g.num_gpus
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=8, deadline=None)
+def test_greedy_valid_property(seed):
+    """Property: for any synthetic workload, greedy terminates with a valid
+    deployment whose count is >= the constraint-free lower bound."""
+    prof, wl = small_problem(n=6, seed=seed, scale=7.0)
+    space = ConfigSpace(a100_rules(), prof, wl)
+    dep = GreedyFast(space).solve()
+    assert dep.is_valid(wl)
+    assert dep.num_gpus >= lower_bound_gpus(a100_rules(), prof, wl)

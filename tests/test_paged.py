@@ -1,0 +1,92 @@
+"""Paged attention kernel + page-pool manager."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.ref import paged_decode_attention_ref
+from repro.serving.paged_cache import OutOfPages, PagePool
+
+
+def rand(i, shape):
+    return jax.random.normal(jax.random.PRNGKey(i), shape)
+
+
+@pytest.mark.parametrize(
+    "B,H,KV,D,num_pages,page_size,max_pages",
+    [
+        (2, 4, 2, 64, 8, 16, 3),
+        (3, 8, 2, 64, 16, 32, 4),
+        (1, 8, 1, 128, 8, 64, 2),  # MQA
+        (2, 4, 4, 32, 12, 8, 6),   # MHA small pages
+    ],
+)
+def test_paged_kernel_matches_ref(B, H, KV, D, num_pages, page_size, max_pages):
+    rng = np.random.default_rng(0)
+    q = rand(0, (B, H, D))
+    pk = rand(1, (num_pages, page_size, KV, D))
+    pv = rand(2, (num_pages, page_size, KV, D))
+    pt = jnp.asarray(
+        rng.integers(0, num_pages, size=(B, max_pages)), jnp.int32
+    )
+    lengths = jnp.asarray(
+        rng.integers(1, max_pages * page_size + 1, size=(B,)), jnp.int32
+    )
+    out = paged_decode_attention(q, pk, pv, pt, lengths, interpret=True)
+    ref = paged_decode_attention_ref(q, pk, pv, pt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+class TestPagePool:
+    def test_alloc_grow_release_reuse(self):
+        pool = PagePool(num_pages=4, page_size=8, max_pages_per_req=3)
+        pool.admit(1)
+        pool.append_tokens(1, 8)   # exactly one page
+        assert pool.free_pages == 3
+        pool.append_tokens(1, 1)   # crosses into page 2
+        assert pool.free_pages == 2
+        pt, lens = pool.tables([1])
+        assert lens[0] == 9
+        assert pt.shape == (1, 3)
+        pool.release(1)
+        assert pool.free_pages == 4
+
+    def test_pool_exhaustion_signals_admission_control(self):
+        pool = PagePool(num_pages=2, page_size=4, max_pages_per_req=4)
+        pool.admit(1)
+        pool.append_tokens(1, 8)  # both pages
+        pool.admit(2)
+        with pytest.raises(OutOfPages):
+            pool.append_tokens(2, 1)
+
+    def test_per_request_cap(self):
+        pool = PagePool(num_pages=10, page_size=4, max_pages_per_req=2)
+        pool.admit(1)
+        with pytest.raises(OutOfPages):
+            pool.append_tokens(1, 9)
+
+    def test_hbm_budget_maps_to_slice_capacity(self):
+        pool = PagePool(num_pages=1024, page_size=16, max_pages_per_req=64)
+        b = pool.hbm_bytes(kv_heads=8, head_dim=128, n_layers=36)
+        # qwen3-8b-ish: 2*1024*16*8*128*36*2 bytes
+        assert b == 2 * 1024 * 16 * 8 * 128 * 36 * 2
+
+    @given(st.lists(st.integers(1, 30), min_size=1, max_size=12))
+    @settings(max_examples=25, deadline=None)
+    def test_no_page_leaks(self, growths):
+        """Property: admit/grow/release conserves the page inventory."""
+        pool = PagePool(num_pages=64, page_size=4, max_pages_per_req=16)
+        rids = []
+        for i, g in enumerate(growths):
+            pool.admit(i)
+            try:
+                pool.append_tokens(i, g)
+                rids.append(i)
+            except OutOfPages:
+                pool.release(i)
+        for rid in rids:
+            pool.release(rid)
+        assert pool.free_pages == 64

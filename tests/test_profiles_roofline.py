@@ -1,0 +1,145 @@
+"""Profile generators + roofline parsing tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arch_bridge import tpu_arch_profiles
+from repro.core.profiles import SyntheticPaperProfiles
+from repro.core.tpu_slice import pod_slice_rules
+from repro.roofline.analysis import _shape_bytes, collective_bytes, hlo_cost
+
+
+class TestSyntheticProfiles:
+    def test_classification_mix_matches_paper(self):
+        """§2.2/Fig.4: non-linear models are prevalent."""
+        prof = SyntheticPaperProfiles(n_models=49, seed=0)
+        classes = [prof.classify(m) for m in prof.services()]
+        nonlinear = sum(c != "linear" for c in classes)
+        assert nonlinear > len(classes) / 2
+        assert {"sub-linear", "super-linear"} <= set(classes)
+
+    def test_latency_monotone_in_batch(self):
+        prof = SyntheticPaperProfiles(n_models=5, seed=1)
+        for m in prof.services():
+            for s in prof.sizes():
+                if not prof.feasible(m, s):
+                    continue
+                lats = [prof.latency_ms(m, s, b) for b in (1, 2, 4, 8)]
+                assert all(a < b for a, b in zip(lats, lats[1:]))
+
+    def test_throughput_zero_when_slo_unattainable(self):
+        prof = SyntheticPaperProfiles(n_models=5, seed=1)
+        m = prof.services()[0]
+        assert prof.throughput(m, 1, 1e-6) == 0.0
+
+    @given(seed=st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_throughput_monotone_in_size_under_loose_slo(self, seed):
+        prof = SyntheticPaperProfiles(n_models=4, seed=seed)
+        for m in prof.services():
+            ts = [prof.throughput(m, s, 1e9) for s in sorted(prof.sizes())]
+            ts = [t for t in ts if t > 0]
+            assert all(a <= b * 1.001 for a, b in zip(ts, ts[1:]))
+
+
+class TestRooflineProfiles:
+    def test_big_models_need_big_slices(self):
+        prof = tpu_arch_profiles()
+        rules = pod_slice_rules()
+        small = prof.min_size("qwen3-8b")
+        big = prof.min_size("deepseek-v3-671b")
+        assert big > small
+        assert big >= 128  # 1.34 TB of bf16 weights
+
+    def test_kv_heavy_models_scale_sublinearly(self):
+        prof = tpu_arch_profiles()
+        assert prof.classify("mamba2-370m", 50.0) == "sub-linear"
+
+
+class TestHLOParsing:
+    def test_shape_bytes(self):
+        assert _shape_bytes("bf16[128,4096]{1,0}") == 128 * 4096 * 2
+        assert _shape_bytes("f32[16]") == 64
+        assert _shape_bytes("(bf16[8,8]{1,0}, f32[4])") == 128 + 16
+        assert _shape_bytes("token[]") == 0
+
+    def test_collective_parse(self):
+        hlo = """
+ENTRY %main.1_spmd (p: f32[8,32]) -> f32[8,32] {
+  %add.1 = bf16[1024]{0} add(x, y)
+  %all-reduce.5 = bf16[4096,128]{1,0} all-reduce(bf16[4096,128]{1,0} %add.1), replica_groups={}
+  %ag = f32[64,32]{1,0} all-gather(f32[8,32]{1,0} %p), dimensions={0}
+  %rs.2 = f32[8,32]{1,0} reduce-scatter(f32[64,32]{1,0} %ag), dimensions={0}
+  %a2a = bf16[16,16]{1,0} all-to-all(bf16[16,16]{1,0} %x)
+  %cp-start = bf16[2,2]{1,0} collective-permute-start(bf16[2,2]{1,0} %y)
+}
+        """
+        got = collective_bytes(hlo)
+        assert got["all-reduce"] == 4096 * 128 * 2
+        assert got["all-gather"] == 64 * 32 * 4
+        assert got["reduce-scatter"] == 8 * 32 * 4
+        assert got["all-to-all"] == 16 * 16 * 2
+        assert got["collective-permute"] == 2 * 2 * 2
+
+    def test_collective_parse_while_trip_count(self):
+        """Collectives in a scan body count once per layer, not once."""
+        hlo = """
+%region_0.1_spmd (param: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+  %all-reduce.9 = f32[4,16]{1,0} all-reduce(f32[4,16]{1,0} %x), replica_groups={}
+}
+
+%region_1.2_spmd (param.1: (s32[], f32[4,16])) -> pred[] {
+  %lt = pred[] compare(%a, %b)
+}
+
+ENTRY %main.3_spmd (param.2: f32[4,16]) -> f32[4,16] {
+  %all-gather.1 = f32[8,16]{1,0} all-gather(f32[4,16]{1,0} %param.2), dimensions={0}
+  %while.3 = (s32[], f32[4,16]{1,0}) while(%tuple.7), condition=%region_1.2_spmd, body=%region_0.1_spmd, backend_config={"known_trip_count":{"n":"6"}}
+}
+        """
+        got = collective_bytes(hlo)
+        assert got["all-reduce"] == 6 * 4 * 16 * 4
+        assert got["all-gather"] == 8 * 16 * 4
+
+
+class TestHloCost:
+    def test_scan_flops_match_unrolled(self):
+        """The parser multiplies while bodies by trip count — the exact
+        behavior cost_analysis() lacks."""
+        import jax
+        import jax.numpy as jnp
+
+        def scanned(w, x):
+            def body(x, wl):
+                return jnp.tanh(x @ wl), None
+            x, _ = jax.lax.scan(body, x, w)
+            return x
+
+        def unrolled(w, x):
+            for i in range(6):
+                x = jnp.tanh(x @ w[i])
+            return x
+
+        w = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+        cs = jax.jit(scanned).lower(w, x).compile()
+        cu = jax.jit(unrolled).lower(w, x).compile()
+        expected = 6 * 2 * 8 * 64 * 64
+        assert hlo_cost(cs.as_text())["flops"] == expected
+        assert hlo_cost(cu.as_text())["flops"] == expected
+        # and cost_analysis really does undercount the scan (the bug we fix)
+        assert cs.cost_analysis()["flops"] < expected
+
+    def test_dot_flops_with_batch_dims(self):
+        import jax
+        import jax.numpy as jnp
+
+        def f(a, b):
+            return jnp.einsum("bij,bjk->bik", a, b)
+
+        a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+        c = jax.jit(f).lower(a, b).compile()
+        got = hlo_cost(c.as_text())["flops"]
+        assert got == 2 * 4 * 8 * 32 * 16
