@@ -48,3 +48,45 @@ def day_night_workloads(prof: SyntheticPaperProfiles):
         for m in prof.services()
     }
     return Workload.make(day), Workload.make(night)
+
+
+# one headroom for the trace builder AND SimConfig: day_night_trace divides
+# SLO throughputs by it so the simulator's observed-rate x headroom
+# requirement reproduces the paper's SLOs — the two must always match
+HEADROOM = 1.1
+
+# day->night->day phase boundaries as fractions of the trace duration; the
+# fig13/fig14 analysis windows are derived from these, so retuning the ramp
+# timing here keeps trace and analysis in lockstep
+RAMP_DOWN_START_FRAC = 0.30
+NIGHT_START_FRAC = 0.40
+NIGHT_END_FRAC = 0.60
+RAMP_UP_END_FRAC = 0.70
+
+
+def day_night_trace(
+    prof: SyntheticPaperProfiles,
+    duration_s: float = 6 * 3600.0,
+    bin_s: float = 60.0,
+    headroom: float = HEADROOM,
+):
+    """Arrival trace realizing the day->night->day scenario (Figures 13-14):
+    day rates, a smooth evening ramp down to each service's night rate, a
+    night plateau, and a morning ramp back.  Rates are the day/night SLO
+    throughputs divided by ``headroom`` so the closed-loop simulator's
+    observed-rate x headroom requirement reproduces the paper's SLOs."""
+    from repro.sim import replay_trace
+
+    wl_day, wl_night = day_night_workloads(prof)
+    n = int(round(duration_s / bin_s))
+    t = (np.arange(n) + 0.5) / n
+    # night weight: 0 during day, ramps down/up between the phase fractions
+    down = (t - RAMP_DOWN_START_FRAC) / (NIGHT_START_FRAC - RAMP_DOWN_START_FRAC)
+    up = (t - NIGHT_END_FRAC) / (RAMP_UP_END_FRAC - NIGHT_END_FRAC)
+    w = np.clip(down, 0.0, 1.0) - np.clip(up, 0.0, 1.0)
+    rates = {}
+    for s_day, s_night in zip(wl_day.services, wl_night.services):
+        hi = s_day.slo.throughput / headroom
+        lo = s_night.slo.throughput / headroom
+        rates[s_day.name] = hi * (1.0 - w) + lo * w
+    return replay_trace(rates, bin_s)

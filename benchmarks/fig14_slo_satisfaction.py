@@ -2,58 +2,91 @@
 deployed instances, for the day and night workloads.
 
 The paper measures >95% satisfaction, the <5% shortfall coming from
-profiling-vs-serving variance.  We reproduce that by deploying the
-optimizer's plan and re-evaluating each instance with a perturbed
-"serving-framework" throughput (±4% noise, seeded) — satisfaction must stay
-above 95% per service.
+profiling-vs-serving variance.  Reproduced on the closed-loop simulator
+(:mod:`repro.sim`): the day->night->day trace is served live, each
+instance's serving throughput is perturbed with seeded +/-4% noise against
+its profile, and per-bin attainment (provided capacity / required) is
+accounted per service — including through the mid-run transitions.
 """
 
 from __future__ import annotations
 
 from typing import Dict
 
-import numpy as np
+from repro.core import a100_rules
+from repro.sim import ClusterSimulator, SimConfig
 
-from repro.core import ConfigSpace, GreedyFast, a100_rules
-
-from benchmarks.common import day_night_workloads, realworld_profile
+from benchmarks.common import (
+    HEADROOM,
+    NIGHT_END_FRAC,
+    NIGHT_START_FRAC,
+    RAMP_DOWN_START_FRAC,
+    day_night_trace,
+    realworld_profile,
+)
 
 
 def run(noise: float = 0.04, seed: int = 0) -> Dict[str, Dict[str, float]]:
     rules = a100_rules()
     prof = realworld_profile()
-    wl_day, wl_night = day_night_workloads(prof)
-    rng = np.random.default_rng(seed)
-    out = {}
-    for label, wl in (("daytime", wl_day), ("night", wl_night)):
-        dep = GreedyFast(ConfigSpace(rules, prof, wl)).solve()
-        provided = {m: 0.0 for m in prof.services()}
-        for cfg in dep.configs:
-            for a in cfg.assignments:
-                if a.service:
-                    provided[a.service] += a.throughput * float(
-                        rng.uniform(1 - noise, 1 + noise)
-                    )
-        sat = {}
-        for svc in wl.services:
-            sat[svc.name] = provided[svc.name] / svc.slo.throughput
-        sat["all"] = sum(provided.values()) / sum(
-            s.slo.throughput for s in wl.services
-        )
+    trace = day_night_trace(prof, headroom=HEADROOM)
+    sim = ClusterSimulator(
+        rules,
+        prof,
+        trace,
+        SimConfig(
+            seed=seed,
+            reoptimize_every_s=1800.0,
+            throughput_noise=noise,
+            arrivals="poisson",
+            headroom=HEADROOM,
+        ),
+    )
+    rep = sim.run()
+    # windows derived from the trace's phase fractions (0.02 guard margin
+    # keeps ramp bins out of the night plateau window)
+    n = len(rep.times)
+    windows = {
+        "daytime": slice(0, int(n * RAMP_DOWN_START_FRAC)),
+        "night": slice(int(n * (NIGHT_START_FRAC + 0.02)), int(n * (NIGHT_END_FRAC - 0.02))),
+    }
+    out: Dict[str, Dict[str, float]] = {}
+    for label, win in windows.items():
+        sat: Dict[str, float] = {}
+        prov_sum = req_sum = 0.0
+        for svc in rep.services:
+            tl = rep.timelines[svc]
+            provided = float(tl.capacity[win].sum())
+            required = float(tl.required[win].sum())
+            sat[svc] = provided / required if required > 0 else 1.0
+            prov_sum += provided
+            req_sum += required
+        sat["all"] = prov_sum / req_sum if req_sum > 0 else 1.0
         out[label] = sat
+    # the falsifiable metrics: per-bin attainment (min(1, capacity/required),
+    # dips when serving capacity lags the deployed requirement — e.g. during
+    # transitions or broken in-flight accounting) and served arrivals
+    out["attainment"] = {svc: rep.mean_attainment(svc) for svc in rep.services}
+    out["served"] = {svc: rep.served_fraction(svc) for svc in rep.services}
     return out
 
 
 def main() -> str:
     res = run()
     lines = ["workload,service,satisfaction"]
-    worst = 1e9
-    for label, sat in res.items():
-        for m, v in sat.items():
+    for label in ("daytime", "night"):
+        for m, v in res[label].items():
             lines.append(f"{label},{m},{v:.3f}")
-            worst = min(worst, v)
-    lines.append(f"# worst satisfaction: {worst:.1%} (paper: >95%)")
-    assert worst > 0.95
+    # the windowed capacity ratios above are reporting only — MIG instance
+    # quantization over-provisions small services well past 100%; the
+    # pass/fail criteria are attainment and served fraction, which track the
+    # tightly provisioned path (and the +/-4% serving noise) bin by bin
+    att_worst = min(res["attainment"].values())
+    served_worst = min(res["served"].values())
+    lines.append(f"# worst per-bin SLO attainment: {att_worst:.1%} (paper: >95%)")
+    lines.append(f"# worst served-fraction of arrivals: {served_worst:.1%}")
+    assert att_worst > 0.95
+    assert served_worst > 0.95
     return "\n".join(lines)
 
 

@@ -1,0 +1,33 @@
+"""MIG-Serving reproduction: the Reconfigurable Machine Scheduling Problem.
+
+Subpackages:
+
+  * :mod:`repro.core`    — rule-sets, profiles, optimizer pipeline, controller
+  * :mod:`repro.serving` — per-instance engines and the service-level router
+  * :mod:`repro.sim`     — closed-loop trace-driven cluster serving simulator
+  * :mod:`repro.models`, :mod:`repro.kernels`, :mod:`repro.launch`, ... —
+    the jax/pallas serving stack
+
+The simulator subsystem is re-exported here lazily (PEP 562, same pattern
+as :mod:`repro.serving`), so ``import repro`` — and every
+``import repro.<subpackage>`` that runs through it — stays free of any
+import cost beyond the bare package.
+"""
+
+__all__ = [
+    "ClusterSimulator", "ReoptimizeDriver", "SimConfig", "SimReport",
+    "Trace", "diurnal_trace", "flash_crowd_trace", "poisson_burst_trace",
+    "replay_trace",
+]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro import sim
+
+        return getattr(sim, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -92,10 +92,26 @@ class SimulatedCluster:
         self.gpus: Dict[int, GPUState] = {i: GPUState(i) for i in range(n_gpus)}
         self._uid = itertools.count()
         self.trace: List[Tuple[float, Dict[str, float]]] = []
+        # instance-level twin of ``trace``: after every action, the busy
+        # instances as {uid: (service, size, throughput)}.  The closed-loop
+        # simulator (repro.sim) replays this to charge action latencies to
+        # in-flight serving capacity; opt-in because it costs an
+        # O(busy-instances) snapshot per action and only that driver reads it.
+        self.record_instance_trace = False
+        self.instance_trace: List[Tuple[float, Dict[int, Tuple[str, int, float]]]] = []
         self.clock = 0.0
         self.actions_applied: List[Action] = []
 
     # -- queries ----------------------------------------------------------------
+    def busy_instances(self) -> Dict[int, Tuple[str, int, float]]:
+        """The currently serving instances: uid -> (service, size, req/s)."""
+        out: Dict[int, Tuple[str, int, float]] = {}
+        for g in self.gpus.values():
+            for r in g.instances.values():
+                if r.service:
+                    out[r.uid] = (r.service, r.size, r.throughput)
+        return out
+
     def throughput(self) -> Dict[str, float]:
         out: Dict[str, float] = {}
         for g in self.gpus.values():
@@ -164,6 +180,8 @@ class SimulatedCluster:
         self.clock += a.seconds()
         self.actions_applied.append(a)
         self.trace.append((self.clock, self.throughput()))
+        if self.record_instance_trace:
+            self.instance_trace.append((self.clock, self.busy_instances()))
         return created
 
 

@@ -3,7 +3,11 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=512 "
     + os.environ.get("XLA_FLAGS", "")
 )
-# The two lines above MUST run before any other import: jax locks the device
+# Placeholder host devices are a CPU-platform feature; pinning cpu (unless
+# the caller overrides) also skips the TPU metadata probe, which stalls for
+# 60s+ on TPU-less hosts.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# The lines above MUST run before any other import: jax locks the device
 # count at first initialization, and the production meshes need 512
 # placeholder host devices (16×16 single-pod uses the first 256).
 
@@ -89,6 +93,8 @@ def run_one(
     t1 = time.monotonic()
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax: list of per-module dicts
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # trip-count-aware accounting: cost_analysis() visits while (scan)
     # bodies once, undercounting scanned models by the layer count

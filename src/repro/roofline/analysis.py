@@ -138,6 +138,38 @@ _DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],]+(?:\
 _OPERANDS_RE = re.compile(r"\w[\w\-]*\(([^)]*)\)")
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an HLO operand list at top level (shapes contain commas:
+    ``f32[4,8,16]{2,1,0} %Arg_0.1, f32[4,16,32]{2,1,0} %Arg_1.2``)."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return out
+
+
+def _operand_shape(entry: str, table: Dict[str, str]) -> str:
+    """Shape of one operand entry: newer jax prints it inline
+    (``f32[4,8]{1,0} %x``); older emits the bare name, resolved through the
+    computation's symbol table."""
+    head = entry.split("%")[0]
+    if _SHAPE_RE.search(head):
+        return head.strip()
+    name = entry.strip().lstrip("%")
+    return table.get(name, "")
+
+
 def _parse_dims(shape_str: str) -> Tuple[str, List[int]]:
     m = _SHAPE_RE.search(shape_str)
     if not m:
@@ -218,9 +250,9 @@ def hlo_cost(hlo_text: str) -> Dict[str, float]:
         if opcode == "dynamic-update-slice":
             om = _OPERANDS_RE.search(line)
             if om:
-                ops = [o.strip().lstrip("%") for o in om.group(1).split(",")]
+                ops = _split_operands(om.group(1))
                 if len(ops) >= 2:
-                    shape = table.get(ops[1])
+                    shape = _operand_shape(ops[1], table)
                     if shape and not shape.startswith("("):
                         return 2.0 * _shape_bytes(shape)  # read+write of slice
             return 0.0
@@ -228,9 +260,8 @@ def hlo_cost(hlo_text: str) -> Dict[str, float]:
         if opcode == "dot":
             om = _OPERANDS_RE.search(line)
             if om:
-                for operand in om.group(1).split(","):
-                    operand = operand.strip().lstrip("%")
-                    shape = table.get(operand)
+                for operand in _split_operands(om.group(1)):
+                    shape = _operand_shape(operand, table)
                     if shape and not shape.startswith("("):
                         total += _shape_bytes(shape)
         return total
@@ -242,8 +273,8 @@ def hlo_cost(hlo_text: str) -> Dict[str, float]:
         if not (dm and om and cm):
             return 0.0
         _, out_dims = _parse_dims(dm.group(2))
-        lhs_name = om.group(1).split(",")[0].strip().lstrip("%")
-        lhs_shape = table.get(lhs_name, "")
+        operands = _split_operands(om.group(1))
+        lhs_shape = _operand_shape(operands[0], table) if operands else ""
         _, lhs_dims = _parse_dims(lhs_shape)
         if not lhs_dims:
             return 0.0

@@ -1,9 +1,28 @@
-"""Serving runtime: per-instance engines and the service-level router."""
+"""Serving runtime: per-instance engines and the service-level router.
 
-from repro.serving.engine import Engine, Request, ServeStats, run_closed_loop
+The engine pulls in jax and the model zoo; the router is plain Python.  The
+engine names are exported lazily (PEP 562) so jax-free consumers — notably
+the cluster simulator in :mod:`repro.sim` — can import the router without
+paying (or requiring) the jax import.
+"""
+
 from repro.serving.router import InstanceHandle, WeightedRouter
 
 __all__ = [
     "Engine", "InstanceHandle", "Request", "ServeStats", "WeightedRouter",
     "run_closed_loop",
 ]
+
+_ENGINE_NAMES = ("Engine", "Request", "ServeStats", "run_closed_loop")
+
+
+def __getattr__(name):
+    if name in _ENGINE_NAMES:
+        from repro.serving import engine
+
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

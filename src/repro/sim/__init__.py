@@ -1,0 +1,36 @@
+"""Closed-loop trace-driven cluster serving simulation (Figures 13-14).
+
+The subsystem wiring the repo's isolated pieces — router, profiles,
+optimizer pipeline, exchange-and-compact controller — into the paper's
+closed loop: traffic arrives, gets routed over MIG instances, SLO
+attainment is measured, and a periodic re-optimizer executes transparent
+transitions whose Figure-13c action latencies are charged to in-flight
+capacity.
+
+Extension points (see ROADMAP.md "Simulator"):
+
+  * new trace shapes  -> add a generator in :mod:`repro.sim.traffic`
+  * SLO policies      -> :class:`SimConfig` (headroom, latency, cadence)
+  * algorithm swaps   -> ``optimizer_kwargs`` routes to
+                         :class:`repro.core.optimizer.TwoPhaseOptimizer`'s
+                         registry (``fast=/slow=``)
+"""
+
+from repro.sim.events import Clock, Event, EventQueue
+from repro.sim.reoptimize import PendingTransition, ReoptimizeDriver
+from repro.sim.report import ServiceTimeline, SimReport, TransitionRecord
+from repro.sim.simulator import ClusterSimulator, SimConfig
+from repro.sim.traffic import (
+    Trace,
+    diurnal_trace,
+    flash_crowd_trace,
+    poisson_burst_trace,
+    replay_trace,
+)
+
+__all__ = [
+    "Clock", "ClusterSimulator", "Event", "EventQueue", "PendingTransition",
+    "ReoptimizeDriver", "ServiceTimeline", "SimConfig", "SimReport", "Trace",
+    "TransitionRecord", "diurnal_trace", "flash_crowd_trace",
+    "poisson_burst_trace", "replay_trace",
+]

@@ -1,0 +1,221 @@
+"""The closed loop's actuator: observe load, re-optimize, transition.
+
+This is the piece that turns the repo's isolated components into the paper's
+system: a :class:`ReoptimizeDriver` periodically takes the observed
+per-service arrival rates, builds a workload (SLO throughput = observed rate
+x headroom), runs the phase-1/phase-2 optimizer pipeline
+(:class:`repro.core.optimizer.TwoPhaseOptimizer`), and — when the demand
+moved enough — executes the resulting target deployment through the
+exchange-and-compact controller (§6).
+
+The controller applies actions against :class:`SimulatedCluster`
+synchronously; serving, however, must pay the paper's Figure-13c action
+latencies.  The driver therefore converts the cluster's instance-level
+action trace into a :class:`PendingTransition`: a timeline of instance-set
+snapshots placed at list-scheduled times compressed to the dependency-aware
+parallel makespan.  The simulator serves from this timeline while the
+transition is in flight, so creates only add capacity once their 62 s have
+elapsed, and the §6 transparency margin is measured at every trace point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from repro.core.cluster import SimulatedCluster
+from repro.core.controller import Controller, TransitionReport
+from repro.core.deployment import Deployment, Workload
+from repro.core.optimizer import TwoPhaseOptimizer
+from repro.core.profiles import PerfProfile
+from repro.core.rms import SLO, ReconfigRules
+
+from repro.sim.report import TransitionRecord
+
+# uid -> (service, size, throughput)
+InstanceSet = Dict[int, Tuple[str, int, float]]
+
+
+@dataclasses.dataclass
+class PendingTransition:
+    """A transition whose actions are still paying their latencies."""
+
+    start_s: float
+    end_s: float
+    # (sim time, busy instances after that action), ascending in time
+    timeline: List[Tuple[float, InstanceSet]]
+    record: TransitionRecord
+
+    def instances_at(self, t: float) -> InstanceSet:
+        """The serving instance set at sim time ``t`` (last snapshot <= t)."""
+        current = self.timeline[0][1]
+        for ts, snap in self.timeline:
+            if ts <= t + 1e-9:
+                current = snap
+            else:
+                break
+        return current
+
+
+class ReoptimizeDriver:
+    """Observe -> optimize -> transition, with explicit seeds throughout."""
+
+    def __init__(
+        self,
+        rules: ReconfigRules,
+        profile: PerfProfile,
+        latency_slo_ms: float = 100.0,
+        headroom: float = 1.1,
+        change_threshold: float = 0.15,
+        use_phase2: bool = False,
+        seed: int = 0,
+        optimizer_kwargs: Optional[Dict] = None,
+    ):
+        self.rules = rules
+        self.profile = profile
+        self.controller = Controller(rules, profile)
+        self.latency_slo_ms = latency_slo_ms
+        self.headroom = headroom
+        self.change_threshold = change_threshold
+        self.use_phase2 = use_phase2
+        self.seed = seed
+        self.optimizer_kwargs = dict(optimizer_kwargs or {})
+        self.workload: Optional[Workload] = None  # currently deployed target
+
+    # -- observation --------------------------------------------------------------
+    def workload_for(self, observed_rates: Mapping[str, float]) -> Workload:
+        """SLO throughput = observed rate x headroom (floored at 1 req/s so
+        the optimizer's per-service normalization stays finite)."""
+        return Workload.make(
+            {
+                svc: SLO(max(rate * self.headroom, 1.0), self.latency_slo_ms)
+                for svc, rate in sorted(observed_rates.items())
+            }
+        )
+
+    def demand_moved(self, new: Workload) -> bool:
+        """Did any service's required throughput move more than the
+        threshold relative to the deployed target?"""
+        if self.workload is None:
+            return True
+        old = {s.name: s.slo.throughput for s in self.workload.services}
+        for s in new.services:
+            base = max(old.get(s.name, 1.0), 1.0)
+            if abs(s.slo.throughput - base) / base > self.change_threshold:
+                return True
+        return False
+
+    # -- optimization -------------------------------------------------------------
+    def optimize(self, workload: Workload) -> Deployment:
+        opt = TwoPhaseOptimizer(
+            self.rules,
+            self.profile,
+            workload,
+            seed=self.seed,
+            **self.optimizer_kwargs,
+        )
+        return opt.run(skip_phase2=not self.use_phase2).best_deployment
+
+    # -- actuation ----------------------------------------------------------------
+    def initial_deploy(
+        self, cluster: SimulatedCluster, observed_rates: Mapping[str, float]
+    ) -> Deployment:
+        workload = self.workload_for(observed_rates)
+        dep = self.optimize(workload)
+        self.controller.deploy_fresh(cluster, dep)
+        # the driver is the sole instance_trace consumer and only ever reads
+        # the current transition's tail — drop consumed history so long
+        # many-transition runs stay O(one transition) in memory
+        cluster.instance_trace.clear()
+        self.workload = workload
+        return dep
+
+    def reoptimize(
+        self,
+        cluster: SimulatedCluster,
+        observed_rates: Mapping[str, float],
+        now: float,
+    ) -> Optional[PendingTransition]:
+        """Run one observe->optimize->transition step at sim time ``now``.
+
+        Returns ``None`` when demand has not moved enough to act.
+        """
+        new_workload = self.workload_for(observed_rates)
+        if not self.demand_moved(new_workload):
+            return None
+        assert self.workload is not None, "initial_deploy must run first"
+        cluster.record_instance_trace = True
+        old_required = {
+            s.name: s.slo.throughput for s in self.workload.services
+        }
+        new_required = {
+            s.name: s.slo.throughput for s in new_workload.services
+        }
+
+        new_dep = self.optimize(new_workload)
+        pre_instances = cluster.busy_instances()
+        gpus_before = cluster.gpus_in_use()
+        n0 = len(cluster.instance_trace)
+        clock0 = cluster.clock
+        report: TransitionReport = self.controller.transition(cluster, new_dep)
+        self.workload = new_workload
+
+        pending = self._build_pending(
+            now, pre_instances, cluster, n0, clock0, report,
+            old_required, new_required, gpus_before,
+        )
+        cluster.instance_trace.clear()  # consumed; see initial_deploy
+        return pending
+
+    def _build_pending(
+        self,
+        now: float,
+        pre_instances: InstanceSet,
+        cluster: SimulatedCluster,
+        n0: int,
+        clock0: float,
+        report: TransitionReport,
+        old_required: Dict[str, float],
+        new_required: Dict[str, float],
+        gpus_before: int,
+    ) -> PendingTransition:
+        # The cluster trace advances serially (one action at a time); real
+        # wall clock is the dependency-aware parallel makespan.  Compress
+        # serial offsets onto the parallel window — ordering (hence the §6
+        # guarantee, which the controller enforces on the serial trace) is
+        # preserved.
+        serial = max(report.serial_seconds, 1e-9)
+        scale = report.parallel_seconds / serial
+        timeline: List[Tuple[float, InstanceSet]] = [(now, dict(pre_instances))]
+        margin = {svc: float("inf") for svc in set(old_required) | set(new_required)}
+
+        def note_margin(instances: InstanceSet) -> None:
+            provided: Dict[str, float] = {}
+            for svc, _size, tput in instances.values():
+                provided[svc] = provided.get(svc, 0.0) + tput
+            for svc in margin:
+                floor = min(
+                    old_required.get(svc, 0.0), new_required.get(svc, 0.0)
+                )
+                margin[svc] = min(margin[svc], provided.get(svc, 0.0) - floor)
+
+        note_margin(pre_instances)
+        for clock, snap in cluster.instance_trace[n0:]:
+            t = now + (clock - clock0) * scale
+            timeline.append((t, dict(snap)))
+            note_margin(snap)
+
+        end = now + report.parallel_seconds
+        record = TransitionRecord(
+            start_s=now,
+            end_s=end,
+            serial_seconds=report.serial_seconds,
+            parallel_seconds=report.parallel_seconds,
+            action_counts=dict(report.action_counts),
+            old_required=dict(sorted(old_required.items())),
+            new_required=dict(sorted(new_required.items())),
+            gpus_before=gpus_before,
+            gpus_after=report.final_gpus_busy,
+            transparency_margin=dict(sorted(margin.items())),
+        )
+        return PendingTransition(now, end, timeline, record)

@@ -1,0 +1,162 @@
+"""Simulation reports: per-bin timelines, transition records, summaries.
+
+A :class:`SimReport` is the simulator's only output — everything the
+benchmarks and tests consume (SLO attainment, transition makespans, the §6
+transparency margin) is derived from it.  ``to_json()`` is deterministic
+(sorted keys, canonical float repr), so two runs with the same seed must
+produce byte-identical serializations — the property the test suite pins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TransitionRecord:
+    """One re-optimization + controller transition executed mid-run."""
+
+    start_s: float  # sim time the reoptimize fired
+    end_s: float  # sim time in-flight actions all finished
+    serial_seconds: float
+    parallel_seconds: float
+    action_counts: Dict[str, int]
+    old_required: Dict[str, float]  # SLO throughput before
+    new_required: Dict[str, float]  # SLO throughput after
+    gpus_before: int
+    gpus_after: int
+    # min over trace points of (capacity - min(old, new) required), per service;
+    # the §6 transparency guarantee is exactly: every value >= 0.
+    transparency_margin: Dict[str, float]
+
+    @property
+    def transparent(self) -> bool:
+        return all(m >= -1e-6 for m in self.transparency_margin.values())
+
+
+@dataclasses.dataclass
+class ServiceTimeline:
+    """Per-bin series for one service (arrays of length num_bins)."""
+
+    arrivals: np.ndarray  # requests arriving in the bin
+    served: np.ndarray  # requests served in the bin
+    capacity: np.ndarray  # requests the bin's instances could serve
+    backlog: np.ndarray  # queued requests at bin end
+    required: np.ndarray  # current SLO throughput * bin_s
+    attainment: np.ndarray  # min(1, capacity / required)
+
+
+@dataclasses.dataclass
+class SimReport:
+    seed: int
+    bin_s: float
+    times: np.ndarray  # bin start times
+    services: List[str]
+    timelines: Dict[str, ServiceTimeline]
+    transitions: List[TransitionRecord]
+    reoptimize_checks: int  # how many observe-points fired
+    final_gpus: int
+
+    # -- derived -----------------------------------------------------------------
+    def slo_satisfaction(self, svc: str) -> float:
+        """Fraction of bins whose provided capacity met the required rate."""
+        tl = self.timelines[svc]
+        return float(np.mean(tl.attainment >= 1.0 - 1e-9))
+
+    def mean_attainment(self, svc: str) -> float:
+        return float(np.mean(self.timelines[svc].attainment))
+
+    def served_fraction(self, svc: str) -> float:
+        tl = self.timelines[svc]
+        tot = float(np.sum(tl.arrivals))
+        return float(np.sum(tl.served)) / tot if tot > 0 else 1.0
+
+    @property
+    def transparent(self) -> bool:
+        return all(t.transparent for t in self.transitions)
+
+    def transparency_margin(self) -> float:
+        """Worst §6 margin over all transitions and services (>= 0 means the
+        guarantee held at every trace point)."""
+        margins = [
+            m for t in self.transitions for m in t.transparency_margin.values()
+        ]
+        return min(margins) if margins else float("inf")
+
+    # -- serialization -----------------------------------------------------------
+    def to_dict(self) -> Dict:
+        def arr(a: np.ndarray) -> List[float]:
+            return [float(x) for x in a]
+
+        return {
+            "seed": self.seed,
+            "bin_s": self.bin_s,
+            "times": arr(self.times),
+            "services": list(self.services),
+            "timelines": {
+                svc: {
+                    "arrivals": arr(tl.arrivals),
+                    "served": arr(tl.served),
+                    "capacity": arr(tl.capacity),
+                    "backlog": arr(tl.backlog),
+                    "required": arr(tl.required),
+                    "attainment": arr(tl.attainment),
+                }
+                for svc, tl in sorted(self.timelines.items())
+            },
+            "transitions": [
+                {
+                    "start_s": t.start_s,
+                    "end_s": t.end_s,
+                    "serial_seconds": t.serial_seconds,
+                    "parallel_seconds": t.parallel_seconds,
+                    "action_counts": dict(sorted(t.action_counts.items())),
+                    "old_required": dict(sorted(t.old_required.items())),
+                    "new_required": dict(sorted(t.new_required.items())),
+                    "gpus_before": t.gpus_before,
+                    "gpus_after": t.gpus_after,
+                    "transparency_margin": dict(
+                        sorted(t.transparency_margin.items())
+                    ),
+                    "transparent": t.transparent,
+                }
+                for t in self.transitions
+            ],
+            "reoptimize_checks": self.reoptimize_checks,
+            "final_gpus": self.final_gpus,
+        }
+
+    def to_json(self) -> str:
+        """Canonical serialization: byte-identical across same-seed runs."""
+        return json.dumps(self.to_dict(), sort_keys=True, separators=(",", ":"))
+
+    def summary(self) -> str:
+        lines = [
+            f"simulated {self.times[-1] + self.bin_s:.0f}s in {len(self.times)} bins"
+            f" of {self.bin_s:.0f}s, seed={self.seed}",
+            f"re-optimization checks: {self.reoptimize_checks},"
+            f" transitions executed: {len(self.transitions)},"
+            f" final GPUs busy: {self.final_gpus}",
+        ]
+        for svc in self.services:
+            lines.append(
+                f"  {svc}: slo-satisfied {self.slo_satisfaction(svc):.1%} of bins,"
+                f" mean attainment {self.mean_attainment(svc):.3f},"
+                f" served {self.served_fraction(svc):.1%} of arrivals"
+            )
+        for i, t in enumerate(self.transitions):
+            lines.append(
+                f"  transition {i}: t={t.start_s:.0f}s"
+                f" parallel={t.parallel_seconds:.0f}s serial={t.serial_seconds:.0f}s"
+                f" actions={dict(sorted(t.action_counts.items()))}"
+                f" transparent={t.transparent}"
+            )
+        lines.append(
+            "  §6 transparency margin (worst over trace points):"
+            f" {self.transparency_margin():.3f} req/s"
+        )
+        return "\n".join(lines)

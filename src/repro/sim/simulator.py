@@ -1,0 +1,293 @@
+"""Closed-loop trace-driven cluster serving simulator.
+
+The loop the paper's headline figures (13-14) measure, in one place:
+
+  traffic arrives (a :class:`repro.sim.traffic.Trace`)
+    -> the per-service :class:`WeightedRouter` spreads requests over the
+       service's MIG instances proportionally to their profiled throughput
+    -> each instance serves at its profile rate; excess queues (fluid backlog)
+    -> per-bin SLO-attainment accounting
+    -> every ``reoptimize_every_s`` the :class:`ReoptimizeDriver` re-runs the
+       optimizer pipeline on the observed load and, when demand moved,
+       executes a transparent exchange-and-compact transition whose
+       Figure-13c action latencies are charged to in-flight capacity.
+
+Everything is driven by the deterministic event queue in
+:mod:`repro.sim.events`, and all randomness (Poisson arrivals, serving
+noise) flows from the single ``SimConfig.seed`` — the same seed yields a
+byte-identical :class:`SimReport`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cluster import SimulatedCluster
+from repro.core.profiles import PerfProfile
+from repro.core.rms import ReconfigRules
+from repro.serving.router import InstanceHandle, WeightedRouter
+
+from repro.sim.events import (
+    BIN_TICK,
+    END,
+    REOPTIMIZE,
+    TRANSITION_DONE,
+    Clock,
+    EventQueue,
+)
+from repro.sim.reoptimize import InstanceSet, PendingTransition, ReoptimizeDriver
+from repro.sim.report import ServiceTimeline, SimReport, TransitionRecord
+from repro.sim.traffic import Trace
+
+
+@dataclasses.dataclass
+class SimConfig:
+    """Knobs of one simulation run (all defaults paper-flavored)."""
+
+    reoptimize_every_s: float = 1800.0  # observe->optimize cadence
+    latency_slo_ms: float = 100.0  # per-request latency SLO (§8)
+    headroom: float = 1.1  # required = observed rate x headroom
+    change_threshold: float = 0.15  # demand move that triggers a transition
+    use_phase2: bool = False  # run the GA/MCTS phase (slower, fewer GPUs)
+    arrivals: str = "poisson"  # "poisson" | "fluid" (exact rate x dt)
+    max_picks_per_bin: int = 256  # router picks per (service, bin); arrivals
+    # beyond this are dispatched in equal chunks through the same picks
+    throughput_noise: float = 0.0  # serving-vs-profiling variance (Fig. 14)
+    seed: int = 0
+    initial_gpus: int = 1  # cluster grows on demand past this
+
+    def __post_init__(self):
+        assert self.arrivals in ("poisson", "fluid"), self.arrivals
+
+
+class ClusterSimulator:
+    """Wires trace -> router -> instances -> SLO accounting -> re-optimizer."""
+
+    def __init__(
+        self,
+        rules: ReconfigRules,
+        profile: PerfProfile,
+        trace: Trace,
+        config: Optional[SimConfig] = None,
+        optimizer_kwargs: Optional[Dict] = None,
+    ):
+        self.rules = rules
+        self.profile = profile
+        self.trace = trace
+        self.config = config or SimConfig()
+        self.driver = ReoptimizeDriver(
+            rules,
+            profile,
+            latency_slo_ms=self.config.latency_slo_ms,
+            headroom=self.config.headroom,
+            change_threshold=self.config.change_threshold,
+            use_phase2=self.config.use_phase2,
+            seed=self.config.seed,
+            optimizer_kwargs=optimizer_kwargs,
+        )
+        self.cluster = SimulatedCluster(rules, self.config.initial_gpus)
+        # serving state
+        self._pending: Optional[PendingTransition] = None
+        self._routers: Dict[str, Tuple[Tuple, WeightedRouter]] = {}
+        self._backlog: Dict[int, float] = {}  # uid -> queued requests
+        self._backlog_svc: Dict[int, str] = {}  # uid -> owning service
+        self._spill: Dict[str, float] = {}  # requeued load of vanished uids
+        self._noise: Dict[int, float] = {}  # uid -> serving noise factor
+
+    # -- instance plumbing -------------------------------------------------------
+    def _active_instances(self, t: float) -> InstanceSet:
+        if self._pending is not None and t < self._pending.end_s:
+            return self._pending.instances_at(t)
+        return self.cluster.busy_instances()
+
+    def _noise_of(self, uid: int) -> float:
+        if self.config.throughput_noise <= 0:
+            return 1.0
+        if uid not in self._noise:
+            # one seeded draw per instance lifetime, independent of when the
+            # instance first serves (instance-creation order is deterministic)
+            sub = np.random.default_rng((self.config.seed, uid))
+            self._noise[uid] = float(
+                sub.uniform(
+                    1.0 - self.config.throughput_noise,
+                    1.0 + self.config.throughput_noise,
+                )
+            )
+        return self._noise[uid]
+
+    def _router_for(
+        self, svc: str, members: List[Tuple[int, int, float]]
+    ) -> WeightedRouter:
+        """A persistent smooth-WRR per service, rebuilt only when the
+        instance set changes (so WRR state survives across bins)."""
+        key = tuple(members)
+        cached = self._routers.get(svc)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        router = WeightedRouter(
+            [
+                InstanceHandle(instance_id=uid, size=size, throughput=tput)
+                for uid, size, tput in members
+            ]
+        )
+        self._routers[svc] = (key, router)
+        return router
+
+    # -- one traffic bin ---------------------------------------------------------
+    def _process_bin(
+        self,
+        k: int,
+        t: float,
+        rng: np.random.Generator,
+        out: Dict[str, Dict[str, List[float]]],
+    ) -> None:
+        dt = self.trace.bin_s
+        instances = self._active_instances(t)
+        # queued requests of instances that vanished (deleted/migrated away
+        # mid-transition) are re-dispatched at the service level this bin
+        for uid in [u for u in self._backlog if u not in instances]:
+            q = self._backlog.pop(uid)
+            svc = self._backlog_svc.pop(uid)
+            if q > 0:
+                self._spill[svc] = self._spill.get(svc, 0.0) + q
+        # uids never recur (itertools.count), so their noise draws are dead
+        for uid in [u for u in self._noise if u not in instances]:
+            del self._noise[uid]
+        by_svc: Dict[str, List[Tuple[int, int, float]]] = {}
+        for uid in sorted(instances):
+            svc, size, tput = instances[uid]
+            by_svc.setdefault(svc, []).append(
+                (uid, size, tput * self._noise_of(uid))
+            )
+        required = {
+            s.name: s.slo.throughput for s in self.driver.workload.services
+        } if self.driver.workload else {}
+
+        for svc in self.trace.services:
+            rate = float(self.trace.rates[svc][k])
+            if self.config.arrivals == "poisson":
+                arrivals = float(rng.poisson(rate * dt))
+            else:
+                arrivals = rate * dt
+            # demand = this bin's true arrivals + requeued spill; only the
+            # former is recorded as arrivals (spill was counted on arrival)
+            demand = arrivals + self._spill.pop(svc, 0.0)
+            members = by_svc.get(svc, [])
+            served = 0.0
+            capacity_rate = sum(m[2] for m in members)
+            if members:
+                router = self._router_for(svc, members)
+                load: Dict[int, float] = {}
+                if demand > 0:
+                    picks = min(
+                        int(math.ceil(demand)), self.config.max_picks_per_bin
+                    )
+                    chunk = demand / picks
+                    for _ in range(picks):
+                        h = router.pick()
+                        load[h.instance_id] = load.get(h.instance_id, 0.0) + chunk
+                for uid, _size, tput in members:
+                    q = self._backlog.get(uid, 0.0) + load.get(uid, 0.0)
+                    s = min(q, tput * dt)
+                    self._backlog[uid] = q - s
+                    self._backlog_svc[uid] = svc
+                    served += s
+            elif demand > 0:
+                # no capacity this bin: everything queues at the service level
+                self._spill[svc] = self._spill.get(svc, 0.0) + demand
+
+            backlog = sum(
+                self._backlog.get(m[0], 0.0) for m in members
+            ) + self._spill.get(svc, 0.0)
+
+            req_rate = required.get(svc, 0.0)
+            series = out[svc]
+            series["arrivals"].append(arrivals)
+            series["served"].append(served)
+            series["capacity"].append(capacity_rate * dt)
+            series["backlog"].append(backlog)
+            series["required"].append(req_rate * dt)
+            series["attainment"].append(
+                min(1.0, capacity_rate / req_rate) if req_rate > 0 else 1.0
+            )
+
+    # -- main loop ---------------------------------------------------------------
+    def run(self) -> SimReport:
+        cfg = self.config
+        trace = self.trace
+        rng = np.random.default_rng(cfg.seed)
+        clock = Clock(0.0)
+        queue = EventQueue()
+        for k in range(trace.num_bins):
+            queue.push(k * trace.bin_s, BIN_TICK, k)
+        t = cfg.reoptimize_every_s
+        while t < trace.duration_s - 1e-9:
+            queue.push(t, REOPTIMIZE, None)
+            t += cfg.reoptimize_every_s
+        queue.push(trace.duration_s, END, None)
+
+        # initial deployment sized for the trace's opening rates
+        self.driver.initial_deploy(self.cluster, trace.rates_at(0.0))
+
+        out: Dict[str, Dict[str, List[float]]] = {
+            svc: {
+                name: []
+                for name in (
+                    "arrivals", "served", "capacity",
+                    "backlog", "required", "attainment",
+                )
+            }
+            for svc in trace.services
+        }
+        transitions: List[TransitionRecord] = []
+        checks = 0
+
+        for ev in queue.drain():
+            clock.advance_to(ev.time)
+            if ev.kind == BIN_TICK:
+                self._process_bin(ev.payload, ev.time, rng, out)
+            elif ev.kind == REOPTIMIZE:
+                checks += 1
+                if self._pending is not None and ev.time < self._pending.end_s:
+                    continue  # a transition is still paying its latencies
+                observed = trace.mean_rates(
+                    ev.time - cfg.reoptimize_every_s, ev.time
+                )
+                pending = self.driver.reoptimize(self.cluster, observed, ev.time)
+                if pending is not None:
+                    self._pending = pending
+                    transitions.append(pending.record)
+                    queue.push(pending.end_s, TRANSITION_DONE, None)
+            elif ev.kind == TRANSITION_DONE:
+                if self._pending is not None and ev.time >= self._pending.end_s:
+                    self._pending = None
+                    self._routers.clear()
+            elif ev.kind == END:
+                break
+
+        times = np.arange(trace.num_bins, dtype=np.float64) * trace.bin_s
+        timelines = {
+            svc: ServiceTimeline(
+                arrivals=np.asarray(series["arrivals"]),
+                served=np.asarray(series["served"]),
+                capacity=np.asarray(series["capacity"]),
+                backlog=np.asarray(series["backlog"]),
+                required=np.asarray(series["required"]),
+                attainment=np.asarray(series["attainment"]),
+            )
+            for svc, series in out.items()
+        }
+        return SimReport(
+            seed=cfg.seed,
+            bin_s=trace.bin_s,
+            times=times,
+            services=trace.services,
+            timelines=timelines,
+            transitions=transitions,
+            reoptimize_checks=checks,
+            final_gpus=self.cluster.gpus_in_use(),
+        )

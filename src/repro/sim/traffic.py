@@ -1,0 +1,163 @@
+"""Traffic traces: per-service arrival rates over time.
+
+The paper's live experiments (§8.2, Figures 13-14) replay real day/night
+traffic against the serving cluster; the related MIG-scheduling literature
+(arXiv:2606.25082, arXiv:2512.16099) evaluates against time-varying arrival
+traces more generally.  This module is the trace vocabulary for the
+closed-loop simulator (:mod:`repro.sim.simulator`): a :class:`Trace` is a
+binned per-service arrival-rate function, and the generators below produce
+the canonical shapes —
+
+  * :func:`diurnal_trace`       — smooth day/night cycle (Figure 13's scenario)
+  * :func:`poisson_burst_trace` — background rate with seeded burst episodes
+  * :func:`flash_crowd_trace`   — a sudden flash crowd with ramp up/decay
+  * :func:`replay_trace`        — replay externally recorded rate arrays
+
+All randomness flows from explicit seeds so a trace (and every simulation
+run on it) is reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """Per-service arrival rates (req/s), piecewise-constant over fixed bins.
+
+    ``rates[svc][k]`` is the arrival rate of ``svc`` during
+    ``[k * bin_s, (k+1) * bin_s)``.
+    """
+
+    bin_s: float
+    rates: Dict[str, np.ndarray]
+
+    def __post_init__(self):
+        assert self.bin_s > 0, "bin width must be positive"
+        assert self.rates, "trace needs at least one service"
+        n = {len(r) for r in self.rates.values()}
+        assert len(n) == 1, "all services must cover the same bins"
+
+    @property
+    def services(self) -> list:
+        return sorted(self.rates)
+
+    @property
+    def num_bins(self) -> int:
+        return len(next(iter(self.rates.values())))
+
+    @property
+    def duration_s(self) -> float:
+        return self.num_bins * self.bin_s
+
+    def bin_of(self, t: float) -> int:
+        """Bin index of time ``t``, clamped to the trace's ends."""
+        return max(0, min(int(t // self.bin_s), self.num_bins - 1))
+
+    def rate_at(self, svc: str, t: float) -> float:
+        return float(self.rates[svc][self.bin_of(t)])
+
+    def rates_at(self, t: float) -> Dict[str, float]:
+        k = self.bin_of(t)
+        return {svc: float(r[k]) for svc, r in self.rates.items()}
+
+    def mean_rates(self, t0: float, t1: float) -> Dict[str, float]:
+        """Mean per-service rate over the window [t0, t1) — what a
+        re-optimizer observes from its metrics backend."""
+        k0, k1 = self.bin_of(t0), self.bin_of(max(t1 - 1e-9, t0))
+        return {
+            svc: float(np.mean(r[k0 : k1 + 1])) for svc, r in self.rates.items()
+        }
+
+
+def _bins(duration_s: float, bin_s: float) -> int:
+    n = int(round(duration_s / bin_s))
+    assert n >= 1, "trace must span at least one bin"
+    return n
+
+
+def diurnal_trace(
+    peak_rates: Mapping[str, float],
+    duration_s: float,
+    bin_s: float = 60.0,
+    night_frac: float = 0.3,
+    phase_s: float = 0.0,
+    period_s: Optional[float] = None,
+    jitter: float = 0.0,
+    seed: int = 0,
+) -> Trace:
+    """Day/night cycle: a raised cosine between ``night_frac * peak`` at the
+    trough and ``peak`` at midday, with optional multiplicative jitter."""
+    assert 0.0 <= night_frac <= 1.0
+    n = _bins(duration_s, bin_s)
+    period = period_s if period_s is not None else duration_s
+    t = (np.arange(n) + 0.5) * bin_s + phase_s
+    # cos phase 0 at midday; shift so the trace starts at midday
+    wave = 0.5 * (1.0 + np.cos(2.0 * np.pi * t / period))
+    shape = night_frac + (1.0 - night_frac) * wave
+    rng = np.random.default_rng(seed)
+    rates = {}
+    for svc in sorted(peak_rates):
+        noise = rng.normal(1.0, jitter, size=n) if jitter > 0 else 1.0
+        rates[svc] = np.maximum(peak_rates[svc] * shape * noise, 0.0)
+    return Trace(bin_s, rates)
+
+
+def poisson_burst_trace(
+    base_rates: Mapping[str, float],
+    duration_s: float,
+    bin_s: float = 60.0,
+    burst_mult: float = 3.0,
+    burst_prob: float = 0.05,
+    burst_len_bins: int = 3,
+    seed: int = 0,
+) -> Trace:
+    """Background rate with seeded burst episodes: each bin opens a burst
+    with probability ``burst_prob``; a burst multiplies the rate by
+    ``burst_mult`` for ``burst_len_bins`` bins (bursts may overlap-extend)."""
+    n = _bins(duration_s, bin_s)
+    rng = np.random.default_rng(seed)
+    rates = {}
+    for svc in sorted(base_rates):
+        mult = np.ones(n)
+        starts = np.nonzero(rng.random(n) < burst_prob)[0]
+        for s in starts:
+            mult[s : s + burst_len_bins] = burst_mult
+        rates[svc] = base_rates[svc] * mult
+    return Trace(bin_s, rates)
+
+
+def flash_crowd_trace(
+    base_rates: Mapping[str, float],
+    duration_s: float,
+    at_s: float,
+    bin_s: float = 60.0,
+    mult: float = 5.0,
+    ramp_s: float = 120.0,
+    decay_s: float = 600.0,
+) -> Trace:
+    """A flash crowd arriving at ``at_s``: linear ramp to ``mult`` times the
+    base over ``ramp_s``, then exponential decay back with scale ``decay_s``."""
+    n = _bins(duration_s, bin_s)
+    t = (np.arange(n) + 0.5) * bin_s
+    shape = np.ones(n)
+    ramping = (t >= at_s) & (t < at_s + ramp_s)
+    shape[ramping] = 1.0 + (mult - 1.0) * (t[ramping] - at_s) / ramp_s
+    after = t >= at_s + ramp_s
+    shape[after] = 1.0 + (mult - 1.0) * np.exp(-(t[after] - at_s - ramp_s) / decay_s)
+    return Trace(bin_s, {svc: base_rates[svc] * shape for svc in sorted(base_rates)})
+
+
+def replay_trace(
+    rate_arrays: Mapping[str, "np.ndarray"], bin_s: float = 60.0
+) -> Trace:
+    """Replay externally recorded per-bin rate arrays (e.g. a production
+    metrics export) as a trace."""
+    return Trace(
+        bin_s,
+        {svc: np.asarray(arr, dtype=np.float64) for svc, arr in rate_arrays.items()},
+    )

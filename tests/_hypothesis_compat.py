@@ -1,0 +1,152 @@
+"""Hypothesis, or a seeded stand-in when the library is absent.
+
+The tier-1 suite must collect and run in environments without
+``hypothesis`` (the CI job matrix pins both cases).  Test modules import
+the property-testing surface from here::
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+When the real library is installed these are simply re-exports.  Otherwise
+a minimal fallback provides the same decorator API driving a *fixed seeded
+sample*: each ``@given`` test runs ``max_examples`` deterministic examples
+drawn from a PRNG seeded by the test's qualified name — no shrinking, no
+database, but the same strategies vocabulary and reproducible inputs.
+
+Only the strategy combinators this repo uses are implemented
+(``integers``, ``sampled_from``, ``lists``, ``booleans``, ``floats``,
+``tuples``, ``just``); extend the fallback when a test needs more.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import assume, HealthCheck  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # -- seeded fallback ------------------------------------
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    class _Strategy:
+        """A draw function over a ``random.Random``."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: "random.Random"):
+            return self._draw(rng)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: min_value + (max_value - min_value) * rng.random()
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng) for s in strategies)
+            )
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+    st = _strategies()
+
+    class HealthCheck:
+        all = staticmethod(lambda: [])
+        too_slow = data_too_large = filter_too_much = None
+
+    def assume(condition) -> bool:
+        """Fallback semantics: a failed assumption just skips the example
+        by raising, caught in the runner below."""
+        if not condition:
+            raise _AssumptionFailed()
+        return True
+
+    class _AssumptionFailed(Exception):
+        pass
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Records ``max_examples`` for ``given`` (deadline etc. ignored)."""
+
+        def decorate(func):
+            func._compat_max_examples = max_examples
+            return func
+
+        return decorate
+
+    def given(*pos_strategies, **kw_strategies):
+        """Run the test over a fixed seeded sample of strategy draws.
+
+        Mirrors hypothesis' calling convention: positional strategies fill
+        the test's trailing positional parameters, keyword strategies its
+        named parameters.  The PRNG seed is the test's qualified name, so
+        inputs are stable across runs and processes.
+        """
+
+        def decorate(func):
+            @functools.wraps(func)
+            def wrapper(*args, **kwargs):
+                # read at call time: @settings may sit either above or below
+                # @given (both orders are valid in real hypothesis)
+                max_examples = getattr(
+                    wrapper,
+                    "_compat_max_examples",
+                    getattr(func, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES),
+                )
+                rng = random.Random(f"{func.__module__}.{func.__qualname__}")
+                ran = 0
+                attempts = 0
+                while ran < max_examples and attempts < max_examples * 10:
+                    attempts += 1
+                    gen_pos = tuple(s.example(rng) for s in pos_strategies)
+                    gen_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    try:
+                        func(*args, *gen_pos, **gen_kw, **kwargs)
+                    except _AssumptionFailed:
+                        continue
+                    ran += 1
+                if max_examples > 0 and ran == 0:
+                    # mirror hypothesis' Unsatisfiable: a test that ran zero
+                    # examples must not silently pass
+                    raise RuntimeError(
+                        f"{func.__qualname__}: assume() rejected all "
+                        f"{attempts} generated examples"
+                    )
+
+            # pytest must not introspect the wrapped signature for fixtures
+            # (the strategy parameters are not fixtures)
+            del wrapper.__wrapped__
+            wrapper.hypothesis_compat_fallback = True
+            return wrapper
+
+        return decorate

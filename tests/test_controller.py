@@ -7,7 +7,7 @@ many random day/night workload pairs (hypothesis).
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     SLO,

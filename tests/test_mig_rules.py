@@ -1,7 +1,7 @@
 """Rule-set tests: A100 MIG legality (§2.1 / Figure 2) and TPU slices."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mig import a100_rules
 from repro.core.rms import validate_partition_universe

@@ -40,7 +40,9 @@ print("MATCH")
 def test_shard_map_moe_matches_pjit():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # the forced host-device mesh is a CPU-platform feature; pinning cpu also
+    # skips the TPU metadata probe (60s+ stall on TPU-less CI hosts)
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         env=env, timeout=540,
