@@ -1,0 +1,242 @@
+"""Optimizer-core benchmark: the perf trajectory this repo tracks.
+
+Times the hot paths that sit on the simulator's reoptimize loop — config
+space construction, greedy ``produce``, GA rounds, MCTS iterations, and one
+full simulator reoptimize cycle — at small/medium/large workloads (up to
+~16 services x the full A100 partition space), and writes
+``BENCH_optimizer.json`` at the repo root.
+
+The JSON keeps two timing sections: ``baseline`` (recorded once, before the
+array-native optimizer core landed) and ``current`` (refreshed every run),
+plus the derived ``speedup`` ratios.  The performance contract (ROADMAP
+"Performance contract") is that medium-workload ``greedy_produce_s`` and
+``ga_round_s`` stay >= 5x faster than the recorded baseline.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_optimizer.py            # refresh current
+    PYTHONPATH=src python benchmarks/bench_optimizer.py --smoke    # CI: tiny sizes,
+                                                                   # temp output, JSON sanity
+    PYTHONPATH=src python benchmarks/bench_optimizer.py --set-baseline  # re-record baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Callable, Dict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (
+    SLO,
+    ConfigSpace,
+    Deployment,
+    GeneticOptimizer,
+    GreedyFast,
+    MCTSSlow,
+    SyntheticPaperProfiles,
+    Workload,
+    a100_rules,
+)
+from repro.core.cluster import SimulatedCluster
+from repro.sim import ReoptimizeDriver
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_optimizer.json")
+
+# (n_services, lognormal scale of SLO throughputs, MCTS iterations, GA population)
+SIZES = {
+    "small": dict(n=4, scale=7.6, mcts_iters=60, ga_pop=4),
+    "medium": dict(n=12, scale=8.6, mcts_iters=60, ga_pop=4),
+    "large": dict(n=16, scale=8.6, mcts_iters=60, ga_pop=4),
+}
+SMOKE_SIZES = {
+    "smoke": dict(n=3, scale=7.0, mcts_iters=10, ga_pop=2),
+}
+
+
+def build_problem(n: int, scale: float, seed: int = 2):
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed)
+    rng = np.random.default_rng(seed)
+    slos = {m: SLO(float(rng.lognormal(scale, 0.7)), 100.0) for m in prof.services()}
+    return prof, Workload.make(slos)
+
+
+def best_of(fn: Callable[[], None], repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_size(name: str, spec: Dict, repeats: int) -> Dict[str, float]:
+    prof, wl = build_problem(spec["n"], spec["scale"])
+    rules = a100_rules()
+
+    out: Dict[str, float] = {}
+    out["space_build_s"] = best_of(lambda: ConfigSpace(rules, prof, wl), repeats)
+    space = ConfigSpace(rules, prof, wl)
+    out["num_configs"] = float(len(space))
+
+    zeros = np.zeros(wl.n)
+    out["greedy_produce_s"] = best_of(
+        lambda: GreedyFast(space).produce(zeros), repeats
+    )
+    seed_dep = Deployment(GreedyFast(space).produce(zeros))
+    out["num_gpus"] = float(seed_dep.num_gpus)
+
+    out["mcts_produce_s"] = best_of(
+        lambda: MCTSSlow(space, iterations=spec["mcts_iters"], seed=0).produce(zeros),
+        repeats,
+    )
+
+    # GA-round timing: one §5.2 round (crossover + mutation + batched
+    # fitness + elitist selection) with the registered greedy refill, so the
+    # number tracks the GA machinery itself; the MCTS-refill variant rides
+    # along as ga_round_mcts_s (it is dominated by the MCTS internals that
+    # mcts_produce_s already tracks).
+    def ga_round() -> None:
+        ga = GeneticOptimizer(
+            space, GreedyFast(space), population=spec["ga_pop"], rounds=1, seed=0
+        )
+        ga.run(seed_dep)
+
+    out["ga_round_s"] = best_of(ga_round, repeats)
+
+    def ga_round_mcts() -> None:
+        ga = GeneticOptimizer(
+            space,
+            MCTSSlow(space, iterations=spec["mcts_iters"], seed=0),
+            population=spec["ga_pop"],
+            rounds=1,
+            seed=0,
+        )
+        ga.run(seed_dep)
+
+    out["ga_round_mcts_s"] = best_of(ga_round_mcts, repeats)
+
+    optimize_share = {}
+
+    def reoptimize_cycle() -> None:
+        driver = ReoptimizeDriver(rules, prof, seed=0)
+        cluster = SimulatedCluster(rules, 1)
+        rates = {s.name: s.slo.throughput / driver.headroom for s in wl.services}
+        driver.initial_deploy(cluster, rates)
+        shifted = {svc: r * 1.4 for svc, r in rates.items()}
+        driver.reoptimize(cluster, shifted, now=0.0)
+        # the driver exposes the optimizer pipeline's wall clock (it cannot
+        # go into the byte-pinned SimReport)
+        optimize_share["s"] = driver.last_optimize_report.total_seconds
+
+    out["reoptimize_cycle_s"] = best_of(reoptimize_cycle, max(1, repeats - 1))
+    out["reoptimize_optimize_s"] = optimize_share["s"]
+    return out
+
+
+def git_rev() -> str:
+    try:
+        return (
+            subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=REPO_ROOT,
+                capture_output=True,
+                text=True,
+                check=True,
+            ).stdout.strip()
+            or "unknown"
+        )
+    except Exception:
+        return "unknown"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes, temp output")
+    ap.add_argument("--set-baseline", action="store_true",
+                    help="overwrite the recorded baseline with this run")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default=None, help="output path (default: repo BENCH_optimizer.json)")
+    args = ap.parse_args()
+
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+    repeats = 1 if args.smoke else args.repeats
+    if args.out:
+        out_path = args.out
+    elif args.smoke:
+        out_path = os.path.join(tempfile.gettempdir(), "BENCH_optimizer_smoke.json")
+    else:
+        out_path = DEFAULT_OUT
+    if args.smoke and os.path.exists(out_path):
+        # never let smoke-size timings clobber a recorded full-size baseline:
+        # it was measured from the pre-change commit and cannot be reproduced
+        # at HEAD.  (Re-overwriting a previous smoke artifact is fine.)
+        try:
+            with open(out_path) as f:
+                existing = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            existing = {}
+        if "baseline" in existing and set(existing.get("workloads", {})) != set(
+            SMOKE_SIZES
+        ):
+            ap.error(
+                f"--smoke refuses to overwrite {out_path} (holds a full-size "
+                "baseline); pick a fresh --out"
+            )
+
+    current: Dict[str, Dict[str, float]] = {}
+    for name, spec in sizes.items():
+        current[name] = bench_size(name, spec, repeats)
+        timings = {k: round(v, 6) for k, v in current[name].items()}
+        print(f"[{name}] {timings}")
+
+    doc: Dict = {}
+    if os.path.exists(out_path) and not args.smoke:
+        try:
+            with open(out_path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            doc = {}
+
+    doc.setdefault("schema", 1)
+    doc["units"] = "seconds (best-of repeats)"
+    doc["workloads"] = {n: dict(s) for n, s in sizes.items()}
+    if args.set_baseline or "baseline" not in doc:
+        doc["baseline"] = current
+        doc["baseline_git"] = git_rev()
+    doc["current"] = current
+    doc["current_git"] = git_rev()
+    doc["speedup"] = {}
+    for size, cur in current.items():
+        base = doc["baseline"].get(size, {})
+        doc["speedup"][size] = {
+            key.removesuffix("_s"): round(base[key] / cur[key], 2)
+            for key in cur
+            if key.endswith("_s") and base.get(key, 0) > 0 and cur[key] > 0
+        }
+
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    # validate: the file must round-trip as JSON with the expected sections
+    with open(out_path) as f:
+        loaded = json.load(f)
+    assert "baseline" in loaded and "current" in loaded, "malformed bench output"
+    print(f"wrote {out_path}")
+    if doc["speedup"]:
+        print("speedup vs baseline:", json.dumps(doc["speedup"], sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,11 +16,12 @@ from repro.core.deployment import (
     ConfigSpace,
     Deployment,
     GPUConfig,
+    IndexedDeployment,
     InstanceAssignment,
     OptimizerProcedure,
     Workload,
 )
-from repro.core.ga import GeneticOptimizer, crossover, mutate_swap
+from repro.core.ga import GeneticOptimizer, crossover, fitness_batch, mutate_swap
 from repro.core.greedy import GreedyFast
 from repro.core.lower_bound import (
     baseline_homogeneous,
@@ -45,12 +46,12 @@ from repro.core.tpu_slice import TpuSliceRules, tpu_slice_rules
 __all__ = [
     "A100Rules", "a100_rules", "Action", "ArchPerfSpec", "BeamGreedy",
     "ConfigSpace", "Controller", "Deployment", "GeneticOptimizer", "GPUConfig",
-    "GreedyFast", "Instance", "InstanceAssignment", "MCTSSlow",
+    "GreedyFast", "IndexedDeployment", "Instance", "InstanceAssignment", "MCTSSlow",
     "OptimizeReport", "OptimizerProcedure", "parallel_makespan", "PerfProfile",
     "ReconfigRules", "RooflineProfiles", "Service", "SimulatedCluster", "SLO",
     "SyntheticPaperProfiles", "TpuChip", "TpuSliceRules", "tpu_slice_rules",
     "TransitionReport", "TwoPhaseOptimizer", "Workload",
     "baseline_homogeneous", "baseline_static_mix", "crossover",
-    "lower_bound_gpus", "mutate_swap", "MeasuredProfile",
+    "fitness_batch", "lower_bound_gpus", "mutate_swap", "MeasuredProfile",
     "PairSpaceExact", "per_service_lower_bound",
 ]

@@ -36,7 +36,13 @@ Content = Tuple[Tuple[int, str], ...]  # sorted ((size, service), ...)
 
 
 def _config_content(cfg: GPUConfig) -> Counter:
-    return Counter((a.size, a.service) for a in cfg.assignments if a.service)
+    # memoized on the (frozen) config: transition planning consults target
+    # contents O(targets x devices) times
+    c = cfg.__dict__.get("_content")
+    if c is None:
+        c = Counter((a.size, a.service) for a in cfg.assignments if a.service)
+        cfg.__dict__["_content"] = c
+    return c
 
 
 def _gpu_content(g: GPUState) -> Counter:
@@ -197,11 +203,13 @@ class Controller:
             taken = set(bound.values())
             return [gid for gid in cluster.gpus if gid not in taken]
 
-        # 1) bind exact matches first
+        # 1) bind exact matches first (no actions run here, so per-GPU
+        # contents can be computed once for the whole pass)
+        contents = {gid: _gpu_content(g) for gid, g in cluster.gpus.items()}
         for ti, cfg in enumerate(targets):
             want = _config_content(cfg)
             for gid in unbound_gpus():
-                if _gpu_content(cluster.gpus[gid]) == want:
+                if contents[gid] == want:
                     bound[ti] = gid
                     break
 
@@ -210,11 +218,15 @@ class Controller:
             if ti in bound:
                 continue
             want = _config_content(cfg)
-            # pick the unbound GPU with the most overlap
-            def overlap(gid: int) -> int:
-                return sum((_gpu_content(cluster.gpus[gid]) & want).values())
-
+            # pick the unbound GPU with the most overlap; contents are
+            # re-read per target (the previous target's migrations moved
+            # instances) but only once per candidate, not per comparison
             cands = unbound_gpus()
+            contents = {gid: _gpu_content(cluster.gpus[gid]) for gid in cands}
+
+            def overlap(gid: int) -> int:
+                return sum((contents[gid] & want).values())
+
             gid = max(cands, key=overlap)
             g = cluster.gpus[gid]
             taken = set(bound.values()) | {gid}

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,40 +40,83 @@ def _fitness(dep: Deployment, space: ConfigSpace) -> Tuple[int, float]:
     return (dep.num_gpus, float(np.sum(np.clip(c - 1.0, 0.0, None))))
 
 
+def fitness_batch(
+    deps: Sequence[Deployment], space: ConfigSpace
+) -> List[Tuple[int, float]]:
+    """Fitness of a whole population in one vectorized pass.
+
+    Bit-identical to ``[_fitness(d, space) for d in deps]``: each config's
+    exact utility vector is computed once (memoized per config *object* by
+    ``space.utility_cached``) and accumulated into a ``(P, n)`` completion
+    matrix row by row *in deployment config order* — that sequential
+    accumulation order is load-bearing: it reproduces the legacy
+    config-by-config summation float-for-float, so the GA's selection order
+    (and therefore its seeded output) is unchanged.  Do not replace it with
+    an order-changing scatter (``np.add.at`` over a globally stacked index
+    array is fine only if rows stay grouped per deployment in config order);
+    the slack reduction over the matrix stays vectorized.
+    """
+    if not deps:
+        return []
+    comp = np.zeros((len(deps), space.workload.n))
+    for p, dep in enumerate(deps):
+        row = comp[p]
+        for cfg in dep.configs:
+            row += space.utility_cached(cfg)
+    slack = np.sum(np.clip(comp - 1.0, 0.0, None), axis=1)
+    return [(dep.num_gpus, float(s)) for dep, s in zip(deps, slack)]
+
+
 def mutate_swap(dep: Deployment, rng: np.random.Generator, swaps: int = 4) -> Deployment:
-    """Swap services between same-size instances of different configs."""
+    """Swap services between same-size instances of different configs.
+
+    Candidate filtering runs on flat size/service arrays (services swap as
+    integer ids alongside the assignment objects); ``np.flatnonzero``
+    preserves the scan order of the original list comprehension, so the
+    seeded swap sequence is unchanged.
+    """
     configs = [list(c.assignments) for c in dep.configs]
-    flat = [
-        (gi, ii)
+    sid: dict = {}
+    items = [
+        (gi, ii, a.size, sid.setdefault(a.service, len(sid)))
         for gi, assigns in enumerate(configs)
         for ii, a in enumerate(assigns)
         if a.service is not None
     ]
+    flat: List[Tuple[int, int]] = [(gi, ii) for gi, ii, _, _ in items]
+    size_arr = np.array([t[2] for t in items], dtype=np.int64)
+    svc_arr = np.array([t[3] for t in items], dtype=np.int64)
+    touched = set()
     for _ in range(swaps):
         if len(flat) < 2:
             break
-        i1 = rng.integers(len(flat))
-        g1, a1 = flat[i1]
-        s1 = configs[g1][a1]
-        cands = [
-            (g, a)
-            for (g, a) in flat
-            if configs[g][a].size == s1.size
-            and configs[g][a].service != s1.service
-            and (g, a) != (g1, a1)
-        ]
-        if not cands:
+        i1 = int(rng.integers(len(flat)))
+        # same-size instances running a different service; the picked slot
+        # itself is excluded for free (its service equals its own)
+        cands = np.flatnonzero(
+            (size_arr == size_arr[i1]) & (svc_arr != svc_arr[i1])
+        )
+        if not len(cands):
             continue
-        g2, a2 = cands[rng.integers(len(cands))]
-        s2 = configs[g2][a2]
+        j = int(cands[rng.integers(len(cands))])
+        g1, a1 = flat[i1]
+        g2, a2 = flat[j]
+        s1, s2 = configs[g1][a1], configs[g2][a2]
         configs[g1][a1], configs[g2][a2] = (
             InstanceAssignment(s1.size, s2.service, s2.batch, s2.throughput),
             InstanceAssignment(s2.size, s1.service, s1.batch, s1.throughput),
         )
+        svc_arr[i1], svc_arr[j] = svc_arr[j], svc_arr[i1]
+        touched.add(g1)
+        touched.add(g2)
+    # untouched configs keep their objects (and their memoized canonical /
+    # utility), so downstream batched fitness stays warm
     return Deployment(
         [
-            GPUConfig(dep.configs[gi].partition, tuple(assigns))
-            for gi, assigns in enumerate(configs)
+            GPUConfig(dep.configs[gi].partition, tuple(configs[gi]))
+            if gi in touched
+            else dep.configs[gi]
+            for gi in range(len(configs))
         ]
     )
 
@@ -92,7 +135,7 @@ def crossover(
     kept = [c for i, c in enumerate(dep.configs) if i not in erase]
     c = np.zeros(space.workload.n)
     for cfg in kept:
-        c += cfg.utility(space.workload)
+        c += space.utility_cached(cfg)  # exact per-config utility, memoized
     refill = slow.produce(c)
     return Deployment(kept + refill)
 
@@ -134,7 +177,9 @@ class GeneticOptimizer:
         while len(pop) < self.population:
             pop.append(mutate_swap(seed_deployment, self.rng))
         history = [min(p.num_gpus for p in pop)]
-        best = min(pop, key=lambda d: _fitness(d, space))
+        fits = fitness_batch(pop, space)
+        bi = min(range(len(pop)), key=fits.__getitem__)
+        best, best_fit = pop[bi], fits[bi]
         stale = 0
         t0 = time.monotonic()
         for _ in range(self.rounds):
@@ -144,18 +189,25 @@ class GeneticOptimizer:
             for parent in pop:
                 child = crossover(parent, space, self.slow, self.rng, self.erase_frac)
                 children.append(mutate_swap(child, self.rng))
-            # elitism: originals compete with children (§5.2)
+            # elitism: originals compete with children (§5.2); the whole
+            # merged population is scored in one batched call, then
+            # decorate-sort-undecorate keeps the stable ordering
             merged = pop + children
-            merged.sort(key=lambda d: _fitness(d, space))
-            pop = merged[: self.population]
-            new_best = pop[0]
-            if _fitness(new_best, space) < _fitness(best, space):
-                best = new_best
+            fits = fitness_batch(merged, space)
+            order = sorted(range(len(merged)), key=fits.__getitem__)
+            pop = [merged[i] for i in order[: self.population]]
+            new_best, new_fit = pop[0], fits[order[0]]
+            if new_fit < best_fit:
+                best, best_fit = new_best, new_fit
                 stale = 0
             else:
                 stale += 1
             history.append(best.num_gpus)
             if stale >= self.patience:
                 break
-        assert best.is_valid(space.workload)
+        # same accumulation as Deployment.is_valid, from the utility memo
+        comp = np.zeros(space.workload.n)
+        for cfg in best.configs:
+            comp += space.utility_cached(cfg)
+        assert bool(np.all(comp >= 1.0 - 1e-9))
         return GAResult(best=best, history=history)

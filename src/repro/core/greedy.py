@@ -11,13 +11,21 @@ we build a packed candidate greedily — every instance of every full
 partition is assigned to the service with the highest need-weighted marginal
 utility — and let it compete with the pair configs on score.
 
+Array-native hot path: completion and the per-config score vector are
+maintained *incrementally* (a chosen pair config touches ≤ 2 services, so
+only the configs sharing those services are re-scored), and the packed
+candidate is one vectorized scan advancing every partition in lock-step
+(``ConfigSpace.packed_tables``) instead of a per-service Python loop.  Both
+paths reproduce the scalar reference float-for-float — same seed, same
+deployment, byte-identical downstream ``SimReport``s.
+
 Complexity: O(#configs) numpy work per round, #rounds = #devices emitted —
 the paper's O(n²m).
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -25,6 +33,7 @@ from repro.core.deployment import (
     ConfigSpace,
     Deployment,
     GPUConfig,
+    IndexedDeployment,
     InstanceAssignment,
     OptimizerProcedure,
     make_assignment,
@@ -38,6 +47,8 @@ class GreedyFast(OptimizerProcedure):
 
     # -- Fig. 15 lines 18-22: packed multi-service candidate --------------------
     def _packed_candidate(self, completion: np.ndarray) -> Optional[GPUConfig]:
+        """Scalar reference implementation (kept for the property tests that
+        pin the vectorized scan to it; the hot path uses ``_packed_scan``)."""
         w = self.space.workload
         req = w.required()
         need0 = np.clip(1.0 - completion, 0.0, None)
@@ -69,35 +80,131 @@ class GreedyFast(OptimizerProcedure):
                 best_cfg = GPUConfig(partition, tuple(assigns))
         return best_cfg
 
-    def produce(self, completion: np.ndarray) -> List[GPUConfig]:
+    def _packed_scan(
+        self, need0: np.ndarray
+    ) -> Optional[Tuple[np.ndarray, int, np.ndarray]]:
+        """Vectorized packed-candidate scan over all full partitions at once.
+
+        Returns ``(utility, row, choices)`` of the winning partition — or
+        ``None`` when no partition scores positive — without materializing a
+        :class:`GPUConfig` (losing candidates never allocate anything).
+        Bit-identical to :meth:`_packed_candidate`.
+        """
+        tbl = self.space.packed_tables
+        if tbl.max_len == 0:
+            return None
+        # scratch buffers from the tables: valid until the next scan, which
+        # is fine — the caller consumes the winning row within the round
+        need, gains = tbl.need_buf, tbl.gains_buf
+        score, util, choice = tbl.score_buf, tbl.util_buf, tbl.choice_buf
+        np.copyto(need, need0[None, :])
+        score.fill(0.0)
+        util.fill(0.0)
+        choice.fill(-1)
+        for j, m in enumerate(tbl.M_step):  # m: (k, n) normalized throughputs
+            k = m.shape[0]
+            g_all = np.multiply(need[:k], m, out=gains[:k])
+            pick = g_all.argmax(axis=1)
+            rows = tbl.arange[:k]
+            g = g_all[rows, pick]
+            assigned = g > 0.0
+            if not assigned.all():
+                if not assigned.any():
+                    continue
+                rows, pick, g = rows[assigned], pick[assigned], g[assigned]
+            uval = m[rows, pick]
+            score[rows] += g
+            util[rows, pick] += uval
+            need[rows, pick] = np.maximum(0.0, need[rows, pick] - uval)
+            choice[rows, j] = pick
+        # earliest-partition winner in full_partitions() order, as the
+        # scalar loop's strict `score > best_score` replacement rule keeps it
+        score_orig = score[tbl.orig_to_row]
+        w = int(np.argmax(score_orig))
+        if score_orig[w] <= 0.0:
+            return None
+        row = int(tbl.orig_to_row[w])
+        return util[row], row, choice[row]
+
+    def _build_packed(self, row: int, choices: np.ndarray) -> GPUConfig:
+        """Materialize the winning packed candidate from its choice row."""
         space = self.space
+        tbl = space.packed_tables
+        names = space.workload.names
+        partition = space.partitions[int(tbl.row_to_orig[row])]
+        assigns = tuple(
+            space._assign[
+                (names[int(choices[j])] if choices[j] >= 0 else None,
+                 int(tbl.step_size[row, j]))
+            ]
+            for j in range(int(tbl.row_len[row]))
+        )
+        return GPUConfig(partition, assigns)
+
+    def produce(self, completion: np.ndarray) -> List[GPUConfig]:
+        return self._produce(completion)[0]
+
+    def produce_indexed(self, completion: np.ndarray) -> IndexedDeployment:
+        """``produce`` in the array-native representation (config order is
+        forgotten; completion math stays two gathers from here on)."""
+        _, counts, extras = self._produce(completion)
+        return IndexedDeployment(self.space, counts, extras)
+
+    def _produce(
+        self, completion: np.ndarray
+    ) -> Tuple[List[GPUConfig], np.ndarray, List[GPUConfig]]:
+        space = self.space
+        ia, ib, ua, ub = space.ia, space.ib, space.ua, space.ub
         c = completion.astype(np.float64).copy()
+        need = np.clip(1.0 - c, 0.0, None)
+        scores = need[ia] * ua + need[ib] * ub
         out: List[GPUConfig] = []
+        counts = np.zeros(len(space), dtype=np.int64)
+        extras: List[GPUConfig] = []
         guard = 0
         while np.any(c < 1.0 - 1e-9):
             guard += 1
             if guard > 100_000:
                 raise RuntimeError("greedy failed to converge")
-            scores = space.score_all(c)
-            idx = int(np.argmax(scores))
-            best_score = float(scores[idx])
-            chosen: GPUConfig = space.configs[idx]
-            chosen_u = space.utility_of(idx)
+            idx = int(np.argmax(scores)) if len(scores) else 0
+            best_score = float(scores[idx]) if len(scores) else 0.0
             # Fig. 15 lines 18-22: a packed >2-service candidate competes on
             # score every round; it wins exactly in the near-satisfied tail,
             # where two services no longer saturate a device.
-            packed = self._packed_candidate(c)
+            packed = self._packed_scan(need)
+            chosen_packed = None
             if packed is not None:
-                pu = packed.utility(space.workload)
-                need = np.clip(1.0 - c, 0.0, None)
+                pu, row, choices = packed
                 ps = float(np.sum(need * pu))
                 if ps > best_score:
-                    chosen, chosen_u, best_score = packed, pu, ps
+                    chosen_packed, best_score = (pu, row, choices), ps
             if best_score <= 0.0:
                 raise RuntimeError(
                     "no config has positive score but SLOs unmet — "
                     "some service is infeasible on every instance size"
                 )
-            out.append(chosen)
-            c = c + chosen_u
-        return out
+            if chosen_packed is None:
+                out.append(space.configs[idx])
+                counts[idx] += 1
+                i, j = int(ia[idx]), int(ib[idx])
+                c[i] += ua[idx]
+                c[j] += ub[idx]
+                changed = (i,) if i == j else (i, j)
+            else:
+                pu, row, choices = chosen_packed
+                cfg = self._build_packed(row, choices)
+                out.append(cfg)
+                extras.append(cfg)
+                c += pu
+                changed = tuple(int(t) for t in np.flatnonzero(pu))
+            # incremental maintenance: only configs touching a changed
+            # service can change score
+            for i in changed:
+                need[i] = max(0.0, 1.0 - c[i])
+            upd = (
+                space.service_configs[changed[0]]
+                if len(changed) == 1
+                else np.concatenate([space.service_configs[i] for i in changed])
+            )
+            scores[upd] = need[ia[upd]] * ua[upd] + need[ib[upd]] * ub[upd]
+        return out, counts, extras

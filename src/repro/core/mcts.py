@@ -18,6 +18,13 @@ addressed exactly as the paper does:
 Selection is UCT adapted to minimization (lower estimated total depth is
 better).  Every completed rollout yields a concrete deployment suffix, so the
 search is *anytime*: we track the best full config-sequence seen.
+
+Array-native hot path: edge generation unions the space's precomputed
+per-service boolean masks (``ConfigSpace.service_masks``) instead of a
+Python scan over every config, top-K cuts use ``np.argpartition`` (O(n)
+instead of a full sort), rollout/expansion completion updates are two
+indexed adds, and signatures are raw little-endian bytes of the bucketed
+need vector.
 """
 
 from __future__ import annotations
@@ -30,16 +37,39 @@ import numpy as np
 
 from repro.core.deployment import ConfigSpace, GPUConfig, OptimizerProcedure
 
+_BUCKETS = 8
 
-def _bucket_signature(completion: np.ndarray, buckets: int = 8) -> Tuple:
+
+def _bucket_signature(completion: np.ndarray, buckets: int = _BUCKETS) -> bytes:
     """The paper's "type of completion rates": unmet services with their
-    residual need quantized to ``buckets`` levels."""
+    residual need quantized to ``buckets`` levels (as hashable bytes)."""
     need = np.clip(1.0 - completion, 0.0, None)
     # ceil so that any strictly-positive residual lands in bucket >= 1:
     # met and nearly-met services must not share a signature, or cached
     # pools go stale and rollouts stall.
     q = np.minimum(np.ceil(need * buckets).astype(np.int64), buckets)
-    return tuple(int(x) for x in q)
+    return q.tobytes()
+
+
+def _bucket_of(need: float) -> int:
+    """Scalar twin of :func:`_bucket_signature`'s quantization (rollouts
+    maintain the bucketed vector incrementally, one touched service at a
+    time, instead of re-deriving the whole signature per step)."""
+    if need <= 0.0:
+        return 0
+    b = int(math.ceil(need * _BUCKETS))
+    return b if b < _BUCKETS else _BUCKETS
+
+
+def _top_k_desc(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the ``k`` largest scores, sorted descending with ascending
+    index as the deterministic tie-break (argpartition cut, O(n))."""
+    if k >= len(scores):
+        part = np.arange(len(scores))
+    else:
+        cut = len(scores) - k
+        part = np.argpartition(scores, cut)[cut:]
+    return part[np.lexsort((part, -scores[part]))]
 
 
 @dataclasses.dataclass
@@ -50,12 +80,19 @@ class _Node:
     edges: Optional[List[int]] = None  # config indices (top-K cut)
     visits: int = 0
     total: float = 0.0  # sum of estimated total path lengths
+    _done: Optional[bool] = None
+    # edges with no child yet, in edge order (maintained by _make_child so
+    # the selection loop need not rebuild the list every visit)
+    unvisited: Optional[List[int]] = None
 
     def q(self) -> float:
         return self.total / self.visits if self.visits else math.inf
 
     def done(self) -> bool:
-        return bool(np.all(self.completion >= 1.0 - 1e-9))
+        # completion is fixed at construction, so compute once
+        if self._done is None:
+            self._done = bool(np.all(self.completion >= 1.0 - 1e-9))
+        return self._done
 
 
 class MCTSSlow(OptimizerProcedure):
@@ -76,8 +113,36 @@ class MCTSSlow(OptimizerProcedure):
         self.ucb_c = ucb_c
         self.pool_size = pool_size
         self.rng = np.random.default_rng(seed)
-        self._pool_cache: Dict[Tuple, List[int]] = {}
-        self._rollout_memo: Dict[Tuple, Tuple[float, List[int]]] = {}
+        self._pool_cache: Dict[bytes, np.ndarray] = {}
+        self._rollout_memo: Dict[bytes, Tuple[float, List[int]]] = {}
+        # scratch for pool scoring and rollout state (single-threaded hot
+        # loops; nothing here escapes the method that fills it)
+        self._score_buf = np.empty(len(space))
+        self._score_buf2 = np.empty(len(space))
+        n = space.workload.n
+        self._need_buf = np.empty(n)
+        self._scaled_buf = np.empty(n)
+        self._q_buf = np.empty(n, dtype=np.int64)
+        self._c_buf = np.empty(n)
+        self._unmet_buf = np.empty(n, dtype=bool)
+
+    def _pick(self, seq) -> int:
+        """Uniform draw from ``seq`` — same stream as ``rng.choice(seq)``
+        (which reduces to ``integers(0, len)``) minus its array-conversion
+        and shape-handling overhead on this per-step hot path."""
+        return seq[int(self.rng.integers(0, len(seq)))]
+
+    def _scores_into_scratch(self, need: np.ndarray) -> np.ndarray:
+        """``score_all`` for a residual-need vector, gathered into the
+        shared scratch buffers (valid until the next call; ia/ib are always
+        in-bounds, so clip mode just skips the bounds check)."""
+        space = self.space
+        scores = np.take(need, space.ia, out=self._score_buf, mode="clip")
+        scores *= space.ua
+        sb = np.take(need, space.ib, out=self._score_buf2, mode="clip")
+        sb *= space.ub
+        scores += sb
+        return scores
 
     # -- edge generation: the paper's top-K child cut ---------------------------
     def _edges(self, completion: np.ndarray) -> List[int]:
@@ -86,59 +151,131 @@ class MCTSSlow(OptimizerProcedure):
         if len(unmet) == 0:
             return []
         k = min(self.sample_services, len(unmet))
-        picked = set(self.rng.choice(unmet, size=k, replace=False).tolist())
-        mask = np.array(
-            [int(ia) in picked or int(ib) in picked for ia, ib in zip(space.ia, space.ib)]
-        )
-        scores = space.score_all(completion)
-        scores = np.where(mask, scores, -1.0)
-        order = np.argsort(-scores)[: self.top_k]
+        picked = self.rng.choice(unmet, size=k, replace=False)
+        mask = np.logical_or.reduce(space.service_masks[picked])
+        scores = self._scores_into_scratch(np.maximum(1.0 - completion, 0.0))
+        # zero out configs missing the sampled services: scores are >= 0, so
+        # every positive survivor is in-mask and the filtered edge list (and
+        # its order) is identical to masking with -1
+        scores *= mask
+        order = _top_k_desc(scores, self.top_k)
         return [int(i) for i in order if scores[i] > 0.0]
 
     # -- memoized randomized estimation (Appendix A.2) ---------------------------
-    def _pool(self, completion: np.ndarray) -> List[int]:
-        sig = _bucket_signature(completion)
+    def _pool_for(self, sig: bytes, need: np.ndarray) -> np.ndarray:
+        """Pool of good candidate configs for one completion *type*.
+
+        ``need`` must equal ``max(1 - completion, 0)`` for the completion the
+        signature was taken from; scoring gathers directly from it, skipping
+        the re-derivation ``score_all`` would do.
+        """
         pool = self._pool_cache.get(sig)
         if pool is None:
-            scores = self.space.score_all(completion)
-            order = np.argsort(-scores)[: self.pool_size]
-            pool = [int(i) for i in order if scores[i] > 0.0]
+            scores = self._scores_into_scratch(need)
+            order = _top_k_desc(scores, self.pool_size)
+            pool = order[scores[order] > 0.0]
             self._pool_cache[sig] = pool
         return pool
 
+    def _pool(self, completion: np.ndarray) -> np.ndarray:
+        return self._pool_for(
+            _bucket_signature(completion), np.maximum(1.0 - completion, 0.0)
+        )
+
+    def _apply(self, c: np.ndarray, idx: int) -> None:
+        """``c += utility_of(idx)`` as two indexed adds (no allocation)."""
+        space = self.space
+        c[space.ia[idx]] += space.ua[idx]
+        c[space.ib[idx]] += space.ub[idx]
+
     def _rollout(self, completion: np.ndarray) -> Tuple[float, List[int]]:
         """Estimated #devices to finish from here, plus the config sequence."""
-        sig = _bucket_signature(completion)
-        memo = self._rollout_memo.get(sig)
+        # incremental rollout state: residual need, its bucketed signature,
+        # and the unmet count — a step touches <= 2 services, so each update
+        # is two scalar refreshes instead of three full-vector passes.  The
+        # entry signature is the bucketed vector's bytes, so the memo key
+        # falls out of the state initialization for free.
+        need, scaled, q = self._need_buf, self._scaled_buf, self._q_buf
+        np.subtract(1.0, completion, out=need)
+        np.maximum(need, 0.0, out=need)
+        np.multiply(need, float(_BUCKETS), out=scaled)
+        np.ceil(scaled, out=scaled)
+        np.minimum(scaled, float(_BUCKETS), out=scaled)
+        q[...] = scaled  # integral floats in [0, 8]: cast is exact
+        sig = q.tobytes()
+        memo_map = self._rollout_memo
+        memo = memo_map.get(sig)
         if memo is not None:
             return memo
-        c = completion.copy()
+        space = self.space
+        ia, ib, ua, ub = space.ia, space.ib, space.ua, space.ub
+        c = self._c_buf
+        np.copyto(c, completion)
+        unmet = self._unmet_buf
+        np.less(c, 1.0 - 1e-9, out=unmet)
+        n_unmet = int(np.count_nonzero(unmet))
         path: List[int] = []
+        append = path.append
+        pool_for = self._pool_for
+        draw = self.rng.integers
+        bucket_of = _bucket_of
+        thr = 1.0 - 1e-9
         steps = 0.0
-        while np.any(c < 1.0 - 1e-9):
-            pool = self._pool(c)
-            if not pool:
-                # residual unsatisfiable via pooled configs: bail with +inf
-                self._rollout_memo[sig] = (math.inf, [])
-                return math.inf, []
-            idx = int(self.rng.choice(pool))
-            c = c + self.space.utility_of(idx)
-            path.append(idx)
+        pool = None  # invariant: valid for the current q whenever not None
+        while n_unmet:
+            if pool is None:
+                pool = pool_for(q.tobytes(), need)
+                if not len(pool):
+                    # residual unsatisfiable via the pools: bail with +inf
+                    memo_map[sig] = (math.inf, [])
+                    return math.inf, []
+            idx = pool[draw(0, len(pool))]
+            i1 = ia[idx]
+            i2 = ib[idx]
+            c[i1] += ua[idx]
+            c[i2] += ub[idx]
+            ci = c[i1]
+            v = 1.0 - ci
+            nv = v if v > 0.0 else 0.0
+            need[i1] = nv
+            b = bucket_of(nv)
+            if b != q[i1]:
+                q[i1] = b
+                pool = None  # signature moved: next step re-resolves
+            now = ci < thr
+            if unmet[i1] != now:
+                unmet[i1] = now
+                n_unmet += 1 if now else -1
+            if i1 != i2:
+                ci = c[i2]
+                v = 1.0 - ci
+                nv = v if v > 0.0 else 0.0
+                need[i2] = nv
+                b = bucket_of(nv)
+                if b != q[i2]:
+                    q[i2] = b
+                    pool = None
+                now = ci < thr
+                if unmet[i2] != now:
+                    unmet[i2] = now
+                    n_unmet += 1 if now else -1
+            append(int(idx))
             steps += 1.0
             if steps > 10_000:
                 return math.inf, []
-        self._rollout_memo[sig] = (steps, path)
+        memo_map[sig] = (steps, path)
         return steps, path
 
     # -- UCT for minimization -----------------------------------------------------
     def _select_child(self, node: _Node) -> Tuple[int, _Node]:
         assert node.edges
         best, best_val = None, math.inf
+        log_visits = math.log(node.visits) if node.visits else 0.0
         for e in node.edges:
             child = node.children.get(e)
             if child is None or child.visits == 0:
                 return e, child if child else self._make_child(node, e)
-            explore = self.ucb_c * math.sqrt(math.log(node.visits) / child.visits)
+            explore = self.ucb_c * math.sqrt(log_visits / child.visits)
             q = child.q()
             val = (q if math.isfinite(q) else 1e18) - explore
             if val < best_val:
@@ -146,11 +283,12 @@ class MCTSSlow(OptimizerProcedure):
         return best
 
     def _make_child(self, node: _Node, edge: int) -> _Node:
-        child = _Node(
-            completion=node.completion + self.space.utility_of(edge),
-            depth=node.depth + 1,
-        )
+        c = node.completion.copy()
+        self._apply(c, edge)
+        child = _Node(completion=c, depth=node.depth + 1)
         node.children[edge] = child
+        if node.unvisited is not None:
+            node.unvisited.remove(edge)
         return child
 
     # -- main loop ------------------------------------------------------------------
@@ -167,11 +305,11 @@ class MCTSSlow(OptimizerProcedure):
             while not node.done():
                 if node.edges is None:
                     node.edges = self._edges(node.completion)
+                    node.unvisited = list(node.edges)
                 if not node.edges:
                     break
-                unvisited = [e for e in node.edges if e not in node.children]
-                if unvisited:
-                    e = int(self.rng.choice(unvisited))
+                if node.unvisited:
+                    e = int(self._pick(node.unvisited))
                     node = self._make_child(node, e)
                     path.append(e)
                     break
@@ -201,7 +339,7 @@ class MCTSSlow(OptimizerProcedure):
         for i in best_path:
             if not np.any(c < 1.0 - 1e-9):
                 break  # drop superfluous tail configs
-            c = c + space.utility_of(i)
+            self._apply(c, i)
             out.append(i)
         guard = 0
         while np.any(c < 1.0 - 1e-9):
@@ -212,6 +350,6 @@ class MCTSSlow(OptimizerProcedure):
             idx = int(np.argmax(scores))
             if scores[idx] <= 0.0:
                 raise RuntimeError("MCTS repair: residual unsatisfiable")
-            c = c + space.utility_of(idx)
+            self._apply(c, idx)
             out.append(idx)
         return [space.configs[i] for i in out]

@@ -20,6 +20,7 @@ from repro.core.deployment import (
     ConfigSpace,
     Deployment,
     GPUConfig,
+    IndexedDeployment,
     OptimizerProcedure,
 )
 from repro.core.ga import GAResult, GeneticOptimizer
@@ -90,6 +91,10 @@ class OptimizeReport:
     fast_seconds: float
     total_seconds: float
 
+    def best_indexed(self, space: ConfigSpace) -> IndexedDeployment:
+        """The winning deployment in the array-native representation."""
+        return IndexedDeployment.from_deployment(space, self.best_deployment)
+
 
 class TwoPhaseOptimizer:
     def __init__(
@@ -104,8 +109,22 @@ class TwoPhaseOptimizer:
         mcts_iterations: int = 200,
         seed: int = 0,
         time_budget_s: Optional[float] = None,
+        space: Optional[ConfigSpace] = None,
     ):
-        self.space = ConfigSpace(rules, profile, workload)
+        # enumeration dominates setup cost — callers that already hold the
+        # ConfigSpace for this exact problem can pass it in
+        if space is not None:
+            if (
+                space.workload != workload
+                or space.rules is not rules
+                or space.profile is not profile
+            ):
+                raise ValueError(
+                    "space was built for different rules/profile/workload"
+                )
+            self.space = space
+        else:
+            self.space = ConfigSpace(rules, profile, workload)
         self.fast = FAST_ALGORITHMS[fast](self.space)
         if slow == "mcts":
             self.slow: OptimizerProcedure = MCTSSlow(

@@ -26,7 +26,7 @@ from typing import Dict, List, Mapping, Optional, Tuple
 from repro.core.cluster import SimulatedCluster
 from repro.core.controller import Controller, TransitionReport
 from repro.core.deployment import Deployment, Workload
-from repro.core.optimizer import TwoPhaseOptimizer
+from repro.core.optimizer import OptimizeReport, TwoPhaseOptimizer
 from repro.core.profiles import PerfProfile
 from repro.core.rms import SLO, ReconfigRules
 
@@ -81,6 +81,11 @@ class ReoptimizeDriver:
         self.seed = seed
         self.optimizer_kwargs = dict(optimizer_kwargs or {})
         self.workload: Optional[Workload] = None  # currently deployed target
+        # wall-clock of the most recent optimizer pipeline run; optimizer
+        # latency sits on the serving hot path (every reoptimize fires the
+        # full greedy/GA/MCTS stack), so the closed loop exposes it for
+        # benchmarks without touching the deterministic SimReport bytes
+        self.last_optimize_report: Optional[OptimizeReport] = None
 
     # -- observation --------------------------------------------------------------
     def workload_for(self, observed_rates: Mapping[str, float]) -> Workload:
@@ -114,7 +119,9 @@ class ReoptimizeDriver:
             seed=self.seed,
             **self.optimizer_kwargs,
         )
-        return opt.run(skip_phase2=not self.use_phase2).best_deployment
+        report = opt.run(skip_phase2=not self.use_phase2)
+        self.last_optimize_report = report
+        return report.best_deployment
 
     # -- actuation ----------------------------------------------------------------
     def initial_deploy(

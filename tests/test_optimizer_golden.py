@@ -1,0 +1,174 @@
+"""Golden regression tests pinning seeded optimizer outputs.
+
+The array-native optimizer core (indexed deployments, batched fitness,
+vectorized greedy/MCTS paths) must not change what the algorithms *decide*:
+same seed => the same configs in the same order.  These tests compare the
+seeded outputs of ``GreedyFast``, ``MCTSSlow`` and ``GeneticOptimizer`` —
+plus a SHA-256 of a full closed-loop ``SimReport.to_json()`` (the repo's
+determinism contract) — against ``tests/golden/optimizer_golden.json``.
+
+Greedy, GA, and the simulator hash are bit-identical to the
+pre-vectorization implementation.  The standalone MCTS entries were
+re-recorded once when top-K cuts moved from ``np.argsort`` to
+``np.argpartition``: configs with *exactly* equal scores are now ordered by
+ascending config index (well-defined, numpy-version-stable) instead of
+quicksort's unspecified tie order; solution sizes are unchanged.
+
+Regenerate (only when behavior is *intentionally* changed) with::
+
+    PYTHONPATH=src python tests/test_optimizer_golden.py --regen
+"""
+
+import hashlib
+import json
+import os
+import sys
+
+import numpy as np
+
+if __name__ == "__main__":  # regen mode runs without pytest/conftest
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (
+    SLO,
+    ConfigSpace,
+    Deployment,
+    GeneticOptimizer,
+    GreedyFast,
+    MCTSSlow,
+    SyntheticPaperProfiles,
+    Workload,
+    a100_rules,
+    tpu_slice_rules,
+)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "optimizer_golden.json")
+
+# (name, n_models, profile seed, slo lognormal scale, rules factory)
+PROBLEMS = [
+    ("a100_n6", 6, 3, 7.4, a100_rules),
+    ("a100_n10", 10, 5, 8.2, a100_rules),
+]
+
+
+def _problem(n, seed, scale, rules_factory):
+    sizes = (1, 2, 4, 8, 16) if rules_factory is tpu_slice_rules else (1, 2, 3, 4, 7)
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed, sizes=sizes)
+    rng = np.random.default_rng(seed)
+    slos = {m: SLO(float(rng.lognormal(scale, 0.7)), 100.0) for m in prof.services()}
+    wl = Workload.make(slos)
+    return prof, wl, ConfigSpace(rules_factory(), prof, wl)
+
+
+def _canon(cfg):
+    """JSON-able canonical form of one GPU config."""
+    return [[int(s), svc, int(b)] for (s, svc, b) in cfg.canonical()]
+
+
+def _deployment_record(configs, wl):
+    dep = Deployment(list(configs))
+    return {
+        "configs": [_canon(c) for c in configs],  # order preserved
+        "num_gpus": dep.num_gpus,
+        "completion": [float(x) for x in dep.completion_rates(wl)],
+    }
+
+
+def compute_golden():
+    golden = {"schema": 1, "problems": {}}
+    for name, n, seed, scale, rules_factory in PROBLEMS:
+        prof, wl, space = _problem(n, seed, scale, rules_factory)
+        entry = {}
+
+        entry["greedy"] = _deployment_record(
+            GreedyFast(space).produce(np.zeros(wl.n)), wl
+        )
+        entry["greedy_partial"] = _deployment_record(
+            GreedyFast(space).produce(np.full(wl.n, 0.55)), wl
+        )
+
+        for mseed in (0, 7):
+            cfgs = MCTSSlow(space, iterations=80, seed=mseed).produce(np.zeros(wl.n))
+            entry[f"mcts_seed{mseed}"] = _deployment_record(cfgs, wl)
+
+        seed_dep = Deployment(GreedyFast(space).produce(np.zeros(wl.n)))
+        for slow_name in ("greedy", "mcts"):
+            slow = (
+                GreedyFast(space)
+                if slow_name == "greedy"
+                else MCTSSlow(space, iterations=40, seed=0)
+            )
+            res = GeneticOptimizer(
+                space, slow, population=4, rounds=3, seed=0
+            ).run(seed_dep)
+            entry[f"ga_{slow_name}"] = {
+                "best": sorted(_canon(c) for c in res.best.configs),
+                "num_gpus": res.best.num_gpus,
+                "history": list(res.history),
+            }
+        golden["problems"][name] = entry
+
+    # TPU rule-set greedy (different partition universe)
+    prof, wl, space = _problem(5, 3, 7.0, tpu_slice_rules)
+    golden["problems"]["tpu_n5"] = {
+        "greedy": _deployment_record(GreedyFast(space).produce(np.zeros(wl.n)), wl)
+    }
+
+    # closed-loop simulator: the determinism contract, hashed
+    from repro.sim import ClusterSimulator, SimConfig, diurnal_trace
+
+    sprof = SyntheticPaperProfiles(n_models=5, seed=9)
+    rng = np.random.default_rng(42)
+    peaks = {m: float(rng.lognormal(7.0, 0.5)) for m in sprof.services()}
+    trace = diurnal_trace(peaks, duration_s=2 * 3600.0, bin_s=60.0,
+                          night_frac=0.25, seed=0)
+    rep = ClusterSimulator(
+        a100_rules(), sprof, trace, SimConfig(seed=0, reoptimize_every_s=1800.0)
+    ).run()
+    blob = rep.to_json()
+    golden["sim"] = {
+        "sha256": hashlib.sha256(blob.encode()).hexdigest(),
+        "bytes": len(blob),
+        "transitions": len(rep.transitions),
+        "final_gpus": rep.final_gpus,
+    }
+    return golden
+
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_golden_file_exists():
+    assert os.path.exists(GOLDEN_PATH), (
+        "golden file missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_optimizer_golden.py --regen`"
+    )
+
+
+def test_seeded_outputs_match_golden():
+    got = compute_golden()
+    want = _load_golden()
+    # compare piecewise for readable failures
+    assert sorted(got["problems"]) == sorted(want["problems"])
+    for name, entry in want["problems"].items():
+        for key, val in entry.items():
+            assert got["problems"][name][key] == val, (
+                f"{name}/{key} diverged from the recorded seed behavior"
+            )
+    assert got["sim"] == want["sim"], (
+        "SimReport.to_json() is no longer byte-identical to the recorded run"
+    )
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        data = compute_golden()
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH} ({os.path.getsize(GOLDEN_PATH)} bytes)")
+    else:
+        print(__doc__)

@@ -1,0 +1,291 @@
+"""Property tests pinning the array-native optimizer core to the scalar
+reference semantics.
+
+The vectorized paths (count-vector completions, batched GA fitness, the
+packed-candidate scan, the dense utility matrix) must reproduce the legacy
+per-config Python loops *float-for-float* — that equality is what lets the
+refactor keep seeded greedy/GA outputs and `SimReport.to_json()` bytes
+unchanged.  Each test states the exact reference loop it checks against.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    SLO,
+    ConfigSpace,
+    Deployment,
+    GreedyFast,
+    IndexedDeployment,
+    SyntheticPaperProfiles,
+    Workload,
+    a100_rules,
+    fitness_batch,
+    mutate_swap,
+)
+from repro.core.ga import _fitness
+from repro.core.mcts import MCTSSlow, _bucket_signature, _top_k_desc
+
+
+def make_problem(n=6, seed=3, scale=7.4):
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed)
+    rng = np.random.default_rng(seed)
+    slos = {m: SLO(float(rng.lognormal(scale, 0.7)), 100.0) for m in prof.services()}
+    wl = Workload.make(slos)
+    return prof, wl, ConfigSpace(a100_rules(), prof, wl)
+
+
+def random_deployment(space, rng):
+    """A deployment mixing enumerated configs (some repeated) and a mutant."""
+    k = int(rng.integers(3, 12))
+    idx = rng.integers(0, len(space), size=k)
+    dep = Deployment([space.configs[int(i)] for i in idx])
+    return mutate_swap(dep, rng, swaps=3)
+
+
+# -- Workload --------------------------------------------------------------------
+
+
+def test_workload_index_matches_linear_scan():
+    _, wl, _ = make_problem()
+    for svc in wl.services:
+        scanned = next(s.index for s in wl.services if s.name == svc.name)
+        assert wl.index(svc.name) == scanned
+    with pytest.raises(KeyError):
+        wl.index("no-such-service")
+
+
+# -- count-vector completions ----------------------------------------------------
+
+
+@given(seed=st.integers(0, 40))
+@settings(max_examples=10, deadline=None)
+def test_completion_of_counts_exactly_matches_scalar_loop(seed):
+    """Reference: two index-order accumulation loops (a-side then b-side),
+    summed — precisely what the two np.bincount gathers compute."""
+    _, wl, space = make_problem(seed=3)
+    rng = np.random.default_rng(seed)
+    counts = np.zeros(len(space), dtype=np.int64)
+    hot = rng.integers(0, len(space), size=int(rng.integers(1, 30)))
+    for i in hot:
+        counts[int(i)] += 1
+
+    acc_a = np.zeros(wl.n)
+    acc_b = np.zeros(wl.n)
+    for i in np.flatnonzero(counts):
+        w = float(counts[i])
+        acc_a[space.ia[i]] += w * space.ua[i]
+        acc_b[space.ib[i]] += w * space.ub[i]
+    ref = acc_a + acc_b
+
+    got = space.completion_of_counts(counts)
+    assert np.array_equal(got, ref)  # exact float equality
+
+
+def test_util_matrix_rows_equal_utility_of():
+    _, _, space = make_problem()
+    for i in range(0, len(space), max(1, len(space) // 60)):
+        assert np.array_equal(space.util_matrix[i], space.utility_of(i))
+
+
+def test_count_matrix_completion_matches_single_rows():
+    # the batched matmul path is the throughput-oriented API: BLAS blocking
+    # differs between the 2D and per-row kernels, so its contract is
+    # numerical (1e-9), not bitwise like the bincount path above
+    _, wl, space = make_problem()
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 3, size=(5, len(space)))
+    batch = space.completion_of_count_matrix(counts.astype(np.float64))
+    for p in range(counts.shape[0]):
+        ref = space.completion_of_counts(counts[p])
+        np.testing.assert_allclose(batch[p], ref, rtol=1e-9, atol=1e-12)
+
+
+# -- IndexedDeployment -----------------------------------------------------------
+
+
+@given(seed=st.integers(0, 40))
+@settings(max_examples=10, deadline=None)
+def test_indexed_deployment_round_trip_and_completion(seed):
+    _, wl, space = make_problem(seed=3)
+    rng = np.random.default_rng(seed)
+    dep = random_deployment(space, rng)
+    idep = IndexedDeployment.from_deployment(space, dep)
+    assert idep.num_gpus == dep.num_gpus
+    back = idep.to_deployment()
+    assert sorted(c.canonical() for c in back.configs) == sorted(
+        c.canonical() for c in dep.configs
+    )
+    np.testing.assert_allclose(
+        idep.completion_rates(), dep.completion_rates(wl), rtol=1e-9, atol=1e-12
+    )
+
+
+def test_greedy_produce_indexed_consistent_with_produce():
+    _, wl, space = make_problem(n=7, seed=5, scale=7.8)
+    configs = GreedyFast(space).produce(np.zeros(wl.n))
+    idep = GreedyFast(space).produce_indexed(np.zeros(wl.n))
+    assert idep.num_gpus == len(configs)
+    assert sorted(c.canonical() for c in idep.to_deployment().configs) == sorted(
+        c.canonical() for c in configs
+    )
+    assert idep.is_valid()
+    # the generic OptimizerProcedure.solve_indexed round-trips the same way
+    sdep = GreedyFast(space).solve_indexed()
+    assert sdep.num_gpus == len(configs) and sdep.is_valid()
+
+
+def test_two_phase_space_reuse_and_best_indexed():
+    prof, wl, space = make_problem(n=5, seed=5, scale=7.2)
+    from repro.core import TwoPhaseOptimizer, tpu_slice_rules
+
+    opt = TwoPhaseOptimizer(space.rules, prof, wl, space=space)
+    assert opt.space is space
+    rep = opt.run(skip_phase2=True)
+    idep = rep.best_indexed(space)
+    assert idep.num_gpus == rep.best_deployment.num_gpus
+    assert idep.is_valid()
+    with pytest.raises(ValueError):
+        TwoPhaseOptimizer(tpu_slice_rules(), prof, wl, space=space)
+
+
+# -- batched GA fitness ----------------------------------------------------------
+
+
+@given(seed=st.integers(0, 40))
+@settings(max_examples=8, deadline=None)
+def test_fitness_batch_bit_identical_to_legacy_fitness(seed):
+    """Reference: the scalar `_fitness` (completion via config-by-config
+    `GPUConfig.utility` accumulation).  Bit-identical slack is what keeps
+    the GA's selection order — hence its seeded output — unchanged."""
+    _, wl, space = make_problem(seed=3)
+    rng = np.random.default_rng(seed)
+    deps = [random_deployment(space, rng) for _ in range(5)]
+    batch = fitness_batch(deps, space)
+    legacy = [_fitness(d, space) for d in deps]
+    assert batch == legacy  # exact tuple equality, including float slack
+
+
+# -- packed candidate scan -------------------------------------------------------
+
+
+@given(seed=st.integers(0, 60))
+@settings(max_examples=12, deadline=None)
+def test_packed_scan_matches_scalar_packed_candidate(seed):
+    """Reference: `_packed_candidate`, the per-partition/per-service scalar
+    loop from the seed implementation (kept precisely for this test)."""
+    _, wl, space = make_problem(seed=3)
+    rng = np.random.default_rng(seed)
+    completion = rng.uniform(0.0, 1.2, size=wl.n)
+    greedy = GreedyFast(space)
+    ref = greedy._packed_candidate(completion)
+    need = np.clip(1.0 - completion, 0.0, None)
+    got = greedy._packed_scan(need)
+    if ref is None:
+        assert got is None
+        return
+    assert got is not None
+    pu, row, choices = got
+    cfg = greedy._build_packed(row, choices)
+    assert cfg.canonical() == ref.canonical()
+    assert np.array_equal(pu, ref.utility(wl))  # exact float equality
+
+
+# -- greedy incremental score/completion maintenance -----------------------------
+
+
+@given(seed=st.integers(0, 40))
+@settings(max_examples=8, deadline=None)
+def test_greedy_matches_rescoring_reference(seed):
+    """The incremental path must match a from-scratch rescoring loop (the
+    seed implementation's structure) on arbitrary starting completions."""
+    _, wl, space = make_problem(seed=3)
+    rng = np.random.default_rng(seed)
+    start = rng.uniform(0.0, 0.9, size=wl.n)
+    configs = GreedyFast(space).produce(start)
+
+    # scalar reference: recompute scores from scratch every round
+    c = start.astype(np.float64).copy()
+    ref = []
+    greedy = GreedyFast(space)
+    while np.any(c < 1.0 - 1e-9):
+        scores = space.score_all(c)
+        idx = int(np.argmax(scores))
+        best_score = float(scores[idx])
+        chosen, chosen_u = space.configs[idx], space.utility_of(idx)
+        packed = greedy._packed_candidate(c)
+        if packed is not None:
+            pu = packed.utility(wl)
+            need = np.clip(1.0 - c, 0.0, None)
+            ps = float(np.sum(need * pu))
+            if ps > best_score:
+                chosen, chosen_u = packed, pu
+        ref.append(chosen)
+        c = c + chosen_u
+
+    assert [cf.canonical() for cf in configs] == [cf.canonical() for cf in ref]
+
+
+# -- MCTS building blocks --------------------------------------------------------
+
+
+def test_top_k_desc_is_k_largest_in_deterministic_order():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        scores = np.round(rng.uniform(0, 1, size=200), 2)  # force ties
+        k = int(rng.integers(1, 20))
+        got = _top_k_desc(scores, k)
+        assert len(got) == min(k, len(scores))
+        # descending scores, ties broken by ascending index
+        pairs = [(-float(scores[i]), int(i)) for i in got]
+        assert pairs == sorted(pairs)
+        # the k-th kept score is >= every dropped score
+        kept_min = min(float(scores[i]) for i in got)
+        dropped = np.delete(scores, got)
+        if len(dropped):
+            assert kept_min >= float(dropped.max()) - 1e-12
+
+
+def test_bucket_signature_distinguishes_met_from_nearly_met():
+    n = 4
+    met = np.ones(n)
+    nearly = np.ones(n)
+    nearly[2] = 1.0 - 1e-6
+    assert _bucket_signature(met) != _bucket_signature(nearly)
+    assert _bucket_signature(met) == _bucket_signature(np.full(n, 1.5))
+
+
+def test_mcts_edges_only_touch_sampled_or_scored_configs():
+    _, wl, space = make_problem(n=6, seed=3)
+    m = MCTSSlow(space, iterations=10, seed=0)
+    edges = m._edges(np.zeros(wl.n))
+    assert 0 < len(edges) <= m.top_k
+    scores = space.score_all(np.zeros(wl.n))
+    for e in edges:
+        assert scores[e] > 0.0
+
+
+# -- no jax in the numpy-only core ----------------------------------------------
+
+
+def test_core_and_sim_stay_jax_free():
+    """The performance contract: repro.core and repro.sim import no jax."""
+    import subprocess
+    import sys
+
+    code = (
+        "import sys; import repro.core, repro.sim; "
+        "bad = [m for m in sys.modules if m == 'jax' or m.startswith('jax.')]; "
+        "assert not bad, f'jax leaked into the numpy-only core: {bad}'; "
+        "print('clean')"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert out.returncode == 0, out.stderr
+    assert "clean" in out.stdout
