@@ -10,7 +10,10 @@ The JSON keeps two timing sections: ``baseline`` (recorded once, before the
 array-native optimizer core landed) and ``current`` (refreshed every run),
 plus the derived ``speedup`` ratios.  The performance contract (ROADMAP
 "Performance contract") is that medium-workload ``greedy_produce_s`` and
-``ga_round_s`` stay >= 5x faster than the recorded baseline.
+``ga_round_s`` stay >= 5x faster than the recorded baseline — a full run
+**exits non-zero** when the floor is broken (``--smoke`` and
+``--set-baseline`` skip the gate: smoke sizes have no recorded baseline and
+a fresh baseline is 1.0x by construction).
 
 Usage::
 
@@ -51,6 +54,12 @@ from repro.sim import ReoptimizeDriver
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_optimizer.json")
+
+# ROADMAP "Performance contract": floors on speedup-vs-baseline that a full
+# (non-smoke) run must keep, per workload size and metric.
+SPEEDUP_FLOORS = {
+    "medium": {"greedy_produce": 5.0, "ga_round": 5.0},
+}
 
 # (n_services, lognormal scale of SLO throughputs, MCTS iterations, GA population)
 SIZES = {
@@ -235,6 +244,32 @@ def main() -> int:
     print(f"wrote {out_path}")
     if doc["speedup"]:
         print("speedup vs baseline:", json.dumps(doc["speedup"], sort_keys=True))
+
+    # gate the perf contract: a full run against a previously recorded
+    # baseline must keep the ROADMAP floors, or the script fails the build
+    if not args.smoke and not args.set_baseline:
+        broken = []
+        for size, floors in SPEEDUP_FLOORS.items():
+            got = doc["speedup"].get(size, {})
+            for metric, floor in floors.items():
+                if metric not in got:
+                    broken.append(f"{size}.{metric}: no speedup recorded")
+                elif got[metric] < floor:
+                    broken.append(
+                        f"{size}.{metric}: {got[metric]:.2f}x < {floor:.1f}x floor"
+                    )
+        if broken:
+            print(
+                "PERF CONTRACT BROKEN (ROADMAP 'Performance contract'):\n  "
+                + "\n  ".join(broken),
+                file=sys.stderr,
+            )
+            return 1
+        print("perf contract held:", ", ".join(
+            f"{size}.{metric} >= {floor:.1f}x"
+            for size, floors in SPEEDUP_FLOORS.items()
+            for metric, floor in floors.items()
+        ))
     return 0
 
 

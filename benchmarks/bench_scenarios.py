@@ -1,0 +1,127 @@
+"""Scenario-matrix benchmark: which scheduling policy wins under which load.
+
+Runs the declarative scenario matrix (:mod:`repro.sim.scenarios` — trace
+shape x scheduler x scale x SLO policy) through the closed-loop simulator
+and writes one comparable JSON report, ``BENCH_scenarios.json`` at the repo
+root: per-cell SLO attainment, GPUs used (final/peak), in-loop reoptimize
+latency (mean transition makespan), modeled power, and the paper's headline
+"GPUs saved vs A100-as-is" (§8.1).
+
+The JSON is **seed-deterministic**: same seed => byte-identical file (the
+property CI's smoke step and tests/test_scenarios.py pin).  Wall-clock
+optimizer timings are printed to stdout only — they must never enter the
+report bytes.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/bench_scenarios.py            # full matrix
+    PYTHONPATH=src python benchmarks/bench_scenarios.py --smoke    # CI: tiny
+                                                  # matrix, temp output
+    PYTHONPATH=src python benchmarks/bench_scenarios.py --seed 7 --out /tmp/x.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sim.scenarios import (  # noqa: E402
+    ScenarioCell,
+    default_matrix,
+    matrix_doc,
+    run_cell,
+    smoke_matrix,
+)
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
+
+
+def leaderboard(cells: Dict[str, Dict]) -> List[str]:
+    """Per (trace, scale, slo) group: schedulers ranked by peak GPUs, ties
+    by mean attainment (higher better) then power (lower better)."""
+    groups: Dict[str, List[Dict]] = {}
+    for c in cells.values():
+        key = "{trace}/{scale}/{slo}".format(**c["cell"])
+        groups.setdefault(key, []).append(c)
+    lines = []
+    for key in sorted(groups):
+        ranked = sorted(
+            groups[key],
+            key=lambda c: (c["gpus_peak"], -c["mean_attainment"], c["power_w"]),
+        )
+        lines.append(
+            f"{key}: "
+            + "  ".join(
+                f"{c['cell']['scheduler']}(gpus={c['gpus_peak']},"
+                f" att={c['mean_attainment']:.3f}, saved={c['gpus_saved']})"
+                for c in ranked
+            )
+        )
+    return lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny matrix, temp output (CI gate)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="output path (default: repo BENCH_scenarios.json)")
+    args = ap.parse_args()
+
+    cells = smoke_matrix() if args.smoke else default_matrix()
+    if args.out:
+        out_path = args.out
+    elif args.smoke:
+        out_path = os.path.join(tempfile.gettempdir(), "BENCH_scenarios_smoke.json")
+    else:
+        out_path = DEFAULT_OUT
+
+    results: Dict[str, Dict] = {}
+    for cell in cells:
+        t0 = time.perf_counter()
+        res, _rep = run_cell(cell, args.seed)
+        wall = time.perf_counter() - t0
+        results[cell.name] = res.to_dict()
+        # wall-clock goes to stdout only; the JSON stays seed-deterministic
+        print(
+            f"[{cell.name}] gpus_peak={res.gpus_peak} asis={res.gpus_asis}"
+            f" saved={res.gpus_saved} att={res.mean_attainment:.3f}"
+            f" reopt_lat={res.reoptimize_latency_s:.0f}s"
+            f" power={res.power_w:.0f}W transparent={res.transparent}"
+            f" wall={wall:.2f}s"
+        )
+
+    doc = matrix_doc(cells, results, args.seed)
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+    # validate: round-trips as JSON, every cell carries the full schema
+    with open(out_path) as f:
+        loaded = json.load(f)
+    assert loaded["cells"].keys() == results.keys(), "malformed scenario report"
+    required = {
+        "slo_satisfaction", "mean_attainment", "gpus_peak", "gpus_asis",
+        "gpus_saved", "reoptimize_latency_s", "power_w", "report_sha256",
+    }
+    for name, c in loaded["cells"].items():
+        missing = required - c.keys()
+        assert not missing, f"cell {name} missing {sorted(missing)}"
+
+    print(f"wrote {out_path} ({len(results)} cells)")
+    for line in leaderboard(results):
+        print(" ", line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,6 +42,14 @@ from repro.core.profiles import (
 )
 from repro.core.rms import SLO, Instance, ReconfigRules, Service
 from repro.core.tpu_slice import TpuSliceRules, tpu_slice_rules
+from repro.core.zoo import (
+    EnergyAwareRepartitioner,
+    FragAwarePacker,
+    PowerModel,
+    WeightedScoreGreedy,
+    deployment_power,
+    stranded_slices_of,
+)
 
 __all__ = [
     "A100Rules", "a100_rules", "Action", "ArchPerfSpec", "BeamGreedy",
@@ -54,4 +62,6 @@ __all__ = [
     "baseline_homogeneous", "baseline_static_mix", "crossover",
     "fitness_batch", "lower_bound_gpus", "mutate_swap", "MeasuredProfile",
     "PairSpaceExact", "per_service_lower_bound",
+    "EnergyAwareRepartitioner", "FragAwarePacker", "PowerModel",
+    "WeightedScoreGreedy", "deployment_power", "stranded_slices_of",
 ]

@@ -29,6 +29,7 @@ from repro.core.mcts import MCTSSlow
 from repro.core.profiles import PerfProfile
 from repro.core.rms import ReconfigRules
 from repro.core.deployment import Workload
+from repro.core.zoo import EnergyAwareRepartitioner, FragAwarePacker
 
 
 class BeamGreedy(OptimizerProcedure):
@@ -75,11 +76,17 @@ class BeamGreedy(OptimizerProcedure):
 FAST_ALGORITHMS: Dict[str, Callable[[ConfigSpace], OptimizerProcedure]] = {
     "greedy": lambda s: GreedyFast(s),
     "beam": lambda s: BeamGreedy(s),
+    # the scheduler zoo (repro.core.zoo): competing policies from the
+    # retrieved MIG-scheduling literature, benchmarked by the same closed loop
+    "frag": lambda s: FragAwarePacker(s),
+    "energy": lambda s: EnergyAwareRepartitioner(s),
 }
 
 SLOW_ALGORITHMS: Dict[str, Callable[[ConfigSpace], OptimizerProcedure]] = {
     "mcts": lambda s: MCTSSlow(s),
     "greedy": lambda s: GreedyFast(s),
+    "frag": lambda s: FragAwarePacker(s),
+    "energy": lambda s: EnergyAwareRepartitioner(s),
 }
 
 

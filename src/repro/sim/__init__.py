@@ -19,9 +19,24 @@ Extension points (see ROADMAP.md "Simulator"):
 from repro.sim.events import Clock, Event, EventQueue
 from repro.sim.reoptimize import PendingTransition, ReoptimizeDriver
 from repro.sim.report import ServiceTimeline, SimReport, TransitionRecord
+from repro.sim.scenarios import (
+    SCALES,
+    SCHEDULERS,
+    SLO_POLICIES,
+    TRACE_SHAPES,
+    CellResult,
+    ScaleSpec,
+    ScenarioCell,
+    build_cell,
+    default_matrix,
+    run_cell,
+    run_matrix,
+    smoke_matrix,
+)
 from repro.sim.simulator import ClusterSimulator, SimConfig
 from repro.sim.traffic import (
     Trace,
+    correlated_surge_trace,
     diurnal_trace,
     flash_crowd_trace,
     poisson_burst_trace,
@@ -31,6 +46,9 @@ from repro.sim.traffic import (
 __all__ = [
     "Clock", "ClusterSimulator", "Event", "EventQueue", "PendingTransition",
     "ReoptimizeDriver", "ServiceTimeline", "SimConfig", "SimReport", "Trace",
-    "TransitionRecord", "diurnal_trace", "flash_crowd_trace",
-    "poisson_burst_trace", "replay_trace",
+    "TransitionRecord", "correlated_surge_trace", "diurnal_trace",
+    "flash_crowd_trace", "poisson_burst_trace", "replay_trace",
+    "SCALES", "SCHEDULERS", "SLO_POLICIES", "TRACE_SHAPES", "CellResult",
+    "ScaleSpec", "ScenarioCell", "build_cell", "default_matrix", "run_cell",
+    "run_matrix", "smoke_matrix",
 ]

@@ -70,11 +70,16 @@ class ReoptimizeDriver:
         use_phase2: bool = False,
         seed: int = 0,
         optimizer_kwargs: Optional[Dict] = None,
+        latency_targets: Optional[Mapping[str, float]] = None,
     ):
         self.rules = rules
         self.profile = profile
         self.controller = Controller(rules, profile)
         self.latency_slo_ms = latency_slo_ms
+        # per-service latency SLOs (an interactive service can demand 50 ms
+        # while a batchy one tolerates 200 ms); services absent from the map
+        # fall back to the uniform latency_slo_ms
+        self.latency_targets = dict(latency_targets or {})
         self.headroom = headroom
         self.change_threshold = change_threshold
         self.use_phase2 = use_phase2
@@ -90,10 +95,14 @@ class ReoptimizeDriver:
     # -- observation --------------------------------------------------------------
     def workload_for(self, observed_rates: Mapping[str, float]) -> Workload:
         """SLO throughput = observed rate x headroom (floored at 1 req/s so
-        the optimizer's per-service normalization stays finite)."""
+        the optimizer's per-service normalization stays finite); latency =
+        the service's entry in ``latency_targets``, else ``latency_slo_ms``."""
         return Workload.make(
             {
-                svc: SLO(max(rate * self.headroom, 1.0), self.latency_slo_ms)
+                svc: SLO(
+                    max(rate * self.headroom, 1.0),
+                    self.latency_targets.get(svc, self.latency_slo_ms),
+                )
                 for svc, rate in sorted(observed_rates.items())
             }
         )

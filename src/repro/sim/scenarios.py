@@ -1,0 +1,273 @@
+"""Declarative scenario matrix: trace shape x scheduler x scale x SLO policy.
+
+The RMS framing (§3) makes the paper's pipeline one point in a family of
+scheduling algorithms; this module is the harness that compares the family
+under diverse workloads.  A :class:`ScenarioCell` names one coordinate of
+the cross-product
+
+    TRACE_SHAPES  x  SCHEDULERS  x  SCALES  x  SLO_POLICIES
+
+and :func:`run_cell` runs that cell through the closed-loop simulator
+(:class:`repro.sim.simulator.ClusterSimulator`), returning a
+:class:`CellResult` with the comparable per-cell metrics:
+
+  * per-service SLO attainment (fraction of bins at >= 100% capacity),
+  * GPUs used (final and peak over the run),
+  * in-loop reoptimize latency (mean transition parallel makespan — the
+    Figure-13c action cost the simulator charges to in-flight capacity),
+  * the paper's headline "GPUs saved vs A100-as-is" (§8.1: whole-GPU
+    serving of the same peak demand, ``baseline_homogeneous`` at
+    ``size=device_size``),
+  * modeled power of the final instance set (:class:`repro.core.zoo.PowerModel`),
+  * a SHA-256 of the cell's ``SimReport.to_json()`` — the determinism
+    contract, per cell.
+
+Everything derives from explicit seeds: :func:`run_matrix` with the same
+seed produces a byte-identical JSON document (wall-clock timings are
+deliberately *excluded*; ``benchmarks/bench_scenarios.py`` prints them to
+stdout instead).
+
+Extending the matrix (ROADMAP "Scenario matrix"):
+
+  * new trace shape  -> add a generator to :mod:`repro.sim.traffic`, then a
+    ``TRACE_SHAPES`` entry mapping peaks+spec+seed to a ``Trace``;
+  * new scheduler    -> register it in
+    :data:`repro.core.optimizer.FAST_ALGORITHMS`, then add a ``SCHEDULERS``
+    entry naming the ``optimizer_kwargs``;
+  * new scale        -> a ``SCALES`` entry (service count, rate scale,
+    duration, cadence);
+  * new SLO policy   -> an ``SLO_POLICIES`` entry mapping sorted service
+    names to (default latency, per-service overrides).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.lower_bound import baseline_homogeneous
+from repro.core.mig import a100_rules
+from repro.core.profiles import SyntheticPaperProfiles
+from repro.core.zoo import PowerModel
+
+from repro.sim.report import SimReport
+from repro.sim.simulator import ClusterSimulator, SimConfig
+from repro.sim.traffic import (
+    Trace,
+    correlated_surge_trace,
+    diurnal_trace,
+    poisson_burst_trace,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleSpec:
+    """One point on the matrix's scale axis."""
+
+    n_services: int
+    rate_scale: float  # lognormal mean of per-service peak req/s
+    duration_s: float
+    bin_s: float
+    reoptimize_every_s: float
+    profile_seed: int = 9
+
+
+SCALES: Dict[str, ScaleSpec] = {
+    "small": ScaleSpec(3, 7.0, 2 * 3600.0, 60.0, 1800.0),
+    "medium": ScaleSpec(6, 7.6, 2 * 3600.0, 60.0, 1800.0),
+}
+
+# peaks are per-service peak req/s; generators down-scale them to base rates
+# where the shape multiplies upward, so all shapes stress comparable demand
+TRACE_SHAPES: Dict[str, Callable[[Mapping[str, float], ScaleSpec, int], Trace]] = {
+    "diurnal": lambda peaks, spec, seed: diurnal_trace(
+        peaks, duration_s=spec.duration_s, bin_s=spec.bin_s,
+        night_frac=0.25, seed=seed,
+    ),
+    "burst": lambda peaks, spec, seed: poisson_burst_trace(
+        {s: p / 3.0 for s, p in peaks.items()},
+        duration_s=spec.duration_s, bin_s=spec.bin_s,
+        burst_mult=3.0, burst_prob=0.05, burst_len_bins=5, seed=seed,
+    ),
+    "surge": lambda peaks, spec, seed: correlated_surge_trace(
+        {s: p / 4.0 for s, p in peaks.items()},
+        duration_s=spec.duration_s, bin_s=spec.bin_s,
+        surge_mult=4.0, n_surges=2, surge_len_bins=15, ramp_bins=3,
+        correlation=0.8, seed=seed,
+    ),
+}
+
+# scheduler name -> optimizer_kwargs routed to TwoPhaseOptimizer's registry
+SCHEDULERS: Dict[str, Dict[str, str]] = {
+    "greedy": {"fast": "greedy"},
+    "beam": {"fast": "beam"},
+    "frag": {"fast": "frag"},
+    "energy": {"fast": "energy"},
+}
+
+# policy name -> (sorted service names -> (default latency ms, overrides))
+SLO_POLICIES: Dict[
+    str, Callable[[List[str]], Tuple[float, Optional[Dict[str, float]]]]
+] = {
+    "uniform": lambda names: (100.0, None),
+    # alternate interactive (50 ms) / batchy (200 ms) services
+    "tiered": lambda names: (
+        100.0,
+        {n: (50.0 if i % 2 == 0 else 200.0) for i, n in enumerate(names)},
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioCell:
+    """One coordinate of the scenario matrix."""
+
+    trace: str
+    scheduler: str
+    scale: str
+    slo: str = "uniform"
+
+    @property
+    def name(self) -> str:
+        return f"{self.trace}/{self.scheduler}/{self.scale}/{self.slo}"
+
+
+def default_matrix() -> List[ScenarioCell]:
+    """The full cross-product (the matrix ``bench_scenarios.py`` publishes)."""
+    return [
+        ScenarioCell(trace, sched, scale, slo)
+        for trace in sorted(TRACE_SHAPES)
+        for sched in sorted(SCHEDULERS)
+        for scale in sorted(SCALES)
+        for slo in sorted(SLO_POLICIES)
+    ]
+
+
+def smoke_matrix() -> List[ScenarioCell]:
+    """Tiny CI matrix: both new zoo schedulers plus the paper greedy, one
+    trace per family, small scale only — fast enough for every CI run."""
+    return [
+        ScenarioCell("diurnal", "greedy", "small", "uniform"),
+        ScenarioCell("surge", "frag", "small", "uniform"),
+        ScenarioCell("surge", "energy", "small", "tiered"),
+    ]
+
+
+@dataclasses.dataclass
+class CellResult:
+    """Comparable metrics of one scenario cell (all seed-deterministic)."""
+
+    cell: ScenarioCell
+    slo_satisfaction: Dict[str, float]  # svc -> fraction of bins satisfied
+    mean_attainment: float  # mean over services of mean per-bin attainment
+    served_fraction: float  # served / arrived, worst service
+    gpus_final: int
+    gpus_peak: int
+    gpus_asis: int  # whole-GPU (A100-as-is) serving of the same peak demand
+    gpus_saved: int  # gpus_asis - gpus_peak (the paper's headline, §8.1)
+    transitions: int
+    reoptimize_checks: int
+    reoptimize_latency_s: float  # mean transition parallel makespan
+    power_w: float  # modeled power of the final instance set
+    transparent: bool  # §6 guarantee held at every trace point
+    report_sha256: str  # SHA-256 of the cell's SimReport.to_json()
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)  # recurses into the nested cell
+
+
+def build_cell(
+    cell: ScenarioCell, seed: int = 0
+) -> Tuple[ClusterSimulator, Trace]:
+    """Materialize one cell: profiles, trace, config, wired simulator."""
+    spec = SCALES[cell.scale]
+    prof = SyntheticPaperProfiles(n_models=spec.n_services, seed=spec.profile_seed)
+    rng = np.random.default_rng((seed, spec.n_services, spec.profile_seed))
+    peaks = {m: float(rng.lognormal(spec.rate_scale, 0.5)) for m in prof.services()}
+    trace = TRACE_SHAPES[cell.trace](peaks, spec, seed)
+    default_lat, targets = SLO_POLICIES[cell.slo](sorted(trace.services))
+    cfg = SimConfig(
+        reoptimize_every_s=spec.reoptimize_every_s,
+        latency_slo_ms=default_lat,
+        latency_targets=targets,
+        seed=seed,
+    )
+    sim = ClusterSimulator(
+        a100_rules(), prof, trace, cfg,
+        optimizer_kwargs=dict(SCHEDULERS[cell.scheduler]),
+    )
+    return sim, trace
+
+
+def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
+    sim, trace = build_cell(cell, seed)
+    rep = sim.run()
+
+    gpus_peak = max(
+        [rep.final_gpus]
+        + [t.gpus_before for t in rep.transitions]
+        + [t.gpus_after for t in rep.transitions]
+    )
+    # A100-as-is: whole GPUs only, sized for the same peak demand under the
+    # same headroom/SLO policy the cell's driver applies
+    rules = sim.rules
+    peak_rates = {svc: float(trace.rates[svc].max()) for svc in trace.services}
+    asis_wl = sim.driver.workload_for(peak_rates)
+    gpus_asis = baseline_homogeneous(rules, sim.profile, asis_wl, rules.device_size)
+    parallel = [t.parallel_seconds for t in rep.transitions]
+    power = PowerModel().instances_power(
+        sim.cluster.busy_instances().values(), sim.cluster.gpus_in_use()
+    )
+    result = CellResult(
+        cell=cell,
+        slo_satisfaction={s: rep.slo_satisfaction(s) for s in rep.services},
+        mean_attainment=float(
+            np.mean([rep.mean_attainment(s) for s in rep.services])
+        ),
+        served_fraction=min(rep.served_fraction(s) for s in rep.services),
+        gpus_final=rep.final_gpus,
+        gpus_peak=gpus_peak,
+        gpus_asis=gpus_asis,
+        gpus_saved=gpus_asis - gpus_peak,
+        transitions=len(rep.transitions),
+        reoptimize_checks=rep.reoptimize_checks,
+        reoptimize_latency_s=float(np.mean(parallel)) if parallel else 0.0,
+        power_w=power,
+        transparent=rep.transparent,
+        report_sha256=hashlib.sha256(rep.to_json().encode()).hexdigest(),
+    )
+    return result, rep
+
+
+def matrix_doc(
+    cells: List[ScenarioCell], results: Dict[str, Dict], seed: int
+) -> Dict:
+    """The report document schema — the single source of truth shared by
+    :func:`run_matrix` and ``benchmarks/bench_scenarios.py``."""
+    return {
+        "schema": 1,
+        "seed": seed,
+        "axes": {
+            "traces": sorted({c.trace for c in cells}),
+            "schedulers": sorted({c.scheduler for c in cells}),
+            "scales": sorted({c.scale for c in cells}),
+            "slo_policies": sorted({c.slo for c in cells}),
+        },
+        "cells": results,
+    }
+
+
+def run_matrix(cells: List[ScenarioCell], seed: int = 0) -> Dict:
+    """Run every cell; returns the deterministic report document.
+
+    Same ``cells`` + same ``seed`` => byte-identical
+    ``json.dumps(doc, sort_keys=True)`` — wall-clock never enters the doc.
+    """
+    results: Dict[str, Dict] = {}
+    for cell in cells:
+        res, _ = run_cell(cell, seed)
+        results[cell.name] = res.to_dict()
+    return matrix_doc(cells, results, seed)

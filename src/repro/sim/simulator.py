@@ -50,6 +50,9 @@ class SimConfig:
 
     reoptimize_every_s: float = 1800.0  # observe->optimize cadence
     latency_slo_ms: float = 100.0  # per-request latency SLO (§8)
+    # per-service latency SLO overrides (svc -> ms); unlisted services use
+    # latency_slo_ms.  This is the "richer SLO policy" knob from the ROADMAP.
+    latency_targets: Optional[Dict[str, float]] = None
     headroom: float = 1.1  # required = observed rate x headroom
     change_threshold: float = 0.15  # demand move that triggers a transition
     use_phase2: bool = False  # run the GA/MCTS phase (slower, fewer GPUs)
@@ -88,6 +91,7 @@ class ClusterSimulator:
             use_phase2=self.config.use_phase2,
             seed=self.config.seed,
             optimizer_kwargs=optimizer_kwargs,
+            latency_targets=self.config.latency_targets,
         )
         self.cluster = SimulatedCluster(rules, self.config.initial_gpus)
         # serving state

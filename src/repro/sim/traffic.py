@@ -8,10 +8,11 @@ closed-loop simulator (:mod:`repro.sim.simulator`): a :class:`Trace` is a
 binned per-service arrival-rate function, and the generators below produce
 the canonical shapes —
 
-  * :func:`diurnal_trace`       — smooth day/night cycle (Figure 13's scenario)
-  * :func:`poisson_burst_trace` — background rate with seeded burst episodes
-  * :func:`flash_crowd_trace`   — a sudden flash crowd with ramp up/decay
-  * :func:`replay_trace`        — replay externally recorded rate arrays
+  * :func:`diurnal_trace`          — smooth day/night cycle (Figure 13's scenario)
+  * :func:`poisson_burst_trace`    — background rate with seeded burst episodes
+  * :func:`flash_crowd_trace`      — a sudden flash crowd with ramp up/decay
+  * :func:`correlated_surge_trace` — surges hitting *all* services at once
+  * :func:`replay_trace`           — replay externally recorded rate arrays
 
 All randomness flows from explicit seeds so a trace (and every simulation
 run on it) is reproducible bit-for-bit.
@@ -150,6 +151,55 @@ def flash_crowd_trace(
     after = t >= at_s + ramp_s
     shape[after] = 1.0 + (mult - 1.0) * np.exp(-(t[after] - at_s - ramp_s) / decay_s)
     return Trace(bin_s, {svc: base_rates[svc] * shape for svc in sorted(base_rates)})
+
+
+def correlated_surge_trace(
+    base_rates: Mapping[str, float],
+    duration_s: float,
+    bin_s: float = 60.0,
+    surge_mult: float = 4.0,
+    n_surges: int = 2,
+    surge_len_bins: int = 10,
+    ramp_bins: int = 2,
+    correlation: float = 0.8,
+    seed: int = 0,
+) -> Trace:
+    """Correlated multi-service surges: one shared seeded surge envelope hits
+    every service *simultaneously* (a front-page event, a regional failover).
+
+    The envelope is 0 outside surges and ramps linearly to 1 over
+    ``ramp_bins`` at each surge's edges; service ``s`` follows it with
+    coupling strength drawn uniformly from ``[correlation, 1]``, so
+
+        rate_s(t) = base_s * (1 + (surge_mult - 1) * k_s * envelope(t)).
+
+    Unlike :func:`poisson_burst_trace` (independent per-service episodes),
+    the aggregate demand spike is what stresses a scheduler: every service
+    needs capacity in the same bins, so there is no slack to steal.
+    """
+    assert 0.0 <= correlation <= 1.0
+    assert surge_len_bins >= 1 and n_surges >= 1
+    n = _bins(duration_s, bin_s)
+    rng = np.random.default_rng(seed)
+    envelope = np.zeros(n)
+    span = min(surge_len_bins, n)
+    latest = max(n - span, 0)
+    starts = sorted(
+        int(s) for s in rng.integers(0, latest + 1, size=n_surges)
+    )
+    ramp = np.minimum(
+        np.minimum(np.arange(1, span + 1), np.arange(span, 0, -1))
+        / max(ramp_bins, 1),
+        1.0,
+    )
+    for s in starts:
+        seg = slice(s, s + span)
+        envelope[seg] = np.maximum(envelope[seg], ramp[: n - s])
+    rates = {}
+    for svc in sorted(base_rates):
+        k = correlation + (1.0 - correlation) * float(rng.random())
+        rates[svc] = base_rates[svc] * (1.0 + (surge_mult - 1.0) * k * envelope)
+    return Trace(bin_s, rates)
 
 
 def replay_trace(

@@ -1,0 +1,182 @@
+"""Scenario-matrix harness tests (repro.sim.scenarios).
+
+Pins the properties ISSUE 3 names: the declarative matrix runs every cell
+through the closed loop, cell metrics carry the comparable schema
+(attainment, GPUs used, reoptimize latency, GPUs saved vs A100-as-is), the
+same seed yields byte-identical documents *through the scenario runner*
+(SimReport bytes included), the correlated-surge trace really correlates,
+and per-service latency targets flow into the optimizer's workloads.
+"""
+
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import SyntheticPaperProfiles, a100_rules
+from repro.sim import (
+    SCALES,
+    SCHEDULERS,
+    SLO_POLICIES,
+    TRACE_SHAPES,
+    ReoptimizeDriver,
+    ScenarioCell,
+    correlated_surge_trace,
+    default_matrix,
+    run_cell,
+    run_matrix,
+    smoke_matrix,
+)
+
+
+# -- matrix definitions ----------------------------------------------------------
+
+
+def test_default_matrix_covers_the_required_axes():
+    """Acceptance floor: >= 2 trace shapes x >= 4 schedulers (incl. both new
+    zoo policies) x >= 2 scales."""
+    cells = default_matrix()
+    traces = {c.trace for c in cells}
+    scheds = {c.scheduler for c in cells}
+    scales = {c.scale for c in cells}
+    assert len(traces) >= 2
+    assert len(scheds) >= 4 and {"frag", "energy"} <= scheds
+    assert len(scales) >= 2
+    assert len(cells) == len(traces) * len(scheds) * len(scales) * len(SLO_POLICIES)
+    assert len(set(c.name for c in cells)) == len(cells)  # names are unique
+
+
+def test_smoke_matrix_exercises_both_new_schedulers():
+    scheds = {c.scheduler for c in smoke_matrix()}
+    assert {"frag", "energy"} <= scheds
+    assert all(c.scale == "small" for c in smoke_matrix())
+
+
+def test_registries_are_consistent():
+    for cell in default_matrix():
+        assert cell.trace in TRACE_SHAPES
+        assert cell.scheduler in SCHEDULERS
+        assert cell.scale in SCALES
+        assert cell.slo in SLO_POLICIES
+
+
+# -- cell execution and schema ---------------------------------------------------
+
+
+def test_run_cell_produces_comparable_metrics():
+    res, rep = run_cell(ScenarioCell("surge", "frag", "small", "uniform"), seed=0)
+    d = res.to_dict()
+    assert set(d["slo_satisfaction"]) == set(rep.services)
+    assert 0.0 <= d["mean_attainment"] <= 1.0
+    assert d["gpus_peak"] >= d["gpus_final"] >= 1
+    assert d["gpus_asis"] >= 1
+    assert d["gpus_saved"] == d["gpus_asis"] - d["gpus_peak"]
+    assert d["reoptimize_latency_s"] >= 0.0
+    assert d["power_w"] > 0.0
+    assert len(d["report_sha256"]) == 64
+    # the headline: MIG serving beats whole-GPU serving of the same demand
+    assert d["gpus_saved"] >= 0
+
+
+# -- determinism through the runner ----------------------------------------------
+
+
+@given(seed=st.integers(0, 10))
+@settings(max_examples=3, deadline=None)
+def test_same_seed_byte_identical_through_scenario_runner(seed):
+    cell = ScenarioCell("surge", "energy", "small", "tiered")
+    res1, rep1 = run_cell(cell, seed)
+    res2, rep2 = run_cell(cell, seed)
+    assert rep1.to_json() == rep2.to_json()  # SimReport byte-identity
+    assert res1.report_sha256 == res2.report_sha256
+    assert res1.to_dict() == res2.to_dict()
+
+
+def test_run_matrix_document_is_byte_identical():
+    cells = smoke_matrix()
+    b1 = json.dumps(run_matrix(cells, seed=3), sort_keys=True, separators=(",", ":"))
+    b2 = json.dumps(run_matrix(cells, seed=3), sort_keys=True, separators=(",", ":"))
+    assert b1 == b2
+    b3 = json.dumps(run_matrix(cells, seed=4), sort_keys=True, separators=(",", ":"))
+    assert b1 != b3  # the seed actually flows through
+
+
+def test_schedulers_differentiate_somewhere():
+    """The harness exists to compare policies: on the surge trace at small
+    scale, at least one zoo policy must decide differently from greedy."""
+    sha = {}
+    for sched in ("greedy", "frag", "energy"):
+        res, _ = run_cell(ScenarioCell("surge", sched, "small", "uniform"), seed=0)
+        sha[sched] = res.report_sha256
+    assert sha["frag"] != sha["greedy"] or sha["energy"] != sha["greedy"]
+
+
+# -- correlated surge trace ------------------------------------------------------
+
+
+class TestCorrelatedSurge:
+    def test_seeded_and_reproducible(self):
+        kw = dict(duration_s=7200, bin_s=60, surge_mult=4.0, n_surges=2,
+                  surge_len_bins=10, correlation=0.8)
+        t1 = correlated_surge_trace({"a": 10.0, "b": 20.0}, seed=5, **kw)
+        t2 = correlated_surge_trace({"a": 10.0, "b": 20.0}, seed=5, **kw)
+        t3 = correlated_surge_trace({"a": 10.0, "b": 20.0}, seed=6, **kw)
+        for svc in ("a", "b"):
+            np.testing.assert_array_equal(t1.rates[svc], t2.rates[svc])
+        assert any(
+            not np.array_equal(t1.rates[s], t3.rates[s]) for s in ("a", "b")
+        )
+
+    def test_services_surge_in_the_same_bins(self):
+        tr = correlated_surge_trace(
+            {"a": 10.0, "b": 100.0, "c": 55.0}, duration_s=7200, bin_s=60,
+            surge_mult=4.0, n_surges=1, surge_len_bins=10, ramp_bins=2,
+            correlation=0.9, seed=3,
+        )
+        elevated = {
+            svc: set(np.flatnonzero(r > r.min() * 1.01).tolist())
+            for svc, r in tr.rates.items()
+        }
+        # correlated: every service is elevated in exactly the same bins
+        vals = list(elevated.values())
+        assert vals[0] and all(v == vals[0] for v in vals)
+
+    def test_surge_amplitude_respects_coupling_floor(self):
+        tr = correlated_surge_trace(
+            {"a": 10.0}, duration_s=3600, bin_s=60, surge_mult=5.0,
+            n_surges=1, surge_len_bins=8, ramp_bins=1, correlation=0.5, seed=0,
+        )
+        peak = tr.rates["a"].max() / 10.0
+        # coupling k in [0.5, 1]: peak in [1 + 4*0.5, 1 + 4*1]
+        assert 3.0 - 1e-9 <= peak <= 5.0 + 1e-9
+
+
+# -- per-service latency targets -------------------------------------------------
+
+
+class TestLatencyTargets:
+    def test_workload_for_applies_targets(self):
+        prof = SyntheticPaperProfiles(n_models=3, seed=9)
+        svcs = sorted(prof.services())
+        targets = {svcs[0]: 50.0, svcs[1]: 200.0}
+        driver = ReoptimizeDriver(
+            a100_rules(), prof, latency_slo_ms=100.0, latency_targets=targets
+        )
+        wl = driver.workload_for({s: 100.0 for s in svcs})
+        by_name = {s.name: s.slo.latency_ms for s in wl.services}
+        assert by_name[svcs[0]] == 50.0
+        assert by_name[svcs[1]] == 200.0
+        assert by_name[svcs[2]] == 100.0  # fallback to the uniform SLO
+
+    def test_tiered_policy_changes_the_run(self):
+        cell_u = ScenarioCell("diurnal", "greedy", "small", "uniform")
+        cell_t = ScenarioCell("diurnal", "greedy", "small", "tiered")
+        res_u, _ = run_cell(cell_u, seed=0)
+        res_t, _ = run_cell(cell_t, seed=0)
+        assert res_u.report_sha256 != res_t.report_sha256
+
+    def test_tiered_policy_maps_alternating_targets(self):
+        default_lat, targets = SLO_POLICIES["tiered"](["a", "b", "c"])
+        assert default_lat == 100.0
+        assert targets == {"a": 50.0, "b": 200.0, "c": 50.0}

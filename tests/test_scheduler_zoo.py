@@ -1,0 +1,266 @@
+"""Scheduler-zoo tests: golden pins + properties for the two new policies.
+
+The fragmentation-aware packer and the energy-aware repartitioner
+(:mod:`repro.core.zoo`) are deterministic, so their outputs on seeded
+problems are pinned byte-for-byte in ``tests/golden/scheduler_zoo_golden.json``
+— the same contract the optimizer goldens enforce.  Regenerate (only on
+intentional behavior changes) with::
+
+    PYTHONPATH=src python tests/test_scheduler_zoo.py --regen
+
+Property coverage: validity of produced deployments from arbitrary starting
+completions, produce/produce_indexed agreement, the fragmentation and power
+models themselves, and registry integration through ``TwoPhaseOptimizer``
+and the closed-loop driver.
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+if __name__ == "__main__":  # regen mode runs without pytest/conftest
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    SLO,
+    ConfigSpace,
+    Deployment,
+    EnergyAwareRepartitioner,
+    FragAwarePacker,
+    GPUConfig,
+    InstanceAssignment,
+    PowerModel,
+    SyntheticPaperProfiles,
+    TwoPhaseOptimizer,
+    Workload,
+    a100_rules,
+    deployment_power,
+    stranded_slices_of,
+)
+from repro.core.optimizer import FAST_ALGORITHMS, SLOW_ALGORITHMS
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "golden", "scheduler_zoo_golden.json"
+)
+
+# (name, n_models, profile seed, slo lognormal scale) — mirrors the
+# optimizer-golden problems so zoo behavior is pinned on the same terrain
+PROBLEMS = [
+    ("a100_n6", 6, 3, 7.4),
+    ("a100_n10", 10, 5, 8.2),
+]
+
+ZOO = {
+    "frag": lambda s: FragAwarePacker(s),
+    "energy": lambda s: EnergyAwareRepartitioner(s),
+}
+
+
+def _problem(n, seed, scale):
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed)
+    rng = np.random.default_rng(seed)
+    slos = {m: SLO(float(rng.lognormal(scale, 0.7)), 100.0) for m in prof.services()}
+    wl = Workload.make(slos)
+    return prof, wl, ConfigSpace(a100_rules(), prof, wl)
+
+
+def _canon(cfg):
+    return [[int(s), svc, int(b)] for (s, svc, b) in cfg.canonical()]
+
+
+def compute_golden():
+    golden = {"schema": 1, "problems": {}}
+    for name, n, seed, scale in PROBLEMS:
+        prof, wl, space = _problem(n, seed, scale)
+        entry = {}
+        for zoo_name, make in ZOO.items():
+            algo = make(space)
+            for tag, completion in (
+                ("", np.zeros(wl.n)),
+                ("_partial", np.full(wl.n, 0.55)),
+            ):
+                cfgs = algo.produce(completion)
+                dep = Deployment(list(cfgs))
+                entry[zoo_name + tag] = {
+                    "configs": [_canon(c) for c in cfgs],  # order preserved
+                    "num_gpus": dep.num_gpus,
+                    "power_w": deployment_power(cfgs),
+                }
+        golden["problems"][name] = entry
+    return golden
+
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+# -- golden pins -----------------------------------------------------------------
+
+
+def test_zoo_golden_file_exists():
+    assert os.path.exists(GOLDEN_PATH), (
+        "golden file missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_scheduler_zoo.py --regen`"
+    )
+
+
+def test_zoo_seeded_outputs_match_golden():
+    got = compute_golden()
+    want = _load_golden()
+    assert sorted(got["problems"]) == sorted(want["problems"])
+    for name, entry in want["problems"].items():
+        for key, val in entry.items():
+            assert got["problems"][name][key] == val, (
+                f"{name}/{key} diverged from the recorded zoo behavior"
+            )
+
+
+# -- validity / indexed agreement -------------------------------------------------
+
+
+@given(seed=st.integers(0, 40))
+@settings(max_examples=8, deadline=None)
+def test_zoo_produce_covers_need_and_matches_indexed(seed):
+    _, wl, space = _problem(6, 3, 7.4)
+    rng = np.random.default_rng(seed)
+    start = rng.uniform(0.0, 0.95, size=wl.n)
+    for make in ZOO.values():
+        algo = make(space)
+        cfgs = algo.produce(start)
+        total = start.copy()
+        for c in cfgs:
+            total = total + c.utility(wl)
+        assert bool(np.all(total >= 1.0 - 1e-9))
+        idep = make(space).produce_indexed(start)
+        assert idep.num_gpus == len(cfgs)
+        assert not idep.extras  # zoo picks stay inside the enumerated space
+        assert sorted(c.canonical() for c in idep.to_deployment().configs) == sorted(
+            c.canonical() for c in cfgs
+        )
+
+
+def test_zoo_is_deterministic_across_runs():
+    _, wl, space = _problem(6, 3, 7.4)
+    z = np.zeros(wl.n)
+    for make in ZOO.values():
+        a = [c.canonical() for c in make(space).produce(z)]
+        b = [c.canonical() for c in make(space).produce(z)]
+        assert a == b
+
+
+# -- fragmentation model ----------------------------------------------------------
+
+
+def test_stranded_slices_zero_for_fully_busy_and_positive_for_idle():
+    rules = a100_rules()
+    busy = GPUConfig(
+        (3, 4),
+        (
+            InstanceAssignment(3, "a", 8, 100.0),
+            InstanceAssignment(4, "a", 8, 150.0),
+        ),
+    )
+    assert stranded_slices_of(busy, rules) == 0.0
+    idle = GPUConfig(
+        (3, 4),
+        (
+            InstanceAssignment(3, "a", 8, 100.0),
+            InstanceAssignment(4, None),
+        ),
+    )
+    # free=4, largest reusable chunk covers all of it -> half-cost residual
+    assert stranded_slices_of(idle, rules) == pytest.approx(2.0)
+    # fragmented free: two 1-slice holes reuse worse than one 2-slice hole
+    frag2 = GPUConfig(
+        (1, 1, 1, 4),
+        (
+            InstanceAssignment(1, None),
+            InstanceAssignment(1, None),
+            InstanceAssignment(1, "a", 4, 30.0),
+            InstanceAssignment(4, "a", 8, 150.0),
+        ),
+    )
+    assert stranded_slices_of(frag2, rules) > stranded_slices_of(idle, rules) - 2.0
+    assert stranded_slices_of(frag2, rules) == pytest.approx(1.5)  # 2 - 1 + 0.5
+
+
+def test_frag_packer_prefers_unfragmented_config_at_equal_base_score():
+    """The packer's score hook must rank a full device above a config that
+    strands slices when both offer the same need-weighted utility."""
+    _, wl, space = _problem(6, 3, 7.4)
+    packer = FragAwarePacker(space)
+    need = np.ones(wl.n)
+    scores = packer._scores(need)
+    base = need[space.ia] * space.ua + need[space.ib] * space.ub
+    # discounting never raises a score, and strictly lowers stranded configs
+    assert np.all(scores <= base + 1e-12)
+    stranded = packer.static_frag > 0
+    if stranded.any():
+        assert np.all(scores[stranded] < base[stranded])
+
+
+# -- power model ------------------------------------------------------------------
+
+
+def test_power_model_prefers_fewer_larger_instances():
+    pm = PowerModel()
+    one_big = GPUConfig((7,), (InstanceAssignment(7, "a", 8, 700.0),))
+    many_small = GPUConfig(
+        (1,) * 7, tuple(InstanceAssignment(1, "a", 1, 100.0) for _ in range(7))
+    )
+    assert pm.config_power(one_big) < pm.config_power(many_small)
+    # equal busy slices: the difference is exactly the instance overhead
+    assert pm.config_power(many_small) - pm.config_power(one_big) == pytest.approx(
+        6 * pm.instance_w
+    )
+    # instances_power mirrors config_power for a one-GPU instance set
+    assert pm.instances_power([("a", 7, 700.0)], gpus_in_use=1) == pytest.approx(
+        pm.config_power(one_big)
+    )
+
+
+def test_energy_weights_monotone_in_power():
+    _, wl, space = _problem(6, 3, 7.4)
+    algo = EnergyAwareRepartitioner(space)
+    order = np.argsort(algo.power)
+    w = algo.weights[order]
+    assert np.all(np.diff(w) <= 1e-12)  # heavier configs never weigh more
+
+
+# -- registry / closed-loop integration -------------------------------------------
+
+
+def test_zoo_registered_in_both_registries():
+    for name in ("frag", "energy"):
+        assert name in FAST_ALGORITHMS and name in SLOW_ALGORITHMS
+
+
+@pytest.mark.parametrize("fast", ["frag", "energy"])
+def test_two_phase_with_zoo_fast_algorithm(fast):
+    prof, wl, space = _problem(5, 3, 7.2)
+    opt = TwoPhaseOptimizer(
+        a100_rules(), prof, wl, fast=fast, ga_rounds=2, ga_population=3, space=space
+    )
+    rep = opt.run()
+    assert rep.fast_deployment.is_valid(wl)
+    assert rep.best_deployment.is_valid(wl)
+    assert rep.best_deployment.num_gpus <= rep.fast_deployment.num_gpus
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        data = compute_golden()
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH} ({os.path.getsize(GOLDEN_PATH)} bytes)")
+    else:
+        print(__doc__)
