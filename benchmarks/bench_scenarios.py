@@ -1,11 +1,13 @@
 """Scenario-matrix benchmark: which scheduling policy wins under which load.
 
 Runs the declarative scenario matrix (:mod:`repro.sim.scenarios` — trace
-shape x scheduler x scale x SLO policy) through the closed-loop simulator
-and writes one comparable JSON report, ``BENCH_scenarios.json`` at the repo
-root: per-cell SLO attainment, GPUs used (final/peak), in-loop reoptimize
-latency (mean transition makespan), modeled power, and the paper's headline
-"GPUs saved vs A100-as-is" (§8.1).
+shape x scheduler x scale x SLO policy x fault profile) through the
+closed-loop simulator and writes one comparable JSON report,
+``BENCH_scenarios.json`` at the repo root: per-cell SLO attainment, GPUs
+used (final/peak), in-loop reoptimize latency (mean transition makespan),
+modeled power, the paper's headline "GPUs saved vs A100-as-is" (§8.1), and
+— on fault-profile cells — availability, recovery time to SLO
+re-attainment, reconcile iterations/retries, and shed requests.
 
 The JSON is **seed-deterministic**: same seed => byte-identical file (the
 property CI's smoke step and tests/test_scenarios.py pin).  Wall-clock
@@ -18,6 +20,9 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_scenarios.py --smoke    # CI: tiny
                                                   # matrix, temp output
     PYTHONPATH=src python benchmarks/bench_scenarios.py --seed 7 --out /tmp/x.json
+    PYTHONPATH=src python benchmarks/bench_scenarios.py --list     # enumerate
+    PYTHONPATH=src python benchmarks/bench_scenarios.py \\
+        --cell surge:greedy:small:uniform:gpu_loss  # one cell, no full matrix
 """
 
 from __future__ import annotations
@@ -45,11 +50,11 @@ DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
 
 
 def leaderboard(cells: Dict[str, Dict]) -> List[str]:
-    """Per (trace, scale, slo) group: schedulers ranked by peak GPUs, ties
-    by mean attainment (higher better) then power (lower better)."""
+    """Per (trace, scale, slo, fault) group: schedulers ranked by peak GPUs,
+    ties by mean attainment (higher better) then power (lower better)."""
     groups: Dict[str, List[Dict]] = {}
     for c in cells.values():
-        key = "{trace}/{scale}/{slo}".format(**c["cell"])
+        key = "{trace}/{scale}/{slo}/{fault}".format(**c["cell"])
         groups.setdefault(key, []).append(c)
     lines = []
     for key in sorted(groups):
@@ -68,6 +73,32 @@ def leaderboard(cells: Dict[str, Dict]) -> List[str]:
     return lines
 
 
+def parse_cell(spec: str) -> ScenarioCell:
+    """``trace:sched:scale:slo[:fault]`` -> a validated ScenarioCell."""
+    from repro.sim.scenarios import (
+        FAULT_PROFILES, SCALES, SCHEDULERS, SLO_POLICIES, TRACE_SHAPES,
+    )
+
+    parts = spec.split(":")
+    if len(parts) not in (4, 5):
+        raise SystemExit(
+            f"--cell wants trace:sched:scale:slo[:fault], got {spec!r}"
+        )
+    cell = ScenarioCell(*parts)
+    for value, registry, axis in (
+        (cell.trace, TRACE_SHAPES, "trace"),
+        (cell.scheduler, SCHEDULERS, "scheduler"),
+        (cell.scale, SCALES, "scale"),
+        (cell.slo, SLO_POLICIES, "slo"),
+        (cell.fault, FAULT_PROFILES, "fault"),
+    ):
+        if value not in registry:
+            raise SystemExit(
+                f"unknown {axis} {value!r}; known: {sorted(registry)}"
+            )
+    return cell
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -75,13 +106,32 @@ def main() -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="output path (default: repo BENCH_scenarios.json)")
+    ap.add_argument("--list", action="store_true", dest="list_cells",
+                    help="enumerate the default matrix's cells and exit")
+    ap.add_argument("--cell", default=None, metavar="SPEC",
+                    help="run one cell (trace:sched:scale:slo[:fault]) "
+                         "instead of the full matrix; writes to --out when "
+                         "given, else a temp file")
     args = ap.parse_args()
 
-    cells = smoke_matrix() if args.smoke else default_matrix()
+    if args.list_cells:
+        try:
+            for cell in default_matrix():
+                print(cell.name)
+        except BrokenPipeError:  # `--list | head` is fine
+            os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        return 0
+
+    if args.cell is not None:
+        cells = [parse_cell(args.cell)]
+    else:
+        cells = smoke_matrix() if args.smoke else default_matrix()
     if args.out:
         out_path = args.out
     elif args.smoke:
         out_path = os.path.join(tempfile.gettempdir(), "BENCH_scenarios_smoke.json")
+    elif args.cell is not None:
+        out_path = os.path.join(tempfile.gettempdir(), "BENCH_scenarios_cell.json")
     else:
         out_path = DEFAULT_OUT
 
@@ -92,12 +142,25 @@ def main() -> int:
         wall = time.perf_counter() - t0
         results[cell.name] = res.to_dict()
         # wall-clock goes to stdout only; the JSON stays seed-deterministic
+        fault_bits = ""
+        if cell.fault != "none":
+            rec = (
+                f"{res.recovery_time_s:.0f}s"
+                if res.recovery_time_s is not None
+                else "-"
+            )
+            fault_bits = (
+                f" avail={res.availability:.3f} recovery={rec}"
+                f" retried={res.actions_retried}"
+                f" shed={res.shed_requests:.0f}"
+            )
         print(
             f"[{cell.name}] gpus_peak={res.gpus_peak} asis={res.gpus_asis}"
             f" saved={res.gpus_saved} att={res.mean_attainment:.3f}"
             f" reopt_lat={res.reoptimize_latency_s:.0f}s"
             f" power={res.power_w:.0f}W transparent={res.transparent}"
-            f" wall={wall:.2f}s"
+            + fault_bits
+            + f" wall={wall:.2f}s"
         )
 
     doc = matrix_doc(cells, results, args.seed)

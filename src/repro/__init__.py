@@ -5,6 +5,8 @@ Subpackages:
   * :mod:`repro.core`    — rule-sets, profiles, optimizer pipeline, controller
   * :mod:`repro.serving` — per-instance engines and the service-level router
   * :mod:`repro.sim`     — closed-loop trace-driven cluster serving simulator
+  * :mod:`repro.controlplane` — declarative reconciler, fault injection,
+    degraded-mode admission control (the §6-§7 control plane)
   * :mod:`repro.models`, :mod:`repro.kernels`, :mod:`repro.launch`, ... —
     the jax/pallas serving stack
 

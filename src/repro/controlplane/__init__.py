@@ -1,0 +1,56 @@
+"""Fault-tolerant control plane: declarative reconciler + failure injection.
+
+The paper runs MIG-serving as a Kubernetes controller (§6-§7) that
+continuously drives the cluster from observed state to the optimizer's
+target state.  This package is that control plane for the simulated
+cluster: declarative specs (``spec``), a level-triggered reconcile loop
+through the §6 exchange-and-compact controller (``reconciler``), seeded
+fault injection (``faults``), and degraded-mode admission control
+(``degraded``).
+
+Numpy-only and seed-deterministic — the ``repro.core`` / ``repro.sim``
+jax-free and byte-identical-report contracts extend to this package
+(pinned by ``tests/test_optimizer_vectorized.py``).
+"""
+
+from repro.controlplane.degraded import AdmissionController
+from repro.controlplane.faults import (
+    FAULT_PROFILES,
+    DeviceFault,
+    FaultInjector,
+    FaultProfile,
+    register_fault_profile,
+)
+from repro.controlplane.reconciler import (
+    ControlPlane,
+    Reconciler,
+    ReconcileStats,
+    build_control_plane,
+)
+from repro.controlplane.spec import (
+    ClusterSpec,
+    DesiredState,
+    NodeSpec,
+    ObservedState,
+    StateDiff,
+    diff,
+)
+
+__all__ = [
+    "AdmissionController",
+    "ClusterSpec",
+    "ControlPlane",
+    "DesiredState",
+    "DeviceFault",
+    "FAULT_PROFILES",
+    "FaultInjector",
+    "FaultProfile",
+    "NodeSpec",
+    "ObservedState",
+    "Reconciler",
+    "ReconcileStats",
+    "StateDiff",
+    "build_control_plane",
+    "diff",
+    "register_fault_profile",
+]

@@ -1,0 +1,46 @@
+"""Degraded-mode serving: admission control when capacity < demand.
+
+After a device failure the cluster may simply not have the capacity the
+SLOs require until the reconciler restores it (creates pay their 62 s
+Figure-13c latency).  Queueing everything during that window would let the
+backlog grow without bound and then report a rosy served-fraction once
+capacity returns; production systems shed instead.  The
+:class:`AdmissionController` admits load up to current capacity and sheds
+the excess, and the shed requests are charged honestly to the
+:class:`~repro.sim.report.SimReport` — they count as arrivals that were
+never served, so SLO attainment and served-fraction reflect the outage.
+
+Shedding is proportional: every service sheds the same *fraction* of its
+over-capacity excess (here applied per service, whose capacity is its own
+instance pool, so "proportional" degenerates to per-service clipping).
+Only active while the cluster is in an outage the control plane can see —
+observed state diverged from the desired state, or a fault-triggered
+repair is still paying its Figure-13c latencies — AND the service's
+capacity sits below its required rate.  Ordinary traffic bursts, before
+or after an outage, keep the fluid-queue backlog semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Clip per-service admitted load to capacity while degraded.
+
+    ``min_admit_frac`` guarantees a floor (even a shedding frontend lets
+    some traffic through to keep health signals alive)."""
+
+    min_admit_frac: float = 0.0
+
+    def admit(self, demand: float, capacity: float) -> Tuple[float, float]:
+        """Split ``demand`` (requests this bin) into (admitted, shed) given
+        ``capacity`` (requests the service's instances can absorb)."""
+        if demand <= 0.0:
+            return 0.0, 0.0
+        if capacity >= demand:
+            return demand, 0.0
+        admitted = max(capacity, demand * self.min_admit_frac)
+        return admitted, demand - admitted

@@ -21,7 +21,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.rms import Partition, ReconfigRules
 
-# Action latencies in seconds, read off the paper's Figure 13c.
+# Action latencies in seconds, read off the paper's Figure 13c.  This is
+# the ONE canonical copy — the reoptimize driver, the controller, the
+# control plane, benchmarks, and tests all import it from here.
 ACTION_SECONDS = {
     "create": 62.0,
     "delete": 2.0,
@@ -31,6 +33,22 @@ ACTION_SECONDS = {
 }
 
 GPUS_PER_MACHINE = 8  # the paper's testbed machines hold 8 A100s each
+
+
+class ActionFault(RuntimeError):
+    """An injected fault: the action attempt failed *atomically* — cluster
+    state is unchanged, but ``wasted_s`` seconds of wall clock were burned
+    on the attempt.  Raised out of :meth:`SimulatedCluster.apply` when a
+    fault hook (``repro.controlplane.faults``) vetoes the action; the
+    reconciler catches it, backs off, and re-plans."""
+
+    def __init__(self, action: "Action", reason: str, wasted_s: float):
+        super().__init__(
+            f"{action.kind} on gpu{action.gpu} failed: {reason}"
+        )
+        self.action = action
+        self.reason = reason
+        self.wasted_s = wasted_s
 
 
 @dataclasses.dataclass
@@ -91,6 +109,11 @@ class SimulatedCluster:
         self.rules = rules
         self.gpus: Dict[int, GPUState] = {i: GPUState(i) for i in range(n_gpus)}
         self._uid = itertools.count()
+        # uid -> home device, for every uid ever minted (uids never move:
+        # migration mints a fresh uid on the destination).  The control
+        # plane consults this on device failure to also kill uids that only
+        # survive inside in-flight transition timelines.
+        self.uid_gpu: Dict[int, int] = {}
         self.trace: List[Tuple[float, Dict[str, float]]] = []
         # instance-level twin of ``trace``: after every action, the busy
         # instances as {uid: (service, size, throughput)}.  The closed-loop
@@ -101,6 +124,21 @@ class SimulatedCluster:
         self.instance_trace: List[Tuple[float, Dict[int, Tuple[str, int, float]]]] = []
         self.clock = 0.0
         self.actions_applied: List[Action] = []
+        # actual seconds charged per applied action (== Action.seconds()
+        # unless a fault hook stretched it — stragglers); same indexing as
+        # actions_applied, so makespan recomputation can honor stragglers
+        self.applied_seconds: List[float] = []
+        # fault domains (repro.controlplane): failed devices are gone for
+        # good (instances lost, never schedulable again); draining devices
+        # keep serving but accept no new placements until emptied; cordoned
+        # machines accept no new devices (grow skips them)
+        self.failed: set = set()
+        self.draining: set = set()
+        self.cordoned: set = set()
+        # optional fault injection point (repro.controlplane.faults): called
+        # with each action before it mutates state; returns a latency
+        # multiplier (stragglers) or raises ActionFault (botched attempt)
+        self.fault_hook = None
 
     # -- queries ----------------------------------------------------------------
     def busy_instances(self) -> Dict[int, Tuple[str, int, float]]:
@@ -120,10 +158,16 @@ class SimulatedCluster:
                     out[r.service] = out.get(r.service, 0.0) + r.throughput
         return out
 
+    def schedulable(self, gid: int) -> bool:
+        """May new work land on this device? (not failed, not draining)"""
+        return gid not in self.failed and gid not in self.draining
+
     def find_room(self, size: int, prefer: Sequence[int] = ()) -> Optional[int]:
         """A GPU that can legally add a ``size`` instance right now."""
         order = list(prefer) + [g for g in self.gpus if g not in prefer]
         for gid in order:
+            if not self.schedulable(gid):
+                continue
             cand = tuple(sorted(self.gpus[gid].partition() + (size,)))
             if self.rules.is_legal_partition(cand):
                 return gid
@@ -132,17 +176,72 @@ class SimulatedCluster:
     def grow(self, n: int = 1) -> List[int]:
         new_ids = []
         base = max(self.gpus) + 1 if self.gpus else 0
-        for i in range(n):
-            self.gpus[base + i] = GPUState(base + i)
-            new_ids.append(base + i)
+        for _ in range(n):
+            # never provision onto a cordoned machine (node drain, §7)
+            while base // GPUS_PER_MACHINE in self.cordoned:
+                base = (base // GPUS_PER_MACHINE + 1) * GPUS_PER_MACHINE
+            self.gpus[base] = GPUState(base)
+            new_ids.append(base)
+            base += 1
         return new_ids
 
     def gpus_in_use(self) -> int:
         return sum(1 for g in self.gpus.values() if g.busy())
 
+    def machine_gpus(self, machine: int) -> List[int]:
+        return [gid for gid, g in self.gpus.items() if g.machine == machine]
+
+    # -- fault domains (repro.controlplane) --------------------------------------
+    def _note_state(self) -> None:
+        self.trace.append((self.clock, self.throughput()))
+        if self.record_instance_trace:
+            self.instance_trace.append((self.clock, self.busy_instances()))
+
+    def fail_gpu(self, gid: int) -> List[int]:
+        """Whole-device failure: every instance on the device vanishes
+        instantly (no graceful latency — this is the fault, not an action)
+        and the device never schedules again.  Returns the killed uids."""
+        g = self.gpus[gid]
+        killed = sorted(g.instances)
+        g.instances.clear()
+        self.failed.add(gid)
+        self.draining.discard(gid)
+        self._note_state()
+        return killed
+
+    def drain_gpu(self, gid: int) -> None:
+        """Mark a device draining: its instances keep serving, but nothing
+        new lands on it.  The reconciler migrates the survivors off."""
+        if gid not in self.failed:
+            self.draining.add(gid)
+
+    def drain_machine(self, machine: int) -> List[int]:
+        """Drain every device of one machine and cordon it against new
+        devices (a node going down for maintenance — the §7 kubernetes
+        cordon-and-drain)."""
+        self.cordoned.add(machine)
+        gids = [g for g in self.machine_gpus(machine) if g not in self.failed]
+        for gid in gids:
+            self.drain_gpu(gid)
+        return gids
+
     # -- mutation ----------------------------------------------------------------
     def apply(self, a: Action) -> int:
-        """Apply one action; returns the uid of a created instance (or -1)."""
+        """Apply one action; returns the uid of a created instance (or -1).
+
+        Actions are atomic: an injected :class:`ActionFault` charges its
+        wasted wall clock but leaves cluster state untouched."""
+        for gid in a.gpus_touched():
+            if gid in self.failed:
+                raise ValueError(f"action {a.kind} targets failed gpu{gid}")
+        mult = 1.0
+        if self.fault_hook is not None:
+            try:
+                mult = self.fault_hook(a)
+            except ActionFault as fault:
+                self.clock += fault.wasted_s
+                self._note_state()
+                raise
         created = -1
         if a.kind == "create":
             g = self.gpus[a.gpu]
@@ -151,6 +250,7 @@ class SimulatedCluster:
                 raise ValueError(f"illegal create {a.size} on gpu{a.gpu} {g.partition()}")
             created = next(self._uid)
             g.instances[created] = InstanceRec(created, a.size, a.service, a.throughput)
+            self.uid_gpu[created] = a.gpu
         elif a.kind == "delete":
             g = self.gpus[a.gpu]
             g.instances.pop(a.uid)
@@ -163,6 +263,7 @@ class SimulatedCluster:
                 raise ValueError(f"illegal migrate to gpu{a.dst_gpu}")
             created = next(self._uid)
             dst.instances[created] = dataclasses.replace(rec, uid=created)
+            self.uid_gpu[created] = a.dst_gpu
         elif a.kind == "repartition":
             g = self.gpus[a.gpu]
             for uid in a.remove_uids:
@@ -173,27 +274,47 @@ class SimulatedCluster:
             for s in a.add_sizes:
                 uid = next(self._uid)
                 g.instances[uid] = InstanceRec(uid, s, None)
+                self.uid_gpu[uid] = a.gpu
             if not self.rules.is_legal_partition(g.partition()):
                 raise ValueError(f"illegal repartition on gpu{a.gpu}: {g.partition()}")
         else:
             raise ValueError(a.kind)
-        self.clock += a.seconds()
+        seconds = a.seconds() * mult
+        self.clock += seconds
         self.actions_applied.append(a)
+        self.applied_seconds.append(seconds)
         self.trace.append((self.clock, self.throughput()))
         if self.record_instance_trace:
             self.instance_trace.append((self.clock, self.busy_instances()))
         return created
 
 
-def parallel_makespan(actions: Sequence[Action]) -> float:
+def parallel_makespan(
+    actions: Sequence[Action],
+    seconds: Optional[Sequence[float]] = None,
+    max_concurrent: Optional[int] = None,
+) -> float:
     """Dependency-aware makespan: actions conflict iff they touch a common
     GPU (§6 "actions can run in parallel if the affected GPUs are separate");
-    order among conflicting actions follows the plan order (list scheduling)."""
+    order among conflicting actions follows the plan order (list scheduling).
+
+    ``seconds`` overrides per-action durations (index-aligned with
+    ``actions`` — how straggler-stretched charges flow back in);
+    ``max_concurrent`` list-schedules over that many executor slots (the
+    control plane's bounded concurrency), None meaning unbounded."""
     ready: Dict[int, float] = {}
     makespan = 0.0
-    for a in actions:
+    slots: Optional[List[float]] = (
+        [0.0] * max_concurrent if max_concurrent else None
+    )
+    for i, a in enumerate(actions):
+        dur = a.seconds() if seconds is None else seconds[i]
         start = max((ready.get(g, 0.0) for g in a.gpus_touched()), default=0.0)
-        end = start + a.seconds()
+        if slots is not None:
+            j = min(range(len(slots)), key=slots.__getitem__)
+            start = max(start, slots[j])
+            slots[j] = start + dur
+        end = start + dur
         for g in a.gpus_touched():
             ready[g] = end
         makespan = max(makespan, end)

@@ -75,10 +75,16 @@ class Controller:
         self, cluster: SimulatedCluster, deployment: Deployment
     ) -> None:
         """Place a deployment on an empty cluster (one config per device)."""
-        empties = [gid for gid, g in cluster.gpus.items() if not g.instances]
+        empties = [
+            gid for gid, g in cluster.gpus.items()
+            if not g.instances and cluster.schedulable(gid)
+        ]
         if len(empties) < deployment.num_gpus:
             cluster.grow(deployment.num_gpus - len(empties))
-            empties = [gid for gid, g in cluster.gpus.items() if not g.instances]
+            empties = [
+                gid for gid, g in cluster.gpus.items()
+                if not g.instances and cluster.schedulable(gid)
+            ]
         for cfg, gid in zip(deployment.configs, empties):
             for a in cfg.assignments:
                 if a.service is None:
@@ -184,10 +190,13 @@ class Controller:
         self, cluster: SimulatedCluster, size: int, avoid: Sequence[int],
         near_machine: Optional[int],
     ) -> int:
-        """A non-avoided GPU that can legally host a ``size`` instance,
-        preferring the local machine (§6 locality optimization)."""
+        """A non-avoided, schedulable GPU that can legally host a ``size``
+        instance, preferring the local machine (§6 locality optimization)."""
         avoid_set = set(avoid)
-        cands = [gid for gid in cluster.gpus if gid not in avoid_set]
+        cands = [
+            gid for gid in cluster.gpus
+            if gid not in avoid_set and cluster.schedulable(gid)
+        ]
         cands.sort(key=lambda gid: (cluster.gpus[gid].machine != near_machine, gid))
         for gid in cands:
             part = tuple(sorted(cluster.gpus[gid].partition() + (size,)))
@@ -200,15 +209,25 @@ class Controller:
         bound: Dict[int, int] = {}  # target idx -> gpu id
 
         def unbound_gpus() -> List[int]:
+            """Donor-eligible devices: unbound, not failed (draining devices
+            still *donate* instances — that is how a drain empties out)."""
             taken = set(bound.values())
-            return [gid for gid in cluster.gpus if gid not in taken]
+            return [
+                gid for gid in cluster.gpus
+                if gid not in taken and gid not in cluster.failed
+            ]
+
+        def bindable_gpus() -> List[int]:
+            """Target-eligible devices: unbound AND schedulable (a target
+            config must never be shaped onto a failed or draining device)."""
+            return [gid for gid in unbound_gpus() if cluster.schedulable(gid)]
 
         # 1) bind exact matches first (no actions run here, so per-GPU
         # contents can be computed once for the whole pass)
         contents = {gid: _gpu_content(g) for gid, g in cluster.gpus.items()}
         for ti, cfg in enumerate(targets):
             want = _config_content(cfg)
-            for gid in unbound_gpus():
+            for gid in bindable_gpus():
                 if contents[gid] == want:
                     bound[ti] = gid
                     break
@@ -221,7 +240,11 @@ class Controller:
             # pick the unbound GPU with the most overlap; contents are
             # re-read per target (the previous target's migrations moved
             # instances) but only once per candidate, not per comparison
-            cands = unbound_gpus()
+            cands = bindable_gpus()
+            if not cands:
+                # every healthy device is bound (fault domains shrank the
+                # cluster mid-transition) — provision a fresh one
+                cands = cluster.grow(1)
             contents = {gid: _gpu_content(cluster.gpus[gid]) for gid in cands}
 
             def overlap(gid: int) -> int:
@@ -269,12 +292,15 @@ class Controller:
                     cluster.apply(Action("migrate", donor[0], uid=donor[1], dst_gpu=gid))
             bound[ti] = gid
 
-        # 3) clear idle slots on non-target GPUs
+        # 3) clear idle slots on non-target GPUs (skip failed/draining
+        # devices: no point reconfiguring hardware that is gone or leaving)
         taken = set(bound.values())
         for gid, g in cluster.gpus.items():
             if gid in taken:
                 continue
             assert not g.busy(), "compact left a running instance unplaced"
+            if not cluster.schedulable(gid):
+                continue
             idle = tuple(g.instances)
             if idle:
                 cluster.apply(Action("repartition", gid, remove_uids=idle))

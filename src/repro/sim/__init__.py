@@ -16,9 +16,15 @@ Extension points (see ROADMAP.md "Simulator"):
                          registry (``fast=/slow=``)
 """
 
+from repro.controlplane.faults import FAULT_PROFILES
 from repro.sim.events import Clock, Event, EventQueue
 from repro.sim.reoptimize import PendingTransition, ReoptimizeDriver
-from repro.sim.report import ServiceTimeline, SimReport, TransitionRecord
+from repro.sim.report import (
+    FaultRecord,
+    ServiceTimeline,
+    SimReport,
+    TransitionRecord,
+)
 from repro.sim.scenarios import (
     SCALES,
     SCHEDULERS,
@@ -44,11 +50,11 @@ from repro.sim.traffic import (
 )
 
 __all__ = [
-    "Clock", "ClusterSimulator", "Event", "EventQueue", "PendingTransition",
-    "ReoptimizeDriver", "ServiceTimeline", "SimConfig", "SimReport", "Trace",
-    "TransitionRecord", "correlated_surge_trace", "diurnal_trace",
-    "flash_crowd_trace", "poisson_burst_trace", "replay_trace",
-    "SCALES", "SCHEDULERS", "SLO_POLICIES", "TRACE_SHAPES", "CellResult",
-    "ScaleSpec", "ScenarioCell", "build_cell", "default_matrix", "run_cell",
-    "run_matrix", "smoke_matrix",
+    "Clock", "ClusterSimulator", "Event", "EventQueue", "FaultRecord",
+    "PendingTransition", "ReoptimizeDriver", "ServiceTimeline", "SimConfig",
+    "SimReport", "Trace", "TransitionRecord", "correlated_surge_trace",
+    "diurnal_trace", "flash_crowd_trace", "poisson_burst_trace",
+    "replay_trace", "FAULT_PROFILES", "SCALES", "SCHEDULERS", "SLO_POLICIES",
+    "TRACE_SHAPES", "CellResult", "ScaleSpec", "ScenarioCell", "build_cell",
+    "default_matrix", "run_cell", "run_matrix", "smoke_matrix",
 ]

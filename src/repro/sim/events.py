@@ -16,6 +16,8 @@ from typing import Any, Iterator, Optional
 BIN_TICK = "bin_tick"  # process one traffic bin
 REOPTIMIZE = "reoptimize"  # periodic observe -> optimize -> transition
 TRANSITION_DONE = "transition_done"  # a controller transition finished
+FAULT = "fault"  # an injected device fault fires (repro.controlplane)
+RECONCILE = "reconcile"  # the control plane reacts to observed divergence
 END = "end"  # end of trace
 
 

@@ -23,9 +23,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Tuple
 
+from repro.controlplane.reconciler import ControlPlane, ReconcileStats
+from repro.controlplane.spec import DesiredState
 from repro.core.cluster import SimulatedCluster
 from repro.core.controller import Controller, TransitionReport
-from repro.core.deployment import Deployment, Workload
+from repro.core.deployment import Deployment, IndexedDeployment, Workload
 from repro.core.optimizer import OptimizeReport, TwoPhaseOptimizer
 from repro.core.profiles import PerfProfile
 from repro.core.rms import SLO, ReconfigRules
@@ -71,10 +73,18 @@ class ReoptimizeDriver:
         seed: int = 0,
         optimizer_kwargs: Optional[Dict] = None,
         latency_targets: Optional[Mapping[str, float]] = None,
+        control_plane: Optional[ControlPlane] = None,
     ):
         self.rules = rules
         self.profile = profile
         self.controller = Controller(rules, profile)
+        # control_plane= mode (repro.controlplane): transitions route through
+        # the level-triggered reconciler instead of one direct
+        # Controller.transition, and divergence (device faults) triggers
+        # repair passes even when demand did not move.  None = the direct
+        # path, bit-for-bit identical to the pre-control-plane behavior.
+        self.control_plane = control_plane
+        self.desired: Optional[DesiredState] = None  # reconciler's target
         self.latency_slo_ms = latency_slo_ms
         # per-service latency SLOs (an interactive service can demand 50 ms
         # while a batchy one tolerates 200 ms); services absent from the map
@@ -130,7 +140,19 @@ class ReoptimizeDriver:
         )
         report = opt.run(skip_phase2=not self.use_phase2)
         self.last_optimize_report = report
-        return report.best_deployment
+        dep = report.best_deployment
+        if self.control_plane is not None:
+            # refresh the reconciler's declarative target (§6's "desired
+            # state"): the deployment, its array-native twin, and the
+            # required rates it was sized for
+            self.desired = DesiredState(
+                deployment=dep,
+                required={
+                    s.name: s.slo.throughput for s in workload.services
+                },
+                indexed=IndexedDeployment.from_deployment(opt.space, dep),
+            )
+        return dep
 
     # -- actuation ----------------------------------------------------------------
     def initial_deploy(
@@ -154,10 +176,15 @@ class ReoptimizeDriver:
     ) -> Optional[PendingTransition]:
         """Run one observe->optimize->transition step at sim time ``now``.
 
-        Returns ``None`` when demand has not moved enough to act.
+        Returns ``None`` when demand has not moved enough to act.  In
+        ``control_plane=`` mode a steady demand still level-triggers a
+        repair pass when the observed cluster diverged from the desired
+        state (device faults since the last look).
         """
         new_workload = self.workload_for(observed_rates)
         if not self.demand_moved(new_workload):
+            if self.control_plane is not None:
+                return self.reconcile_divergence(cluster, now)
             return None
         assert self.workload is not None, "initial_deploy must run first"
         cluster.record_instance_trace = True
@@ -173,14 +200,65 @@ class ReoptimizeDriver:
         gpus_before = cluster.gpus_in_use()
         n0 = len(cluster.instance_trace)
         clock0 = cluster.clock
-        report: TransitionReport = self.controller.transition(cluster, new_dep)
+        report, stats = self._execute_transition(cluster, new_dep)
         self.workload = new_workload
 
         pending = self._build_pending(
             now, pre_instances, cluster, n0, clock0, report,
             old_required, new_required, gpus_before,
+            trigger="demand", stats=stats,
         )
         cluster.instance_trace.clear()  # consumed; see initial_deploy
+        return pending
+
+    def _execute_transition(
+        self, cluster: SimulatedCluster, new_dep: Deployment
+    ) -> Tuple[TransitionReport, Optional[ReconcileStats]]:
+        """Direct §6 transition, or the reconciler in control-plane mode.
+
+        Reconcile stats surface only under a fault profile, so the ``none``
+        profile's reports keep their exact direct-path bytes."""
+        if self.control_plane is None:
+            return self.controller.transition(cluster, new_dep), None
+        assert self.desired is not None, "optimize() must set the target"
+        report, stats = self.control_plane.reconciler.reconcile(
+            cluster, self.desired
+        )
+        return report, (stats if self.control_plane.fault_mode else None)
+
+    def reconcile_divergence(
+        self, cluster: SimulatedCluster, now: float
+    ) -> Optional[PendingTransition]:
+        """Level-triggered repair: if observed state diverged from the
+        standing desired state (a device failed, a node is draining), run a
+        reconcile pass toward the unchanged target.  Returns ``None`` when
+        already converged."""
+        assert self.control_plane is not None
+        if (
+            self.desired is None
+            or self.workload is None
+            or not self.control_plane.reconciler.diverged(cluster, self.desired)
+        ):
+            return None
+        cluster.record_instance_trace = True
+        required = {s.name: s.slo.throughput for s in self.workload.services}
+        pre_instances = cluster.busy_instances()
+        gpus_before = cluster.gpus_in_use()
+        n0 = len(cluster.instance_trace)
+        clock0 = cluster.clock
+        report, stats = self.control_plane.reconciler.reconcile(
+            cluster, self.desired
+        )
+        if not report.actions:
+            cluster.instance_trace.clear()
+            return None
+        pending = self._build_pending(
+            now, pre_instances, cluster, n0, clock0, report,
+            required, required, gpus_before,
+            trigger="fault",
+            stats=stats if self.control_plane.fault_mode else None,
+        )
+        cluster.instance_trace.clear()
         return pending
 
     def _build_pending(
@@ -194,6 +272,8 @@ class ReoptimizeDriver:
         old_required: Dict[str, float],
         new_required: Dict[str, float],
         gpus_before: int,
+        trigger: str = "demand",
+        stats: Optional[ReconcileStats] = None,
     ) -> PendingTransition:
         # The cluster trace advances serially (one action at a time); real
         # wall clock is the dependency-aware parallel makespan.  Compress
@@ -233,5 +313,7 @@ class ReoptimizeDriver:
             gpus_before=gpus_before,
             gpus_after=report.final_gpus_busy,
             transparency_margin=dict(sorted(margin.items())),
+            trigger=trigger,
+            reconcile=stats.to_dict() if stats is not None else None,
         )
         return PendingTransition(now, end, timeline, record)

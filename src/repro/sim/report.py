@@ -32,10 +32,37 @@ class TransitionRecord:
     # min over trace points of (capacity - min(old, new) required), per service;
     # the §6 transparency guarantee is exactly: every value >= 0.
     transparency_margin: Dict[str, float]
+    # control-plane extensions: populated ONLY under a fault profile (the
+    # serializer skips them when None, so default-mode reports keep their
+    # exact pre-control-plane bytes)
+    trigger: str = "demand"  # "demand" | "fault" — what fired this pass
+    reconcile: Optional[Dict] = None  # ReconcileStats.to_dict()
 
     @property
     def transparent(self) -> bool:
         return all(m >= -1e-6 for m in self.transparency_margin.values())
+
+
+@dataclasses.dataclass
+class FaultRecord:
+    """One injected device-level fault (repro.controlplane.faults)."""
+
+    time_s: float
+    kind: str  # "gpu_failure" | "node_drain"
+    target: int  # gpu id (failure) or machine id (drain)
+    fault_domain: str
+    killed_instances: int
+    lost_throughput: Dict[str, float]  # per-service req/s that vanished
+
+    def to_dict(self) -> Dict:
+        return {
+            "time_s": self.time_s,
+            "kind": self.kind,
+            "target": self.target,
+            "fault_domain": self.fault_domain,
+            "killed_instances": self.killed_instances,
+            "lost_throughput": dict(sorted(self.lost_throughput.items())),
+        }
 
 
 @dataclasses.dataclass
@@ -48,6 +75,9 @@ class ServiceTimeline:
     backlog: np.ndarray  # queued requests at bin end
     required: np.ndarray  # current SLO throughput * bin_s
     attainment: np.ndarray  # min(1, capacity / required)
+    # degraded-mode admission control (fault profiles only; None otherwise
+    # so default-mode serializations are unchanged)
+    shed: Optional[np.ndarray] = None  # requests shed by admission control
 
 
 @dataclasses.dataclass
@@ -60,6 +90,9 @@ class SimReport:
     transitions: List[TransitionRecord]
     reoptimize_checks: int  # how many observe-points fired
     final_gpus: int
+    # injected device faults (control-plane fault profiles only; empty in
+    # default mode, where the serializer omits the key entirely)
+    faults: List[FaultRecord] = dataclasses.field(default_factory=list)
 
     # -- derived -----------------------------------------------------------------
     def slo_satisfaction(self, svc: str) -> float:
@@ -78,6 +111,51 @@ class SimReport:
     @property
     def transparent(self) -> bool:
         return all(t.transparent for t in self.transitions)
+
+    def _all_attained(self) -> np.ndarray:
+        """Per-bin bool: every service met its required rate this bin."""
+        ok = np.ones(len(self.times), dtype=bool)
+        for tl in self.timelines.values():
+            ok &= tl.attainment >= 1.0 - 1e-9
+        return ok
+
+    def availability(self) -> float:
+        """Fraction of bins in which every service met its required rate —
+        the headline the fault-profile scenario cells compare."""
+        return float(np.mean(self._all_attained()))
+
+    def recovery_time_s(self) -> Optional[float]:
+        """Worst time from an injected device fault to SLO re-attainment
+        (the first bin at or after the fault where every service meets its
+        required rate again).  ``None`` when no faults were injected; when a
+        fault is never recovered from, censored at the end of the trace."""
+        if not self.faults:
+            return None
+        ok = self._all_attained()
+        end_s = float(self.times[-1] + self.bin_s)
+        worst = 0.0
+        for f in self.faults:
+            k = int(np.searchsorted(self.times, f.time_s - 1e-9))
+            recovered = None
+            for j in range(k, len(ok)):
+                if ok[j]:
+                    recovered = float(self.times[j])
+                    break
+            took = (recovered - f.time_s) if recovered is not None else (
+                end_s - f.time_s
+            )
+            worst = max(worst, took)
+        return float(max(worst, 0.0))
+
+    def shed_total(self) -> float:
+        """Requests shed by degraded-mode admission control over the run."""
+        return float(
+            sum(
+                np.sum(tl.shed)
+                for tl in self.timelines.values()
+                if tl.shed is not None
+            )
+        )
 
     def transparency_margin(self) -> float:
         """Worst §6 margin over all transitions and services (>= 0 means the
@@ -105,6 +183,9 @@ class SimReport:
                     "backlog": arr(tl.backlog),
                     "required": arr(tl.required),
                     "attainment": arr(tl.attainment),
+                    # key present only under fault profiles — default-mode
+                    # bytes must not change
+                    **({"shed": arr(tl.shed)} if tl.shed is not None else {}),
                 }
                 for svc, tl in sorted(self.timelines.items())
             },
@@ -123,11 +204,23 @@ class SimReport:
                         sorted(t.transparency_margin.items())
                     ),
                     "transparent": t.transparent,
+                    # reconcile metadata only exists under fault profiles
+                    **(
+                        {"trigger": t.trigger, "reconcile": t.reconcile}
+                        if t.reconcile is not None
+                        else {}
+                    ),
                 }
                 for t in self.transitions
             ],
             "reoptimize_checks": self.reoptimize_checks,
             "final_gpus": self.final_gpus,
+            # injected faults only exist under fault profiles
+            **(
+                {"faults": [f.to_dict() for f in self.faults]}
+                if self.faults
+                else {}
+            ),
         }
 
     def to_json(self) -> str:
@@ -148,12 +241,26 @@ class SimReport:
                 f" mean attainment {self.mean_attainment(svc):.3f},"
                 f" served {self.served_fraction(svc):.1%} of arrivals"
             )
+        for f in self.faults:
+            lines.append(
+                f"  FAULT t={f.time_s:.0f}s {f.kind} target={f.target}"
+                f" ({f.fault_domain}) killed={f.killed_instances}"
+                f" lost={dict(sorted(f.lost_throughput.items()))}"
+            )
         for i, t in enumerate(self.transitions):
+            extra = ""
+            if t.reconcile is not None:
+                extra = (
+                    f" trigger={t.trigger}"
+                    f" reconcile(iter={t.reconcile['iterations']},"
+                    f" retried={t.reconcile['retried']},"
+                    f" converged={t.reconcile['converged']})"
+                )
             lines.append(
                 f"  transition {i}: t={t.start_s:.0f}s"
                 f" parallel={t.parallel_seconds:.0f}s serial={t.serial_seconds:.0f}s"
                 f" actions={dict(sorted(t.action_counts.items()))}"
-                f" transparent={t.transparent}"
+                f" transparent={t.transparent}" + extra
             )
         lines.append(
             "  §6 transparency margin (worst over trace points):"

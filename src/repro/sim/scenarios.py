@@ -1,11 +1,11 @@
-"""Declarative scenario matrix: trace shape x scheduler x scale x SLO policy.
+"""Declarative scenario matrix: trace x scheduler x scale x SLO x faults.
 
 The RMS framing (§3) makes the paper's pipeline one point in a family of
 scheduling algorithms; this module is the harness that compares the family
 under diverse workloads.  A :class:`ScenarioCell` names one coordinate of
 the cross-product
 
-    TRACE_SHAPES  x  SCHEDULERS  x  SCALES  x  SLO_POLICIES
+    TRACE_SHAPES  x  SCHEDULERS  x  SCALES  x  SLO_POLICIES  x  FAULT_PROFILES
 
 and :func:`run_cell` runs that cell through the closed-loop simulator
 (:class:`repro.sim.simulator.ClusterSimulator`), returning a
@@ -19,6 +19,11 @@ and :func:`run_cell` runs that cell through the closed-loop simulator
     serving of the same peak demand, ``baseline_homogeneous`` at
     ``size=device_size``),
   * modeled power of the final instance set (:class:`repro.core.zoo.PowerModel`),
+  * control-plane fault metrics (``fault != "none"`` cells): availability
+    (fraction of bins with every service at required rate), recovery time
+    to SLO re-attainment after the worst injected fault, reconcile
+    convergence iterations, actions retried/abandoned, requests shed by
+    degraded-mode admission control,
   * a SHA-256 of the cell's ``SimReport.to_json()`` — the determinism
     contract, per cell.
 
@@ -27,7 +32,7 @@ seed produces a byte-identical JSON document (wall-clock timings are
 deliberately *excluded*; ``benchmarks/bench_scenarios.py`` prints them to
 stdout instead).
 
-Extending the matrix (ROADMAP "Scenario matrix"):
+Extending the matrix (ROADMAP "Scenario matrix" / "Control plane"):
 
   * new trace shape  -> add a generator to :mod:`repro.sim.traffic`, then a
     ``TRACE_SHAPES`` entry mapping peaks+spec+seed to a ``Trace``;
@@ -37,7 +42,9 @@ Extending the matrix (ROADMAP "Scenario matrix"):
   * new scale        -> a ``SCALES`` entry (service count, rate scale,
     duration, cadence);
   * new SLO policy   -> an ``SLO_POLICIES`` entry mapping sorted service
-    names to (default latency, per-service overrides).
+    names to (default latency, per-service overrides);
+  * new fault profile -> ``repro.controlplane.faults.register_fault_profile``
+    (seeded; ``default_matrix`` picks it up on the curated fault slice).
 """
 
 from __future__ import annotations
@@ -48,6 +55,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.controlplane.faults import FAULT_PROFILES
 from repro.core.lower_bound import baseline_homogeneous
 from repro.core.mig import a100_rules
 from repro.core.profiles import SyntheticPaperProfiles
@@ -129,30 +137,53 @@ class ScenarioCell:
     scheduler: str
     scale: str
     slo: str = "uniform"
+    fault: str = "none"  # FAULT_PROFILES name; != "none" => control plane
 
     @property
     def name(self) -> str:
-        return f"{self.trace}/{self.scheduler}/{self.scale}/{self.slo}"
+        return (
+            f"{self.trace}/{self.scheduler}/{self.scale}/{self.slo}"
+            f"/{self.fault}"
+        )
+
+
+# the fault axis is curated rather than fully crossed: every registered
+# profile runs against the surge trace at small scale under the paper
+# greedy and the fragmentation-aware packer — fault dynamics (recovery,
+# availability) vary with the profile and the scheduler's packing style,
+# not with every trace/SLO combination, and the full 5-way product would
+# triple the benchmark's wall clock for redundant cells
+FAULT_SLICE_SCHEDULERS = ("frag", "greedy")
 
 
 def default_matrix() -> List[ScenarioCell]:
-    """The full cross-product (the matrix ``bench_scenarios.py`` publishes)."""
-    return [
+    """The published matrix: the full 4-axis cross-product under the
+    ``none`` profile, plus the curated fault slice."""
+    cells = [
         ScenarioCell(trace, sched, scale, slo)
         for trace in sorted(TRACE_SHAPES)
         for sched in sorted(SCHEDULERS)
         for scale in sorted(SCALES)
         for slo in sorted(SLO_POLICIES)
     ]
+    cells += [
+        ScenarioCell("surge", sched, "small", "uniform", fault)
+        for fault in sorted(FAULT_PROFILES)
+        if fault != "none"
+        for sched in FAULT_SLICE_SCHEDULERS
+    ]
+    return cells
 
 
 def smoke_matrix() -> List[ScenarioCell]:
     """Tiny CI matrix: both new zoo schedulers plus the paper greedy, one
-    trace per family, small scale only — fast enough for every CI run."""
+    trace per family, small scale only, one fault-profile cell — fast
+    enough for every CI run."""
     return [
         ScenarioCell("diurnal", "greedy", "small", "uniform"),
         ScenarioCell("surge", "frag", "small", "uniform"),
         ScenarioCell("surge", "energy", "small", "tiered"),
+        ScenarioCell("surge", "greedy", "small", "uniform", "gpu_loss"),
     ]
 
 
@@ -174,6 +205,17 @@ class CellResult:
     power_w: float  # modeled power of the final instance set
     transparent: bool  # §6 guarantee held at every trace point
     report_sha256: str  # SHA-256 of the cell's SimReport.to_json()
+    # control-plane metrics.  availability is computed for EVERY cell (it
+    # is the comparison baseline: a fault cell's availability reads against
+    # its none twin's); the remaining fields stay at their zero/None
+    # defaults unless the cell ran under a fault profile.
+    availability: float = 1.0  # fraction of bins with every svc at required
+    fault_events: int = 0  # injected device faults that actually fired
+    recovery_time_s: Optional[float] = None  # worst fault -> re-attainment
+    reconcile_iterations: int = 0  # transition attempts across all passes
+    actions_retried: int = 0  # attempts killed by injected faults
+    actions_abandoned: int = 0  # diff items given up on
+    shed_requests: float = 0.0  # dropped by degraded-mode admission control
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)  # recurses into the nested cell
@@ -194,6 +236,8 @@ def build_cell(
         latency_slo_ms=default_lat,
         latency_targets=targets,
         seed=seed,
+        fault_profile=cell.fault,
+        control_plane=cell.fault != "none",
     )
     sim = ClusterSimulator(
         a100_rules(), prof, trace, cfg,
@@ -221,6 +265,7 @@ def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
     power = PowerModel().instances_power(
         sim.cluster.busy_instances().values(), sim.cluster.gpus_in_use()
     )
+    reconciles = [t.reconcile for t in rep.transitions if t.reconcile]
     result = CellResult(
         cell=cell,
         slo_satisfaction={s: rep.slo_satisfaction(s) for s in rep.services},
@@ -238,6 +283,13 @@ def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
         power_w=power,
         transparent=rep.transparent,
         report_sha256=hashlib.sha256(rep.to_json().encode()).hexdigest(),
+        availability=rep.availability(),
+        fault_events=len(rep.faults),
+        recovery_time_s=rep.recovery_time_s(),
+        reconcile_iterations=sum(r["iterations"] for r in reconciles),
+        actions_retried=sum(r["retried"] for r in reconciles),
+        actions_abandoned=sum(r["abandoned"] for r in reconciles),
+        shed_requests=rep.shed_total(),
     )
     return result, rep
 
@@ -255,6 +307,7 @@ def matrix_doc(
             "schedulers": sorted({c.scheduler for c in cells}),
             "scales": sorted({c.scale for c in cells}),
             "slo_policies": sorted({c.slo for c in cells}),
+            "fault_profiles": sorted({c.fault for c in cells}),
         },
         "cells": results,
     }

@@ -26,6 +26,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.controlplane.faults import FAULT_PROFILES, DeviceFault
+from repro.controlplane.reconciler import ControlPlane, build_control_plane
+from repro.controlplane.spec import ClusterSpec
 from repro.core.cluster import SimulatedCluster
 from repro.core.profiles import PerfProfile
 from repro.core.rms import ReconfigRules
@@ -34,13 +37,20 @@ from repro.serving.router import InstanceHandle, WeightedRouter
 from repro.sim.events import (
     BIN_TICK,
     END,
+    FAULT,
+    RECONCILE,
     REOPTIMIZE,
     TRANSITION_DONE,
     Clock,
     EventQueue,
 )
 from repro.sim.reoptimize import InstanceSet, PendingTransition, ReoptimizeDriver
-from repro.sim.report import ServiceTimeline, SimReport, TransitionRecord
+from repro.sim.report import (
+    FaultRecord,
+    ServiceTimeline,
+    SimReport,
+    TransitionRecord,
+)
 from repro.sim.traffic import Trace
 
 
@@ -62,9 +72,18 @@ class SimConfig:
     throughput_noise: float = 0.0  # serving-vs-profiling variance (Fig. 14)
     seed: int = 0
     initial_gpus: int = 1  # cluster grows on demand past this
+    # control plane (repro.controlplane): route transitions through the
+    # level-triggered reconciler.  With fault_profile="none" this is
+    # bit-for-bit identical to the direct path (the tests pin it); a real
+    # fault profile implies control_plane=True.
+    control_plane: bool = False
+    fault_profile: str = "none"  # a repro.controlplane FAULT_PROFILES name
 
     def __post_init__(self):
         assert self.arrivals in ("poisson", "fluid"), self.arrivals
+        assert self.fault_profile in FAULT_PROFILES, self.fault_profile
+        if self.fault_profile != "none":
+            self.control_plane = True
 
 
 class ClusterSimulator:
@@ -94,6 +113,17 @@ class ClusterSimulator:
             latency_targets=self.config.latency_targets,
         )
         self.cluster = SimulatedCluster(rules, self.config.initial_gpus)
+        # the control plane (None in direct mode): reconciler + fault
+        # injector + degraded-mode admission control under one profile
+        self.control_plane: Optional[ControlPlane] = None
+        if self.config.control_plane:
+            self.control_plane = build_control_plane(
+                self.driver.controller,
+                self.config.fault_profile,
+                self.config.seed,
+                trace.duration_s,
+            )
+            self.driver.control_plane = self.control_plane
         # serving state
         self._pending: Optional[PendingTransition] = None
         self._routers: Dict[str, Tuple[Tuple, WeightedRouter]] = {}
@@ -101,11 +131,25 @@ class ClusterSimulator:
         self._backlog_svc: Dict[int, str] = {}  # uid -> owning service
         self._spill: Dict[str, float] = {}  # requeued load of vanished uids
         self._noise: Dict[int, float] = {}  # uid -> serving noise factor
+        self._dead_uids: set = set()  # instances lost to device failures
+        self._faults: List[FaultRecord] = []  # injected device faults
+
+    @property
+    def _fault_mode(self) -> bool:
+        return self.control_plane is not None and self.control_plane.fault_mode
 
     # -- instance plumbing -------------------------------------------------------
     def _active_instances(self, t: float) -> InstanceSet:
         if self._pending is not None and t < self._pending.end_s:
-            return self._pending.instances_at(t)
+            insts = self._pending.instances_at(t)
+            if self._dead_uids:
+                # a device failed while the transition timeline was still
+                # paying latencies: its instances are gone, whatever the
+                # snapshot says
+                insts = {
+                    u: v for u, v in insts.items() if u not in self._dead_uids
+                }
+            return insts
         return self.cluster.busy_instances()
 
     def _noise_of(self, uid: int) -> float:
@@ -170,6 +214,30 @@ class ClusterSimulator:
         required = {
             s.name: s.slo.throughput for s in self.driver.workload.services
         } if self.driver.workload else {}
+        # degraded-mode admission control (repro.controlplane.degraded):
+        # engaged only while the control plane is actually in an outage —
+        # observed state diverged from desired (a device died, a node is
+        # draining) or a fault-triggered repair is still paying its action
+        # latencies.  Healthy-cluster bursts, before or after an outage,
+        # keep the fluid-queue backlog semantics of the default mode.
+        admission = (
+            self.control_plane.admission
+            if self.control_plane is not None
+            else None
+        )
+        degraded = bool(
+            admission is not None
+            and self.driver.desired is not None
+            and (
+                (
+                    self._pending is not None
+                    and self._pending.record.trigger == "fault"
+                )
+                or self.control_plane.reconciler.diverged(
+                    self.cluster, self.driver.desired
+                )
+            )
+        )
 
         for svc in self.trace.services:
             rate = float(self.trace.rates[svc][k])
@@ -183,6 +251,19 @@ class ClusterSimulator:
             members = by_svc.get(svc, [])
             served = 0.0
             capacity_rate = sum(m[2] for m in members)
+            shed = 0.0
+            req_rate_now = required.get(svc, 0.0)
+            if (
+                degraded
+                and req_rate_now > 0
+                and capacity_rate < req_rate_now * (1.0 - 1e-9)
+            ):
+                # this service is under-provisioned against its SLO (the
+                # outage, not a stochastic burst): shed what post-failure
+                # capacity cannot absorb.  Shed requests were counted as
+                # arrivals and are never served, so the outage charges
+                # honestly to the report
+                demand, shed = admission.admit(demand, capacity_rate * dt)
             if members:
                 router = self._router_for(svc, members)
                 load: Dict[int, float] = {}
@@ -218,6 +299,8 @@ class ClusterSimulator:
             series["attainment"].append(
                 min(1.0, capacity_rate / req_rate) if req_rate > 0 else 1.0
             )
+            if self._fault_mode:
+                series["shed"].append(shed)
 
     # -- main loop ---------------------------------------------------------------
     def run(self) -> SimReport:
@@ -233,18 +316,21 @@ class ClusterSimulator:
             queue.push(t, REOPTIMIZE, None)
             t += cfg.reoptimize_every_s
         queue.push(trace.duration_s, END, None)
+        # injected device faults fire as first-class events
+        if self._fault_mode and self.control_plane.injector is not None:
+            for fault in self.control_plane.injector.device_faults():
+                if fault.time_s < trace.duration_s - 1e-9:
+                    queue.push(fault.time_s, FAULT, fault)
 
         # initial deployment sized for the trace's opening rates
         self.driver.initial_deploy(self.cluster, trace.rates_at(0.0))
 
+        series_names = (
+            "arrivals", "served", "capacity",
+            "backlog", "required", "attainment",
+        ) + (("shed",) if self._fault_mode else ())
         out: Dict[str, Dict[str, List[float]]] = {
-            svc: {
-                name: []
-                for name in (
-                    "arrivals", "served", "capacity",
-                    "backlog", "required", "attainment",
-                )
-            }
+            svc: {name: [] for name in series_names}
             for svc in trace.services
         }
         transitions: List[TransitionRecord] = []
@@ -270,6 +356,27 @@ class ClusterSimulator:
                 if self._pending is not None and ev.time >= self._pending.end_s:
                     self._pending = None
                     self._routers.clear()
+            elif ev.kind == FAULT:
+                rec = self._apply_device_fault(ev.payload, ev.time)
+                if rec is not None:
+                    self._faults.append(rec)
+                    self._routers.clear()
+                    # the control plane notices after its detection delay
+                    queue.push(
+                        ev.time + self.control_plane.profile.detection_delay_s,
+                        RECONCILE,
+                        None,
+                    )
+            elif ev.kind == RECONCILE:
+                if self._pending is not None and ev.time < self._pending.end_s - 1e-9:
+                    # let the in-flight transition settle, then look again
+                    queue.push(self._pending.end_s, RECONCILE, None)
+                    continue
+                pending = self.driver.reconcile_divergence(self.cluster, ev.time)
+                if pending is not None:
+                    self._pending = pending
+                    transitions.append(pending.record)
+                    queue.push(pending.end_s, TRANSITION_DONE, None)
             elif ev.kind == END:
                 break
 
@@ -282,6 +389,9 @@ class ClusterSimulator:
                 backlog=np.asarray(series["backlog"]),
                 required=np.asarray(series["required"]),
                 attainment=np.asarray(series["attainment"]),
+                shed=(
+                    np.asarray(series["shed"]) if "shed" in series else None
+                ),
             )
             for svc, series in out.items()
         }
@@ -294,4 +404,69 @@ class ClusterSimulator:
             transitions=transitions,
             reoptimize_checks=checks,
             final_gpus=self.cluster.gpus_in_use(),
+            faults=self._faults,
         )
+
+    # -- device faults -----------------------------------------------------------
+    def _apply_device_fault(
+        self, fault: DeviceFault, now: float
+    ) -> Optional[FaultRecord]:
+        """Fire one scheduled device fault; target picked deterministically
+        (seeded injector RNG over sorted candidates).  Returns ``None`` when
+        no eligible target exists (nothing busy to break)."""
+        cluster = self.cluster
+        injector = self.control_plane.injector
+        assert injector is not None
+        spec = ClusterSpec.from_cluster(cluster)
+        if fault.kind == "gpu_failure":
+            busy = [
+                gid for gid, g in cluster.gpus.items()
+                if g.busy() and gid not in cluster.failed
+            ]
+            gid = injector.pick_gpu(busy)
+            if gid is None:
+                return None
+            machine = cluster.gpus[gid].machine
+            lost: Dict[str, float] = {}
+            for r in cluster.gpus[gid].instances.values():
+                if r.service:
+                    lost[r.service] = lost.get(r.service, 0.0) + r.throughput
+            killed = cluster.fail_gpu(gid)
+            # kill every uid that ever lived on this device, not just the
+            # live ones: an in-flight transition timeline may still replay
+            # snapshots holding instances the plan deletes later, and those
+            # must not keep serving from dead hardware
+            self._dead_uids.update(
+                u for u, g in cluster.uid_gpu.items() if g == gid
+            )
+            return FaultRecord(
+                time_s=now,
+                kind="gpu_failure",
+                target=gid,
+                fault_domain=spec.fault_domain_of(machine),
+                killed_instances=len(killed),
+                lost_throughput=lost,
+            )
+        if fault.kind == "node_drain":
+            machines = sorted(
+                {
+                    g.machine
+                    for gid, g in cluster.gpus.items()
+                    if g.busy() and gid not in cluster.failed
+                }
+            )
+            machine = injector.pick_machine(machines)
+            if machine is None:
+                return None
+            cluster.drain_machine(machine)
+            # a drain kills nothing — its instances keep serving until the
+            # reconciler migrates them off the cordoned machine
+            return FaultRecord(
+                time_s=now,
+                kind="node_drain",
+                target=machine,
+                fault_domain=spec.fault_domain_of(machine),
+                killed_instances=0,
+                lost_throughput={},
+            )
+        raise ValueError(fault.kind)

@@ -1,0 +1,589 @@
+"""Control-plane tests (repro.controlplane + its closed-loop wiring).
+
+The properties ISSUE 4 pins:
+  (a) with the ``none`` fault profile, ``control_plane=`` mode reproduces
+      the direct-transition path **bit-for-bit** (SimReport bytes equal);
+  (b) fault-injected runs are seed-deterministic: same seed + same
+      profile => byte-identical reports and cell SHAs (golden-pinned);
+  (c) a GPU-failure scenario demonstrates SLO re-attainment after
+      recovery, with availability/recovery-time metrics;
+  (d) the reconciler retries botched actions under exponential backoff
+      and resumes from partial progress instead of thrashing;
+  (e) ``parallel_makespan`` properties: bounded by serial sum, at least
+      the longest action, invariant under same-device reordering.
+
+Golden regeneration (intentional behavior changes only)::
+
+    PYTHONPATH=src python tests/test_controlplane.py --regen
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+if __name__ == "__main__":  # regen mode runs without pytest/conftest
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_compat import given, settings, st
+
+from repro.controlplane import (
+    FAULT_PROFILES,
+    AdmissionController,
+    ControlPlane,
+    DesiredState,
+    FaultInjector,
+    FaultProfile,
+    ObservedState,
+    Reconciler,
+    diff,
+)
+from repro.core import SLO, SyntheticPaperProfiles, Workload, a100_rules
+from repro.core.cluster import (
+    ACTION_SECONDS,
+    Action,
+    ActionFault,
+    SimulatedCluster,
+    parallel_makespan,
+)
+from repro.core.controller import Controller
+from repro.core.optimizer import TwoPhaseOptimizer
+from repro.sim import ClusterSimulator, ScenarioCell, SimConfig, run_cell
+from repro.sim.traffic import diurnal_trace
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "golden", "controlplane_golden.json"
+)
+
+# fault cells pinned byte-for-byte (cell name pieces + seed)
+GOLDEN_CELLS = [
+    ScenarioCell("surge", "greedy", "small", "uniform", "gpu_loss"),
+    ScenarioCell("surge", "greedy", "small", "uniform", "chaos"),
+]
+GOLDEN_SEED = 0
+
+
+def day_night(seed=0, n_models=4, hours=3.0):
+    prof = SyntheticPaperProfiles(n_models=n_models, seed=9)
+    rng = np.random.default_rng(42)
+    peaks = {m: float(rng.lognormal(7.0, 0.5)) for m in prof.services()}
+    trace = diurnal_trace(
+        peaks, duration_s=hours * 3600.0, bin_s=60.0, night_frac=0.25, seed=seed
+    )
+    return prof, trace
+
+
+def small_problem(n=3, seed=9):
+    prof = SyntheticPaperProfiles(n_models=n, seed=seed)
+    rng = np.random.default_rng(7)
+    slos = {
+        m: SLO(float(rng.lognormal(6.5, 0.5)), 100.0) for m in prof.services()
+    }
+    wl = Workload.make(slos)
+    return prof, wl
+
+
+def deploy_small(prof, wl):
+    """An optimized deployment on a fresh cluster, plus its DesiredState."""
+    rules = a100_rules()
+    opt = TwoPhaseOptimizer(rules, prof, wl)
+    dep = opt.run(skip_phase2=True).best_deployment
+    ctrl = Controller(rules, prof)
+    cluster = SimulatedCluster(rules, dep.num_gpus)
+    ctrl.deploy_fresh(cluster, dep)
+    desired = DesiredState(
+        deployment=dep,
+        required={s.name: s.slo.throughput for s in wl.services},
+    )
+    return rules, ctrl, cluster, dep, desired
+
+
+# -- (a) zero-behavior-change default -------------------------------------------
+
+
+class TestNoneProfileBitForBit:
+    def test_control_plane_reproduces_direct_path(self):
+        prof, trace = day_night()
+        direct = ClusterSimulator(
+            a100_rules(), prof, trace, SimConfig(seed=3)
+        ).run()
+        via_cp = ClusterSimulator(
+            a100_rules(), prof, trace, SimConfig(seed=3, control_plane=True)
+        ).run()
+        assert direct.to_json() == via_cp.to_json()
+
+    def test_scenario_cell_sha_unchanged_by_control_plane(self):
+        """The existing direct-transition scenario cells stay bit-for-bit
+        when re-run through control_plane= mode with the none profile."""
+        from repro.sim.scenarios import build_cell
+
+        cell = ScenarioCell("surge", "greedy", "small", "uniform", "none")
+        sim_direct, _ = build_cell(cell, seed=0)
+        assert sim_direct.control_plane is None
+        rep_direct = sim_direct.run()
+
+        sim_cp, _ = build_cell(cell, seed=0)
+        sim_cp.config.control_plane = True
+        sim_cp.control_plane = __import__(
+            "repro.controlplane.reconciler", fromlist=["build_control_plane"]
+        ).build_control_plane(
+            sim_cp.driver.controller, "none", 0, sim_cp.trace.duration_s
+        )
+        sim_cp.driver.control_plane = sim_cp.control_plane
+        rep_cp = sim_cp.run()
+        assert rep_direct.to_json() == rep_cp.to_json()
+
+    def test_none_profile_report_has_no_new_keys(self):
+        prof, trace = day_night(hours=2.0)
+        rep = ClusterSimulator(
+            a100_rules(), prof, trace, SimConfig(seed=1, control_plane=True)
+        ).run()
+        d = rep.to_dict()
+        assert "faults" not in d
+        for tl in d["timelines"].values():
+            assert "shed" not in tl
+        for t in d["transitions"]:
+            assert "reconcile" not in t and "trigger" not in t
+
+
+# -- spec / diff -----------------------------------------------------------------
+
+
+class TestSpecAndDiff:
+    def test_observe_and_converged(self):
+        prof, wl = small_problem()
+        _, _, cluster, dep, desired = deploy_small(prof, wl)
+        obs = ObservedState.observe(cluster)
+        d = diff(obs, desired)
+        assert d.converged and d.summary() == "converged"
+        assert obs.content() == desired.content()
+        provided = obs.provided()
+        for svc, req in desired.required.items():
+            assert provided[svc] >= req - 1e-6
+
+    def test_gpu_failure_diverges(self):
+        prof, wl = small_problem()
+        _, _, cluster, dep, desired = deploy_small(prof, wl)
+        victim = max(
+            cluster.gpus,
+            key=lambda g: len(cluster.gpus[g].instances),
+        )
+        killed = cluster.fail_gpu(victim)
+        assert killed
+        d = diff(ObservedState.observe(cluster), desired)
+        assert not d.converged
+        assert sum(d.missing.values()) == len(killed)
+        assert d.shortfall  # lost throughput shows up as shortfall
+
+    def test_drain_diverges_via_misplaced(self):
+        prof, wl = small_problem()
+        _, _, cluster, dep, desired = deploy_small(prof, wl)
+        busy = [gid for gid, g in cluster.gpus.items() if g.busy()]
+        cluster.drain_gpu(busy[0])
+        d = diff(ObservedState.observe(cluster), desired)
+        assert not d.converged
+        assert not d.missing and not d.surplus
+        assert len(d.misplaced) == len(
+            [
+                r
+                for r in cluster.gpus[busy[0]].instances.values()
+                if r.service
+            ]
+        )
+
+
+# -- reconciler ------------------------------------------------------------------
+
+
+class TestReconciler:
+    def test_heals_gpu_failure(self):
+        prof, wl = small_problem()
+        rules, ctrl, cluster, dep, desired = deploy_small(prof, wl)
+        victim = max(
+            cluster.gpus, key=lambda g: len(cluster.gpus[g].instances)
+        )
+        cluster.fail_gpu(victim)
+        rec = Reconciler(ctrl)
+        assert rec.diverged(cluster, desired)
+        report, stats = rec.reconcile(cluster, desired)
+        assert stats.converged
+        assert not rec.diverged(cluster, desired)
+        assert report.action_counts.get("create", 0) > 0
+        # nothing was ever scheduled back onto the dead device
+        assert not cluster.gpus[victim].instances
+
+    def test_drain_empties_the_machine(self):
+        prof, wl = small_problem()
+        rules, ctrl, cluster, dep, desired = deploy_small(prof, wl)
+        busy = [gid for gid, g in cluster.gpus.items() if g.busy()]
+        machine = cluster.gpus[busy[0]].machine
+        cluster.drain_machine(machine)
+        report, stats = Reconciler(ctrl).reconcile(cluster, desired)
+        assert stats.converged
+        for gid in cluster.machine_gpus(machine):
+            assert not cluster.gpus[gid].busy()
+        # target multiset is intact elsewhere
+        assert diff(ObservedState.observe(cluster), desired).converged
+
+    def test_retries_with_exponential_backoff_and_resumes(self):
+        """Every create attempt fails until the injector's Nth draw; the
+        reconciler must re-plan (keeping partial progress) and charge
+        exponential backoff."""
+        prof, wl = small_problem()
+        rules, ctrl, cluster, dep, desired = deploy_small(prof, wl)
+        victim = max(
+            cluster.gpus, key=lambda g: len(cluster.gpus[g].instances)
+        )
+        killed = cluster.fail_gpu(victim)
+
+        class FailTwice:
+            profile = FAULT_PROFILES["flaky_mig"]
+
+            def __init__(self):
+                self.calls = 0
+                self.created_before_each_attempt = []
+
+            def action_hook(self, action):
+                if action.kind == "create" and self.calls < 2:
+                    self.calls += 1
+                    raise ActionFault(
+                        action, "injected", wasted_s=ACTION_SECONDS["create"]
+                    )
+                return 1.0
+
+            def backoff_s(self, attempt):
+                return 5.0 * 2 ** (attempt - 1)
+
+        inj = FailTwice()
+        rec = Reconciler(ctrl, injector=inj)
+        report, stats = rec.reconcile(cluster, desired)
+        assert stats.converged
+        assert stats.retried == 2
+        assert stats.iterations == 3
+        assert stats.backoff_s == 5.0 + 10.0  # 5 * 2^(attempt-1)
+        assert stats.wasted_s == 2 * ACTION_SECONDS["create"]
+        # wasted + backoff are charged into the makespan
+        assert report.parallel_seconds > stats.backoff_s + stats.wasted_s
+        # partial progress: in total only the killed instances were created
+        # (each re-plan resumed, never redoing completed creates)
+        assert report.action_counts["create"] == len(killed)
+        assert diff(ObservedState.observe(cluster), desired).converged
+
+    def test_gives_up_without_thrashing(self):
+        """An unreachable target (device lost, nothing schedulable) stops
+        after a no-progress pass instead of looping max_iterations times."""
+        prof, wl = small_problem(n=2)
+        rules, ctrl, cluster, dep, desired = deploy_small(prof, wl)
+        # drain everything: no schedulable device can host repairs
+        for gid in list(cluster.gpus):
+            cluster.drain_gpu(gid)
+
+        class NoCreates:
+            profile = FAULT_PROFILES["flaky_mig"]
+
+            def action_hook(self, action):
+                raise ActionFault(action, "injected", wasted_s=1.0)
+
+            def backoff_s(self, attempt):
+                return 1.0
+
+        rec = Reconciler(ctrl, injector=NoCreates(), max_iterations=4)
+        report, stats = rec.reconcile(cluster, desired)
+        assert not stats.converged
+        assert stats.abandoned > 0
+
+    def test_straggler_inflates_makespan(self):
+        prof, wl = small_problem()
+        rules, ctrl, cluster, dep, desired = deploy_small(prof, wl)
+        victim = max(
+            cluster.gpus, key=lambda g: len(cluster.gpus[g].instances)
+        )
+        cluster.fail_gpu(victim)
+        baseline_cluster_state = None  # same plan both times by determinism
+
+        class AllStraggle:
+            profile = FAULT_PROFILES["stragglers"]
+
+            def action_hook(self, action):
+                return 4.0
+
+            def backoff_s(self, attempt):
+                return 0.0
+
+        report, stats = Reconciler(ctrl, injector=AllStraggle()).reconcile(
+            cluster, desired
+        )
+        assert stats.converged
+        n = len(report.actions)
+        assert n > 0
+        assert report.serial_seconds == pytest.approx(
+            4.0 * sum(a.seconds() for a in report.actions)
+        )
+
+
+# -- (c, d) closed-loop fault scenarios ------------------------------------------
+
+
+class TestFaultScenarios:
+    def test_gpu_loss_recovers_slo(self):
+        """The acceptance demo: a failure dents availability, the control
+        plane repairs it, and the SLO is re-attained before the trace ends."""
+        res, rep = run_cell(
+            ScenarioCell("surge", "greedy", "small", "uniform", "gpu_loss"),
+            seed=0,
+        )
+        assert len(rep.faults) == 1
+        fault = rep.faults[0]
+        assert fault.kind == "gpu_failure" and fault.killed_instances > 0
+        assert res.availability < 1.0
+        assert res.recovery_time_s is not None
+        # recovered well before the end of the 2 h trace
+        assert 0.0 < res.recovery_time_s < rep.times[-1] - fault.time_s
+        # a fault-triggered reconcile pass ran and converged
+        repairs = [t for t in rep.transitions if t.trigger == "fault"]
+        assert repairs and all(t.reconcile["converged"] for t in repairs)
+        # SLO is re-attained: the recovery bin itself is attained, the
+        # outage window really dented availability, and the run ends
+        # healthy (later dips are the surge trace's own, not the fault's)
+        ok = rep._all_attained()
+        k = int(np.searchsorted(rep.times, fault.time_s + res.recovery_time_s))
+        assert ok[k]
+        outage = ok[
+            int(np.searchsorted(rep.times, fault.time_s - 1e-9)) : k
+        ]
+        assert len(outage) > 0 and not outage.all()
+        assert ok[-3:].all()
+        # degraded-mode admission control shed the over-capacity load
+        assert res.shed_requests > 0.0
+
+    def test_fault_cells_report_reconcile_metrics(self):
+        res, rep = run_cell(
+            ScenarioCell("surge", "greedy", "small", "uniform", "chaos"),
+            seed=0,
+        )
+        d = res.to_dict()
+        assert d["fault_events"] >= 1
+        assert d["reconcile_iterations"] >= d["transitions"]
+        assert d["actions_retried"] > 0  # chaos's flaky creates really fire
+        reconciles = [t.reconcile for t in rep.transitions if t.reconcile]
+        assert reconciles
+        retried = [r for r in reconciles if r["retried"]]
+        assert retried and all(r["backoff_s"] > 0 for r in retried)
+
+    @given(seed=st.integers(0, 6))
+    @settings(max_examples=3, deadline=None)
+    def test_fault_cells_seed_deterministic(self, seed):
+        cell = ScenarioCell("surge", "greedy", "small", "uniform", "gpu_loss")
+        res1, rep1 = run_cell(cell, seed)
+        res2, rep2 = run_cell(cell, seed)
+        assert rep1.to_json() == rep2.to_json()
+        assert res1.report_sha256 == res2.report_sha256
+        assert res1.to_dict() == res2.to_dict()
+
+    def test_shed_is_charged_honestly(self):
+        """Shed requests count as arrivals but are never served."""
+        _, rep = run_cell(
+            ScenarioCell("surge", "greedy", "small", "uniform", "gpu_loss"),
+            seed=0,
+        )
+        assert rep.shed_total() > 0
+        for svc, tl in rep.timelines.items():
+            assert tl.shed is not None
+            assert (tl.shed >= -1e-9).all()
+            # conservation: everything served came from arrivals minus shed
+            # (backlog may carry between bins, so compare totals)
+            assert np.sum(tl.served) <= np.sum(tl.arrivals) - np.sum(
+                tl.shed
+            ) + 1e-6
+
+
+# -- degraded-mode admission control ---------------------------------------------
+
+
+class TestAdmission:
+    def test_admits_everything_when_capacity_suffices(self):
+        adm = AdmissionController()
+        assert adm.admit(100.0, 100.0) == (100.0, 0.0)
+        assert adm.admit(0.0, 50.0) == (0.0, 0.0)
+
+    def test_sheds_excess(self):
+        adm = AdmissionController()
+        admitted, shed = adm.admit(100.0, 60.0)
+        assert admitted == 60.0 and shed == 40.0
+
+    def test_min_admit_floor(self):
+        adm = AdmissionController(min_admit_frac=0.5)
+        admitted, shed = adm.admit(100.0, 10.0)
+        assert admitted == 50.0 and shed == 50.0
+
+
+# -- fault injector determinism ---------------------------------------------------
+
+
+class TestInjector:
+    @given(seed=st.integers(0, 50))
+    @settings(max_examples=10, deadline=None)
+    def test_schedule_is_seeded(self, seed):
+        p = FAULT_PROFILES["chaos"]
+        a = FaultInjector(p, seed, 7200.0).device_faults()
+        b = FaultInjector(p, seed, 7200.0).device_faults()
+        assert [(f.time_s, f.kind) for f in a] == [
+            (f.time_s, f.kind) for f in b
+        ]
+        lo, hi = p.failure_window
+        for f in a:
+            if f.kind == "gpu_failure":
+                assert lo * 7200.0 <= f.time_s <= hi * 7200.0
+
+    def test_profiles_differ(self):
+        a = FaultInjector(FAULT_PROFILES["gpu_loss"], 0, 7200.0)
+        b = FaultInjector(FAULT_PROFILES["chaos"], 0, 7200.0)
+        assert [f.time_s for f in a.device_faults()] != [
+            f.time_s for f in b.device_faults()
+        ]
+
+    def test_registry_contents(self):
+        assert "none" in FAULT_PROFILES
+        assert {"gpu_loss", "drain", "flaky_mig", "stragglers", "chaos"} <= set(
+            FAULT_PROFILES
+        )
+        none = FAULT_PROFILES["none"]
+        assert not none.injects_actions and not none.injects_devices
+
+
+# -- (e) parallel_makespan properties --------------------------------------------
+
+_KINDS = ("create", "delete", "repartition")
+
+
+def _single_gpu_actions(spec):
+    """[(kind idx, gpu)] -> single-device actions (no migrations)."""
+    return [Action(_KINDS[k % len(_KINDS)], gpu=g % 5) for k, g in spec]
+
+
+class TestMakespanProperties:
+    @given(
+        spec=st.lists(
+            st.tuples(st.integers(0, 2), st.integers(0, 4)),
+            min_size=1,
+            max_size=24,
+        )
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_bounded_by_serial_and_longest(self, spec):
+        actions = _single_gpu_actions(spec)
+        ms = parallel_makespan(actions)
+        serial = sum(a.seconds() for a in actions)
+        longest = max(a.seconds() for a in actions)
+        assert ms <= serial + 1e-9
+        assert ms >= longest - 1e-9
+
+    @given(
+        spec=st.lists(
+            st.tuples(st.integers(0, 2), st.integers(0, 4)),
+            min_size=2,
+            max_size=24,
+        ),
+        swap=st.integers(0, 1 << 16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_invariant_under_same_device_reordering(self, spec, swap):
+        """Permuting single-device actions *within one device* (keeping
+        other devices' action order) never changes the makespan."""
+        actions = _single_gpu_actions(spec)
+        base = parallel_makespan(actions)
+        # rotate the actions of one device in place
+        rng = np.random.default_rng(swap)
+        gpu = int(rng.integers(5))
+        idx = [i for i, a in enumerate(actions) if a.gpu == gpu]
+        if len(idx) >= 2:
+            rolled = [actions[i] for i in idx]
+            rolled = rolled[1:] + rolled[:1]
+            permuted = list(actions)
+            for i, a in zip(idx, rolled):
+                permuted[i] = a
+            assert parallel_makespan(permuted) == pytest.approx(base)
+
+    @given(
+        spec=st.lists(
+            st.tuples(st.integers(0, 2), st.integers(0, 4)),
+            min_size=1,
+            max_size=24,
+        ),
+        k=st.integers(1, 4),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_bounded_concurrency_never_faster(self, spec, k):
+        actions = _single_gpu_actions(spec)
+        unbounded = parallel_makespan(actions)
+        bounded = parallel_makespan(actions, max_concurrent=k)
+        serial = sum(a.seconds() for a in actions)
+        assert bounded >= unbounded - 1e-9
+        assert bounded <= serial + 1e-9
+        # one slot degenerates to the serial schedule
+        assert parallel_makespan(actions, max_concurrent=1) == pytest.approx(
+            serial
+        )
+
+    def test_seconds_override(self):
+        actions = [Action("create", 0), Action("create", 1)]
+        assert parallel_makespan(actions) == pytest.approx(62.0)
+        assert parallel_makespan(actions, seconds=[10.0, 40.0]) == pytest.approx(
+            40.0
+        )
+
+    def test_migrations_conflict_across_both_gpus(self):
+        a = Action("migrate", 0, uid=1, dst_gpu=1)
+        b = Action("create", 1, size=1)
+        # b waits for the migrate touching gpu1
+        assert parallel_makespan([a, b]) == pytest.approx(
+            a.seconds() + b.seconds()
+        )
+
+
+# -- golden pins -----------------------------------------------------------------
+
+
+def compute_golden():
+    cells = {}
+    for cell in GOLDEN_CELLS:
+        res, _ = run_cell(cell, GOLDEN_SEED)
+        d = res.to_dict()
+        cells[cell.name] = {
+            "report_sha256": d["report_sha256"],
+            "availability": d["availability"],
+            "recovery_time_s": d["recovery_time_s"],
+            "fault_events": d["fault_events"],
+            "reconcile_iterations": d["reconcile_iterations"],
+            "actions_retried": d["actions_retried"],
+            "actions_abandoned": d["actions_abandoned"],
+            "shed_requests": d["shed_requests"],
+            "gpus_peak": d["gpus_peak"],
+        }
+    return {"schema": 1, "seed": GOLDEN_SEED, "cells": cells}
+
+
+def test_fault_cells_match_golden():
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    current = compute_golden()
+    assert current == golden, (
+        "seeded control-plane cells drifted from tests/golden/"
+        "controlplane_golden.json — if intentional, regenerate with "
+        "`PYTHONPATH=src python tests/test_controlplane.py --regen` and "
+        "commit with a [golden-regen] marker"
+    )
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(compute_golden(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print(__doc__)

@@ -270,13 +270,15 @@ def test_mcts_edges_only_touch_sampled_or_scored_configs():
 
 
 def test_core_and_sim_stay_jax_free():
-    """The performance contract: repro.core and repro.sim import no jax."""
+    """The performance contract: repro.core, repro.sim and the control
+    plane (repro.controlplane) import no jax."""
     import subprocess
     import sys
 
     code = (
-        "import sys; import repro.core, repro.sim; "
+        "import sys; import repro.core, repro.sim, repro.controlplane; "
         "import repro.core.zoo, repro.sim.scenarios; "  # the scheduler zoo + matrix
+        "import repro.controlplane.reconciler, repro.controlplane.faults; "
         "bad = [m for m in sys.modules if m == 'jax' or m.startswith('jax.')]; "
         "assert not bad, f'jax leaked into the numpy-only core: {bad}'; "
         "print('clean')"

@@ -16,6 +16,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import SyntheticPaperProfiles, a100_rules
 from repro.sim import (
+    FAULT_PROFILES,
     SCALES,
     SCHEDULERS,
     SLO_POLICIES,
@@ -35,15 +36,22 @@ from repro.sim import (
 
 def test_default_matrix_covers_the_required_axes():
     """Acceptance floor: >= 2 trace shapes x >= 4 schedulers (incl. both new
-    zoo policies) x >= 2 scales."""
+    zoo policies) x >= 2 scales, plus the curated fault slice covering
+    every registered fault profile."""
     cells = default_matrix()
-    traces = {c.trace for c in cells}
-    scheds = {c.scheduler for c in cells}
-    scales = {c.scale for c in cells}
+    none_cells = [c for c in cells if c.fault == "none"]
+    fault_cells = [c for c in cells if c.fault != "none"]
+    traces = {c.trace for c in none_cells}
+    scheds = {c.scheduler for c in none_cells}
+    scales = {c.scale for c in none_cells}
     assert len(traces) >= 2
     assert len(scheds) >= 4 and {"frag", "energy"} <= scheds
     assert len(scales) >= 2
-    assert len(cells) == len(traces) * len(scheds) * len(scales) * len(SLO_POLICIES)
+    assert len(none_cells) == (
+        len(traces) * len(scheds) * len(scales) * len(SLO_POLICIES)
+    )
+    # the fifth axis: every non-none fault profile appears in the slice
+    assert {c.fault for c in fault_cells} == set(FAULT_PROFILES) - {"none"}
     assert len(set(c.name for c in cells)) == len(cells)  # names are unique
 
 
@@ -59,6 +67,7 @@ def test_registries_are_consistent():
         assert cell.scheduler in SCHEDULERS
         assert cell.scale in SCALES
         assert cell.slo in SLO_POLICIES
+        assert cell.fault in FAULT_PROFILES
 
 
 # -- cell execution and schema ---------------------------------------------------
