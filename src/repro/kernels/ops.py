@@ -51,7 +51,7 @@ def decode_attention(
     q: jax.Array,  # (B, 1, H, D)
     k: jax.Array,  # (B, S, KV, D)
     v: jax.Array,
-    valid: jax.Array,  # (S,) bool
+    valid: jax.Array,  # (S,) or (B, S) bool — per-request ragged validity
     scale: Optional[float] = None,
     block_k: int = 512,
 ) -> jax.Array:
@@ -60,6 +60,24 @@ def decode_attention(
     vmask = jnp.broadcast_to(valid.astype(jnp.int32), (B, S))
     out = _dec.decode_attention_bhd(
         q[:, 0], k, v, vmask, scale=scale, block_k=block_k, interpret=_interpret()
+    )
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def paged_decode_attention(
+    q: jax.Array,  # (B, 1, H, D) — model layout
+    pool_k: jax.Array,  # (num_pages, page_size, KV, D)
+    pool_v: jax.Array,
+    page_tables: jax.Array,  # (B, max_pages) int32
+    lengths: jax.Array,  # (B,) int32 — valid tokens per request
+    scale: Optional[float] = None,
+) -> jax.Array:
+    from repro.kernels import paged_attention as _paged
+
+    out = _paged.paged_decode_attention(
+        q[:, 0], pool_k, pool_v, page_tables, lengths,
+        scale=scale, interpret=_interpret(),
     )
     return out[:, None]
 

@@ -1,7 +1,12 @@
 """Serving driver — the end-to-end example of the paper's kind.
 
-Builds a model, wraps it in a serving :class:`Engine` (continuous batching),
-fires a stream of batched requests, and reports throughput and latency.
+Builds a model, wraps it in a serving :class:`Engine` (ragged continuous
+batching over a paged KV cache where the architecture supports it), fires a
+stream of batched requests, and reports throughput and latency.  It then
+closes the paper's §8.3 loop: the measured throughput is fed into a
+:class:`~repro.core.online_profiles.MeasuredProfile` wrapped around the
+roofline profile the optimizer consumes, and the resulting correction
+factor is printed.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
       --requests 16 --batch 4 --new-tokens 8
@@ -16,6 +21,8 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.arch_bridge import tpu_arch_profiles
+from repro.core.online_profiles import MeasuredProfile
 from repro.models import Model
 from repro.serving import Engine, Request, run_closed_loop
 
@@ -29,29 +36,53 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--backend", choices=["auto", "flat", "paged"], default="auto")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--size", type=int, default=16,
+                    help="slice size credited in the §8.3 profile feedback")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = Model(cfg, remat=False)
     params, _ = model.init(jax.random.PRNGKey(args.seed))
-    engine = Engine(model, params, batch=args.batch, max_len=args.max_len)
+    engine = Engine(
+        model, params, batch=args.batch, max_len=args.max_len,
+        kv_backend=args.backend, page_size=args.page_size,
+        temperature=args.temperature, top_k=args.top_k,
+    )
 
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(
             rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
+            prompt=rng.integers(1, cfg.vocab_size, size=args.prompt_len).astype(np.int32),
             max_new_tokens=args.new_tokens,
         )
         for i in range(args.requests)
     ]
-    stats = run_closed_loop(engine, reqs, seed=args.seed)
+    measured = MeasuredProfile(tpu_arch_profiles([args.arch]))
+    stats = run_closed_loop(
+        engine, reqs, seed=args.seed,
+        measured=measured, service=args.arch, size=args.size,
+    )
     lat = [r.finished_s - r.submitted_s for r in reqs]
     print(
-        f"arch={cfg.name} served={stats.served} tokens={stats.tokens} "
+        f"arch={cfg.name} backend={engine.kv_backend} served={stats.served} "
+        f"tokens={stats.tokens} preempted={stats.preempted} "
         f"wall={stats.wall_s:.2f}s tput={stats.throughput:.2f} req/s "
         f"p50_lat={np.percentile(lat, 50)*1e3:.0f}ms p90_lat={np.percentile(lat, 90)*1e3:.0f}ms"
+    )
+    if engine.pool is not None:
+        print(
+            f"pages={engine.pool.num_pages} free={engine.pool.free_pages} "
+            f"page_size={engine.pool.page_size}"
+        )
+    print(
+        f"§8.3 feedback: measured correction for ({args.arch}, size={args.size}) "
+        f"= {measured.correction(args.arch, args.size):.4f}"
     )
 
 

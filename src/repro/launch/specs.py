@@ -196,7 +196,8 @@ def build_step(
     # rebind cache specs to the usable dp axes (batch=1 cannot shard)
     cache_specs = model.cache_specs(seq_axis=seq_axis, dp=dp)
     token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    # per-slot ragged positions (continuous batching): one int32 per request
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
     fn = lambda p, c, t, i: model.decode_step(p, c, t, i)
     return StepBundle(
         fn=fn,
@@ -205,7 +206,7 @@ def build_step(
             param_sh,
             _shard(mesh, cache_specs),
             NamedSharding(mesh, P(dp, None)),
-            NamedSharding(mesh, P()),
+            NamedSharding(mesh, P(dp) if dp else P()),
         ),
         out_shardings=(
             NamedSharding(mesh, P(dp, None, "model")),

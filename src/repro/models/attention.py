@@ -6,8 +6,15 @@ DESIGN.md §4).
 Each variant provides:
   init(factory, cfg)                          — parameters + specs
   forward(params, cfg, x, positions)          — full-sequence (train/prefill)
-  decode(params, cfg, x, cache, pos)          — one token against a KV cache
+  decode(params, cfg, x, cache, pos, live)    — one token against a KV cache
   init_cache / cache_specs                    — cache pytree + shardings
+
+Decode is *ragged*: ``pos`` is a per-request ``(B,)`` vector of positions
+(continuous batching serves requests at different offsets in one batch) and
+``live`` masks cache writes so idle/padding slots never touch the cache.
+GQA additionally provides a *paged* decode (``gqa_decode_paged`` /
+``gqa_init_paged_cache``) over a shared page pool — the serving engine's
+production KV layout, consumed by ``repro.kernels.paged_attention``.
 
 Caches carry no layer axis here; the transformer stacks them for scan.
 """
@@ -111,7 +118,9 @@ def gqa_prefill(
         cache = {
             "k": k[:, S - W :],
             "v": v[:, S - W :],
-            "slot_pos": jnp.arange(S - W, S, dtype=jnp.int32),
+            "slot_pos": jnp.broadcast_to(
+                jnp.arange(S - W, S, dtype=jnp.int32), (B, W)
+            ),
         }
     else:
         cache = {"k": k, "v": v}
@@ -127,7 +136,7 @@ def gqa_init_cache(
         return {
             "k": jnp.zeros((batch, W, KV, hd), dtype),
             "v": jnp.zeros((batch, W, KV, hd), dtype),
-            "slot_pos": jnp.full((W,), -1, jnp.int32),
+            "slot_pos": jnp.full((batch, W), -1, jnp.int32),
         }
     return {
         "k": jnp.zeros((batch, max_len, KV, hd), dtype),
@@ -139,8 +148,31 @@ def gqa_cache_specs(cfg: ModelConfig, dp: Tuple[str, ...], seq_axis: Optional[st
     spec = P(dp, seq_axis, None, None)
     out = {"k": spec, "v": spec}
     if cfg.sliding_window:
-        out["slot_pos"] = P(None)
+        out["slot_pos"] = P(dp, None)
     return out
+
+
+def normalize_pos(pos: jax.Array, batch: int) -> Tuple[jax.Array, jax.Array]:
+    """Broadcast a scalar-or-(B,) position to ``(B,)`` and derive liveness.
+
+    Negative positions mark idle/padding slots: their logits are still
+    computed (the batch shape is static) but their cache writes are masked.
+    Returns ``(clamped_pos (B,), live (B,) bool)``."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+    return jnp.maximum(pos, 0), pos >= 0
+
+
+def _masked_row_update(
+    cache: jax.Array,  # (B, S, ...)
+    new: jax.Array,  # (B, 1, ...)
+    idx: jax.Array,  # (B,) int32 — row to write, per batch element
+    live: jax.Array,  # (B,) bool — rows of dead slots stay untouched
+) -> jax.Array:
+    upd = jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )(cache, new, idx)
+    mask = live.reshape((-1,) + (1,) * (cache.ndim - 1))
+    return jnp.where(mask, upd, cache)
 
 
 def gqa_decode(
@@ -148,29 +180,94 @@ def gqa_decode(
     cfg: ModelConfig,
     x: jax.Array,  # (B, 1, d)
     cache: Dict[str, jax.Array],
-    pos: jax.Array,  # scalar int32: index of the new token
+    pos: jax.Array,  # (B,) int32 per-slot position of the new token (or scalar)
+    live: Optional[jax.Array] = None,  # (B,) bool; None => all live
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     B = x.shape[0]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q, k_new, v_new = _gqa_qkv(p, cfg, x, positions)
-    if "slot_pos" in cache:  # ring buffer (sliding window)
+    cpos, derived_live = normalize_pos(pos, B)
+    live = derived_live if live is None else live
+    q, k_new, v_new = _gqa_qkv(p, cfg, x, cpos[:, None])
+    if "slot_pos" in cache:  # ring buffer (sliding window), slot_pos (B, W)
         W = cache["k"].shape[1]
-        slot = pos % W
-        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
-        slot_pos = jax.lax.dynamic_update_slice(
-            cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,)
+        slot = cpos % W
+        k = _masked_row_update(cache["k"], k_new, slot, live)
+        v = _masked_row_update(cache["v"], v_new, slot, live)
+        onehot = jnp.arange(W)[None, :] == slot[:, None]
+        slot_pos = jnp.where(
+            onehot & live[:, None], cpos[:, None], cache["slot_pos"]
         )
-        valid = (slot_pos >= 0) & (slot_pos > pos - W) & (slot_pos <= pos)
+        valid = (
+            (slot_pos >= 0)
+            & (slot_pos > cpos[:, None] - W)
+            & (slot_pos <= cpos[:, None])
+        )  # (B, W)
         new_cache = {"k": k, "v": v, "slot_pos": slot_pos}
     else:
-        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+        k = _masked_row_update(cache["k"], k_new, cpos, live)
+        v = _masked_row_update(cache["v"], v_new, cpos, live)
         S = k.shape[1]
-        valid = jnp.arange(S) <= pos
+        valid = jnp.arange(S)[None, :] <= cpos[:, None]  # (B, S)
         new_cache = {"k": k, "v": v}
     o = kernels_bridge.decode_attention(q, k, v, valid)
+    return o.reshape(B, 1, H * hd) @ p["wo"], new_cache
+
+
+# -- paged KV (shared page pool; the serving engine's production layout) ------
+
+
+def gqa_init_paged_cache(
+    cfg: ModelConfig, num_pages: int, page_size: int, dtype: Any
+) -> Dict[str, jax.Array]:
+    """Per-layer page pools.  One logical page id addresses a slab across all
+    layers (the transformer stacks these along the scan axis), so a single
+    host-side :class:`~repro.serving.paged_cache.PagePool` table drives every
+    layer's kernel."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "pool_k": jnp.zeros((num_pages, page_size, KV, hd), dtype),
+        "pool_v": jnp.zeros((num_pages, page_size, KV, hd), dtype),
+    }
+
+
+def gqa_decode_paged(
+    p: Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, 1, d)
+    cache: Dict[str, jax.Array],  # {"pool_k","pool_v"} (P, ps, KV, hd)
+    page_tables: jax.Array,  # (B, max_pages) int32
+    pos: jax.Array,  # (B,) int32 per-slot position of the new token
+    live: jax.Array,  # (B,) bool
+    use_kernels: bool = False,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Ragged decode against the paged pool: the new token's k/v is scattered
+    into its slot's current page (idle slots are routed to an out-of-bounds
+    page id, so jax drops their write), then attention runs over the pages —
+    the Pallas paged kernel when ``use_kernels``, a gather + flat-decode
+    reference otherwise."""
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cpos, _ = normalize_pos(pos, B)
+    q, k_new, v_new = _gqa_qkv(p, cfg, x, cpos[:, None])
+    pool_k, pool_v = cache["pool_k"], cache["pool_v"]
+    num_pages, ps = pool_k.shape[0], pool_k.shape[1]
+    page = page_tables[jnp.arange(B), cpos // ps]
+    page = jnp.where(live, page, num_pages)  # OOB => scatter dropped
+    off = cpos % ps
+    pool_k = pool_k.at[page, off].set(k_new[:, 0], mode="drop")
+    pool_v = pool_v.at[page, off].set(v_new[:, 0], mode="drop")
+    lengths = jnp.where(live, cpos + 1, 0)
+    if use_kernels:
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        o = ops.paged_decode_attention(q, pool_k, pool_v, page_tables, lengths)
+    else:
+        S = page_tables.shape[1] * ps
+        k = pool_k[page_tables].reshape(B, S, KV, hd)
+        v = pool_v[page_tables].reshape(B, S, KV, hd)
+        valid = jnp.arange(S)[None, :] < lengths[:, None]
+        o = kernels_bridge.decode_attention(q, k, v, valid)
+    new_cache = {"pool_k": pool_k, "pool_v": pool_v}
     return o.reshape(B, 1, H * hd) @ p["wo"], new_cache
 
 
@@ -281,7 +378,9 @@ def mla_prefill(
         cache = {
             "ckv": ckv[:, S - W :],
             "krope": krope[:, S - W :],
-            "slot_pos": jnp.arange(S - W, S, dtype=jnp.int32),
+            "slot_pos": jnp.broadcast_to(
+                jnp.arange(S - W, S, dtype=jnp.int32), (B, W)
+            ),
         }
     else:
         cache = {"ckv": ckv, "krope": krope}
@@ -295,7 +394,7 @@ def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype: Any):
         return {
             "ckv": jnp.zeros((batch, W, r), dtype),
             "krope": jnp.zeros((batch, W, rd), dtype),
-            "slot_pos": jnp.full((W,), -1, jnp.int32),
+            "slot_pos": jnp.full((batch, W), -1, jnp.int32),
         }
     return {
         "ckv": jnp.zeros((batch, max_len, r), dtype),
@@ -306,7 +405,7 @@ def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype: Any):
 def mla_cache_specs(cfg: ModelConfig, dp: Tuple[str, ...], seq_axis: Optional[str]):
     out = {"ckv": P(dp, seq_axis, None), "krope": P(dp, seq_axis, None)}
     if cfg.sliding_window:
-        out["slot_pos"] = P(None)
+        out["slot_pos"] = P(dp, None)
     return out
 
 
@@ -315,31 +414,39 @@ def mla_decode(
     cfg: ModelConfig,
     x: jax.Array,
     cache: Dict[str, jax.Array],
-    pos: jax.Array,
+    pos: jax.Array,  # (B,) int32 per-slot position of the new token (or scalar)
+    live: Optional[jax.Array] = None,  # (B,) bool; None => all live
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Weight-absorbed decode: score and read directly in the latent space —
     the cache stays (B, S, r + rd) instead of (B, S, H, nd + vd)."""
     B = x.shape[0]
     H = cfg.num_heads
     nd, rd, vd, r = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    cpos, derived_live = normalize_pos(pos, B)
+    live = derived_live if live is None else live
+    positions = cpos[:, None]
     q_nope, q_rope = _mla_q(p, cfg, x, positions)  # (B,1,H,nd),(B,1,H,rd)
     ckv_new, krope_new = _mla_latent(p, cfg, x, positions)
 
-    if "slot_pos" in cache:
+    if "slot_pos" in cache:  # ring buffer, slot_pos (B, W)
         W = cache["ckv"].shape[1]
-        slot = pos % W
-        ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, slot, 0))
-        krope = jax.lax.dynamic_update_slice(cache["krope"], krope_new, (0, slot, 0))
-        slot_pos = jax.lax.dynamic_update_slice(
-            cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,)
+        slot = cpos % W
+        ckv = _masked_row_update(cache["ckv"], ckv_new, slot, live)
+        krope = _masked_row_update(cache["krope"], krope_new, slot, live)
+        onehot = jnp.arange(W)[None, :] == slot[:, None]
+        slot_pos = jnp.where(
+            onehot & live[:, None], cpos[:, None], cache["slot_pos"]
         )
-        valid = (slot_pos >= 0) & (slot_pos > pos - W) & (slot_pos <= pos)
+        valid = (
+            (slot_pos >= 0)
+            & (slot_pos > cpos[:, None] - W)
+            & (slot_pos <= cpos[:, None])
+        )  # (B, W)
         new_cache = {"ckv": ckv, "krope": krope, "slot_pos": slot_pos}
     else:
-        ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0))
-        krope = jax.lax.dynamic_update_slice(cache["krope"], krope_new, (0, pos, 0))
-        valid = jnp.arange(ckv.shape[1]) <= pos
+        ckv = _masked_row_update(cache["ckv"], ckv_new, cpos, live)
+        krope = _masked_row_update(cache["krope"], krope_new, cpos, live)
+        valid = jnp.arange(ckv.shape[1])[None, :] <= cpos[:, None]  # (B, S)
         new_cache = {"ckv": ckv, "krope": krope}
 
     # absorb W_uk into the query: q_abs (B,1,H,r)
@@ -349,7 +456,7 @@ def mla_decode(
         "bqhd,bsd->bhqs", q_rope, krope
     )
     scores = scores.astype(jnp.float32) / math.sqrt(nd + rd)
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
     o_latent = jnp.einsum("bhqs,bsr->bqhr", probs, ckv)  # (B,1,H,r)
     w_uv = p["w_uv"].reshape(r, H, vd)

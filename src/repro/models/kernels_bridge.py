@@ -110,20 +110,22 @@ def decode_attention(
     q: jax.Array,  # (B, 1, H, hd)
     k: jax.Array,  # (B, S, KV, hd)
     v: jax.Array,  # (B, S, KV, hd)
-    valid: jax.Array,  # (S,) bool
+    valid: jax.Array,  # (S,) or (B, S) bool — per-request ragged validity
     use_kernels: bool = False,
     scale: Optional[float] = None,
 ) -> jax.Array:
     B, _, H, hd = q.shape
-    KV = k.shape[2]
+    S, KV = k.shape[1], k.shape[2]
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[None, :], (B, S))
     if use_kernels:
         from repro.kernels import ops
 
         return ops.decode_attention(q, k, v, valid, scale=scale)
     q5 = _grouped(q, KV)  # (B,1,KV,G,hd)
     scores = jnp.einsum("bqkgh,bskh->bkgqs", q5, k).astype(jnp.float32) * scale
-    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     o = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
     return o.reshape(B, 1, H, v.shape[-1])

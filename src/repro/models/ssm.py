@@ -11,7 +11,7 @@ below is the oracle.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -160,10 +160,18 @@ def ssm_forward(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
 
 
 def ssm_prefill(
-    p: Params, cfg: ModelConfig, x: jax.Array
+    p: Params, cfg: ModelConfig, x: jax.Array,
+    lengths: Optional[jax.Array] = None,  # (B,) true lengths of padded rows
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Like :func:`ssm_forward` but also emits the decode cache
-    (final SSD state + raw conv tail)."""
+    (final SSD state + raw conv tail).
+
+    ``lengths`` supports right-padded ragged prefill (the serving engine pads
+    prompts up to ``ssm_chunk``): padded steps get ``dt = 0``, which makes the
+    SSD recurrence an exact identity (``h = h·exp(0) + 0``), so the final
+    state equals the state after ``lengths`` real tokens; the conv tail is
+    sliced per-row at ``lengths`` (zero-left-padded, matching the zero conv
+    init for prompts shorter than the kernel)."""
     B, S, d = x.shape
     di, n, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
     z, xBC_raw, dt = _project(p, x)
@@ -172,13 +180,24 @@ def ssm_prefill(
     B_ = xBC[..., di : di + n]
     C_ = xBC[..., di + n :]
     dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if lengths is not None:
+        pad_mask = jnp.arange(S)[None, :] < lengths[:, None]  # (B, S)
+        dt_ = dt_ * pad_mask[:, :, None]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     y, final = ssd_chunked(xs.astype(jnp.float32), dt_, A, B_.astype(jnp.float32),
                            C_.astype(jnp.float32), cfg.ssm_chunk)
     y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(B, S, di).astype(x.dtype)
     y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
-    cache = {"conv": xBC_raw[:, S - (cfg.conv_width - 1) :], "state": final}
+    W1 = cfg.conv_width - 1
+    if lengths is None:
+        conv = xBC_raw[:, S - W1 :]
+    else:
+        padded = jnp.pad(xBC_raw, ((0, 0), (W1, 0), (0, 0)))
+        conv = jax.vmap(
+            lambda a, l: jax.lax.dynamic_slice_in_dim(a, l, W1, axis=0)
+        )(padded, lengths)
+    cache = {"conv": conv, "state": final}
     return y @ p["w_out"], cache
 
 
@@ -198,7 +217,8 @@ def ssm_cache_specs(cfg: ModelConfig, dp):
 
 
 def ssm_decode(
-    p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict[str, jax.Array]
+    p: Params, cfg: ModelConfig, x: jax.Array, cache: Dict[str, jax.Array],
+    live: Optional[jax.Array] = None,  # (B,) bool — dead slots keep their state
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """x: (B, 1, d)."""
     B = x.shape[0]
@@ -221,4 +241,7 @@ def ssm_decode(
     y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(B, 1, di).astype(x.dtype)
     y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    if live is not None:
+        new_conv = jnp.where(live[:, None, None], new_conv, cache["conv"])
+        new_state = jnp.where(live[:, None, None, None], new_state, cache["state"])
     return y @ p["w_out"], {"conv": new_conv, "state": new_state}

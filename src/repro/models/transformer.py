@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,10 +50,10 @@ def _attn_forward(p, cfg, x, positions, use_kernels, kv_hint=None):
     return attn.gqa_forward(p, cfg, x, positions, use_kernels, kv_hint=kv_hint)
 
 
-def _attn_decode(p, cfg, x, cache, pos):
+def _attn_decode(p, cfg, x, cache, pos, live=None):
     if cfg.attention_kind == "mla":
-        return attn.mla_decode(p, cfg, x, cache, pos)
-    return attn.gqa_decode(p, cfg, x, cache, pos)
+        return attn.mla_decode(p, cfg, x, cache, pos, live)
+    return attn.gqa_decode(p, cfg, x, cache, pos, live)
 
 
 def _attn_init_cache(cfg, batch, max_len, dtype):
@@ -344,9 +344,16 @@ class Model:
         params: Params,
         tokens: Optional[jax.Array] = None,
         embeds: Optional[jax.Array] = None,
+        lengths: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, Params]:
         """Full-sequence serving prefill: last-token logits + the decode cache
-        for every layer (stacked along the scan axis)."""
+        for every layer (stacked along the scan axis).
+
+        ``lengths`` (B,) marks right-padded ragged rows (the serving engine
+        pads prompts up to ``ssm_chunk`` alignment): logits come from each
+        row's true last token, SSM states are exact via dt-masking (identity
+        recurrence on padded steps), and attention cache rows past a row's
+        length hold garbage the decode-side validity mask never reads."""
         cfg = self.cfg
         if embeds is None:
             x = self.embed(params, tokens)
@@ -396,7 +403,7 @@ class Model:
         elif cfg.arch_type == "ssm":
             def body(x, lp):
                 h = rmsnorm(x, lp["ln"], cfg.norm_eps)
-                y, c = ssm_mod.ssm_prefill(lp, cfg, h)
+                y, c = ssm_mod.ssm_prefill(lp, cfg, h, lengths)
                 return x + y, c
 
             x, cs = jax.lax.scan(body, x, params["layers"])
@@ -409,7 +416,7 @@ class Model:
                 for i in range(cfg.shared_attn_every):
                     mp = lp[f"mamba_{i}"]
                     h = rmsnorm(x, mp["ln"], cfg.norm_eps)
-                    y, ci = ssm_mod.ssm_prefill(mp, cfg, h)
+                    y, ci = ssm_mod.ssm_prefill(mp, cfg, h, lengths)
                     x = x + y
                     c[f"mamba_{i}"] = ci
                 h = rmsnorm(x, shared["ln"], cfg.norm_eps)
@@ -421,14 +428,29 @@ class Model:
             cache["layers"] = cs
         else:
             raise ValueError(cfg.arch_type)
-        return self.logits(params, x[:, -1:]), cache
+        if lengths is None:
+            last = x[:, -1:]
+        else:
+            last = x[jnp.arange(B), lengths - 1][:, None, :]
+        return self.logits(params, last), cache
 
     # ----------------------------------------------------------------- decode --
     def decode_step(
         self, params: Params, cache: Params, token: jax.Array, pos: jax.Array
     ) -> Tuple[jax.Array, Params]:
-        """token: (B, 1) int32; pos: scalar int32.  Returns (logits, cache)."""
+        """One ragged decode step.
+
+        token: (B, 1) int32; pos: (B,) int32 per-slot positions — each slot's
+        next cache index (== its current context length) — or a scalar, which
+        broadcasts (the aligned-batch special case).  ``pos[b] < 0`` marks an
+        idle/padding slot: its logits are still computed (batch shape is
+        static) but every cache write for it is masked, so live slots can
+        never corrupt an idle slot under continuous batching.
+        Returns (logits, cache)."""
         cfg = self.cfg
+        B = token.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        live = pos >= 0
         x = self.embed(params, token)
         new_cache: Params = {}
 
@@ -436,7 +458,7 @@ class Model:
             def body(x, xs):
                 lp, lc = xs
                 h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
-                a, nc = _attn_decode(lp["attn"], cfg, h, lc, pos)
+                a, nc = _attn_decode(lp["attn"], cfg, h, lc, pos, live)
                 x = x + a
                 h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
                 return x + mlp_forward(lp["mlp"], h), nc
@@ -447,7 +469,9 @@ class Model:
             for i in range(cfg.first_dense_layers):
                 lp = params[f"dense_{i}"]
                 h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
-                a, nc = _attn_decode(lp["attn"], cfg, h, cache[f"dense_{i}"], pos)
+                a, nc = _attn_decode(
+                    lp["attn"], cfg, h, cache[f"dense_{i}"], pos, live
+                )
                 x = x + a
                 h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
                 x = x + mlp_forward(lp["mlp"], h)
@@ -456,7 +480,7 @@ class Model:
             def body(x, xs):
                 lp, lc = xs
                 h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
-                a, nc = _attn_decode(lp["attn"], cfg, h, lc, pos)
+                a, nc = _attn_decode(lp["attn"], cfg, h, lc, pos, live)
                 x = x + a
                 h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
                 out, _ = self._moe_fn(lp["moe"], cfg, h)
@@ -468,7 +492,7 @@ class Model:
             def body(x, xs):
                 lp, lc = xs
                 h = rmsnorm(x, lp["ln"], cfg.norm_eps)
-                y, nc = ssm_mod.ssm_decode(lp, cfg, h, lc)
+                y, nc = ssm_mod.ssm_decode(lp, cfg, h, lc, live)
                 return x + y, nc
 
             x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
@@ -482,11 +506,11 @@ class Model:
                 for i in range(cfg.shared_attn_every):
                     mp = lp[f"mamba_{i}"]
                     h = rmsnorm(x, mp["ln"], cfg.norm_eps)
-                    y, c = ssm_mod.ssm_decode(mp, cfg, h, lc[f"mamba_{i}"])
+                    y, c = ssm_mod.ssm_decode(mp, cfg, h, lc[f"mamba_{i}"], live)
                     x = x + y
                     nc[f"mamba_{i}"] = c
                 h = rmsnorm(x, shared["ln"], cfg.norm_eps)
-                a, c = _attn_decode(shared, cfg, h, lc["attn"], pos)
+                a, c = _attn_decode(shared, cfg, h, lc["attn"], pos, live)
                 nc["attn"] = c
                 return x + a, nc
 
@@ -495,3 +519,210 @@ class Model:
         else:
             raise ValueError(cfg.arch_type)
         return self.logits(params, x), new_cache
+
+    # ------------------------------------------------------------- paged KV --
+    @property
+    def supports_paged_kv(self) -> bool:
+        """Paged decode covers the GQA serving hot path: architectures with
+        full-attention GQA layers.  MLA's latent cache and the sliding-window
+        ring keep the flat layout (reference fallback); pure-SSM models have
+        no growing KV to page at all."""
+        cfg = self.cfg
+        return (
+            cfg.arch_type != "ssm"
+            and cfg.attention_kind == "gqa"
+            and not cfg.sliding_window
+        )
+
+    def init_paged_cache(
+        self, batch: int, num_pages: int, page_size: int, max_pages: int
+    ) -> Params:
+        """Cache pytree for :meth:`decode_step_paged`: per-layer page pools
+        (one page id addresses a slab across all layers) plus the batch's
+        page tables, which the engine refreshes host-side from its
+        :class:`~repro.serving.paged_cache.PagePool` before each step."""
+        cfg = self.cfg
+        if not self.supports_paged_kv:
+            raise ValueError(
+                f"paged KV unsupported for arch_type={cfg.arch_type!r} / "
+                f"attention_kind={cfg.attention_kind!r} / "
+                f"sliding_window={cfg.sliding_window!r}"
+            )
+        dtype = DTYPES[cfg.dtype]
+
+        def pools():
+            return attn.gqa_init_paged_cache(cfg, num_pages, page_size, dtype)
+
+        def stack(n, make):
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *[make() for _ in range(n)])
+
+        out: Params = {"page_tables": jnp.zeros((batch, max_pages), jnp.int32)}
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            out["layers"] = stack(cfg.num_layers, pools)
+        elif cfg.arch_type == "moe":
+            for i in range(cfg.first_dense_layers):
+                out[f"dense_{i}"] = pools()
+            out["layers"] = stack(cfg.num_layers - cfg.first_dense_layers, pools)
+        elif cfg.arch_type == "hybrid":
+            def superblock():
+                c = {
+                    f"mamba_{i}": ssm_mod.ssm_init_cache(cfg, batch, dtype)
+                    for i in range(cfg.shared_attn_every)
+                }
+                c["attn"] = pools()
+                return c
+
+            out["layers"] = stack(cfg.num_layers // cfg.shared_attn_every, superblock)
+        else:
+            raise ValueError(cfg.arch_type)
+        return out
+
+    def decode_step_paged(
+        self, params: Params, cache: Params, token: jax.Array, pos: jax.Array
+    ) -> Tuple[jax.Array, Params]:
+        """Like :meth:`decode_step` but with attention KV in page pools
+        (``cache`` from :meth:`init_paged_cache`).  Same ragged contract:
+        per-slot ``pos``, idle slots (``pos < 0``) never touch any cache."""
+        cfg = self.cfg
+        B = token.shape[0]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+        live = pos >= 0
+        pt = cache["page_tables"]
+        uk = self.use_kernels
+        x = self.embed(params, token)
+        new_cache: Params = {"page_tables": pt}
+
+        if cfg.arch_type in ("dense", "vlm", "audio"):
+            def body(x, xs):
+                lp, lc = xs
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nc = attn.gqa_decode_paged(
+                    lp["attn"], cfg, h, lc, pt, pos, live, uk
+                )
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                return x + mlp_forward(lp["mlp"], h), nc
+
+            x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.arch_type == "moe":
+            for i in range(cfg.first_dense_layers):
+                lp = params[f"dense_{i}"]
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nc = attn.gqa_decode_paged(
+                    lp["attn"], cfg, h, cache[f"dense_{i}"], pt, pos, live, uk
+                )
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                x = x + mlp_forward(lp["mlp"], h)
+                new_cache[f"dense_{i}"] = nc
+
+            def body(x, xs):
+                lp, lc = xs
+                h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+                a, nc = attn.gqa_decode_paged(
+                    lp["attn"], cfg, h, lc, pt, pos, live, uk
+                )
+                x = x + a
+                h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+                out, _ = self._moe_fn(lp["moe"], cfg, h)
+                return x + out, nc
+
+            x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        elif cfg.arch_type == "hybrid":
+            shared = params["shared_attn"]
+
+            def body(x, xs):
+                lp, lc = xs
+                nc = {}
+                for i in range(cfg.shared_attn_every):
+                    mp = lp[f"mamba_{i}"]
+                    h = rmsnorm(x, mp["ln"], cfg.norm_eps)
+                    y, c = ssm_mod.ssm_decode(mp, cfg, h, lc[f"mamba_{i}"], live)
+                    x = x + y
+                    nc[f"mamba_{i}"] = c
+                h = rmsnorm(x, shared["ln"], cfg.norm_eps)
+                a, c = attn.gqa_decode_paged(
+                    shared, cfg, h, lc["attn"], pt, pos, live, uk
+                )
+                nc["attn"] = c
+                return x + a, nc
+
+            x, ncs = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+            new_cache["layers"] = ncs
+        else:
+            raise ValueError(cfg.arch_type)
+        return self.logits(params, x), new_cache
+
+    # ------------------------------------------------------ prefill scatter --
+    def scatter_prefill(
+        self,
+        cache: Params,
+        prefill_cache: Params,
+        slot: int,
+        length: int,
+        page_ids: Optional[Sequence[int]] = None,
+    ) -> Params:
+        """Scatter a batch-1 :meth:`prefill` cache into slot ``slot`` of an
+        engine batch cache (flat :meth:`init_cache` layout, or paged
+        :meth:`init_paged_cache` layout when ``page_ids`` — the slot's
+        allocated pages, covering ≥ ``length`` tokens — is given).
+
+        ``length`` is the true prompt length; prefill rows past it (chunk
+        padding) are never copied.  Runs eagerly on the host path: admit-time
+        work, no jit."""
+        return _scatter_node(
+            cache, prefill_cache, slot, length, False, page_ids
+        )
+
+
+# -- prefill-scatter helpers (host-side admit path) ---------------------------
+
+
+def _scatter_leaf(eng, pre, slot, length, stacked):
+    """Copy one batch-1 prefill leaf into an engine cache leaf at ``slot``.
+
+    Leaves with a sequence axis (k/v/ckv/krope; engine seq length differs
+    from the prefill's padded length) copy only the first ``length`` rows;
+    fixed-shape state leaves (SSM conv/state) copy whole."""
+    b = 1 if stacked else 0
+    s = b + 1
+    if eng.ndim > s and eng.shape[s] != pre.shape[s]:
+        if stacked:
+            return eng.at[:, slot, :length].set(pre[:, 0, :length])
+        return eng.at[slot, :length].set(pre[0, :length])
+    if stacked:
+        return eng.at[:, slot].set(pre[:, 0])
+    return eng.at[slot].set(pre[0])
+
+
+def _scatter_pages(pool, pre, page_ids, length, stacked):
+    """Scatter the first ``length`` prefill k/v rows into the slot's pages:
+    token t lands in (page_ids[t // page_size], t % page_size)."""
+    ps = pool.shape[2 if stacked else 1]
+    t = jnp.arange(length)
+    pi = jnp.asarray(list(page_ids), jnp.int32)[t // ps]
+    off = t % ps
+    if stacked:
+        return pool.at[:, pi, off].set(pre[:, 0, :length])
+    return pool.at[pi, off].set(pre[0, :length])
+
+
+def _scatter_node(eng, pre, slot, length, stacked, page_ids):
+    if isinstance(eng, dict):
+        out = {}
+        for key, sub in eng.items():
+            if key == "page_tables":
+                out[key] = sub  # refreshed host-side by the engine
+            elif key == "pool_k":
+                out[key] = _scatter_pages(sub, pre["k"], page_ids, length, stacked)
+            elif key == "pool_v":
+                out[key] = _scatter_pages(sub, pre["v"], page_ids, length, stacked)
+            else:
+                out[key] = _scatter_node(
+                    sub, pre[key], slot, length, stacked or key == "layers",
+                    page_ids,
+                )
+        return out
+    return _scatter_leaf(eng, pre, slot, length, stacked)

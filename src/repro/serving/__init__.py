@@ -6,14 +6,16 @@ the cluster simulator in :mod:`repro.sim` — can import the router without
 paying (or requiring) the jax import.
 """
 
+from repro.serving.paged_cache import OutOfPages, PagePool
 from repro.serving.router import InstanceHandle, WeightedRouter
 
 __all__ = [
-    "Engine", "InstanceHandle", "Request", "ServeStats", "WeightedRouter",
-    "run_closed_loop",
+    "Engine", "InstanceHandle", "OutOfPages", "PagePool", "Request",
+    "ServeStats", "WeightedRouter", "page_hbm_bytes", "run_closed_loop",
 ]
 
-_ENGINE_NAMES = ("Engine", "Request", "ServeStats", "run_closed_loop")
+_ENGINE_NAMES = ("Engine", "Request", "ServeStats", "page_hbm_bytes",
+                 "run_closed_loop")
 
 
 def __getattr__(name):

@@ -1,21 +1,47 @@
-"""Serving engine: prefill + continuous-batching decode on one instance.
+"""Serving engine: ragged continuous batching on one instance.
 
 An :class:`Engine` is what MIG-Serving schedules onto a GPU instance / TPU
 slice: it owns the model params, a fixed-capacity batch of request *slots*,
-and jit'd ``prefill`` / ``decode`` steps.  Requests join free slots, prefill
-fills their KV cache, and every decode step advances all live slots by one
-token (continuous batching — freed slots are refilled between steps).
+and jit'd ``prefill`` / ``decode`` steps.  Requests join free slots; admission
+runs the jit'd batch-1 :meth:`~repro.models.Model.prefill` over the prompt
+and scatters the resulting cache into the slot (other slots are never
+touched); every decode step advances all live slots by one token at their
+*own* positions (``Model.decode_step`` takes a per-slot ``(B,)`` position
+vector, with masked cache writes for idle slots).
+
+Two KV backends:
+
+* ``paged`` (default where supported) — attention KV lives in fixed-size
+  pages from a shared :class:`~repro.serving.paged_cache.PagePool`; the
+  slot's HBM budget maps to ``num_pages`` (:func:`page_hbm_bytes`), and pool
+  exhaustion is an explicit signal: admission is *refused* (``OutOfPages``
+  propagates to the caller) and a request that cannot grow mid-decode is
+  *preempted* — its pages are released and it restarts later with its
+  generated tokens folded into the prompt.  Nothing is ever silently
+  clamped or overwritten.
+* ``flat`` — the dense per-slot ``(B, max_len, ...)`` cache, kept as the
+  reference fallback (and the only layout for MLA latent caches and
+  sliding-window rings; pure-SSM models have no growing KV, so both backend
+  names select their fixed-size state cache).
+
+Sampling is seeded and explicit: ``temperature == 0`` (default) is argmax —
+the deterministic mode the ragged oracle tests pin — otherwise
+temperature/top-k sampling draws from the ``rng`` passed to
+:meth:`Engine.step` / :meth:`Engine.admit`.
 
 The batch capacity is chosen by the scheduler per the paper's rule: "the
 largest batch size possible, as far as the inference latency is smaller than
-what required by SLOs" (§7).
+what required by SLOs" (§7).  :func:`run_closed_loop` closes the paper's
+§8.3 loop: measured throughput feeds a
+:class:`~repro.core.online_profiles.MeasuredProfile` so the optimizer
+consumes production-corrected profiles.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +49,7 @@ import numpy as np
 
 from repro.models import Model
 from repro.models.config import ModelConfig
+from repro.serving.paged_cache import OutOfPages, PagePool, page_bytes
 
 
 @dataclasses.dataclass
@@ -39,6 +66,24 @@ class Request:
         return len(self.out_tokens) >= self.max_new_tokens
 
 
+def attn_layer_count(cfg: ModelConfig) -> int:
+    """Number of layers holding a growing attention KV cache."""
+    if cfg.arch_type == "ssm":
+        return 0
+    if cfg.arch_type == "hybrid":
+        return cfg.num_layers // cfg.shared_attn_every
+    return cfg.num_layers
+
+
+def page_hbm_bytes(cfg: ModelConfig, page_size: int, dtype_bytes: int = 2) -> int:
+    """HBM cost of ONE logical page for this architecture — the unit a
+    slice's HBM budget is divided by to get ``num_pages``."""
+    return page_bytes(
+        page_size, cfg.num_kv_heads, cfg.head_dim,
+        attn_layer_count(cfg), dtype_bytes,
+    )
+
+
 class Engine:
     def __init__(
         self,
@@ -46,74 +91,249 @@ class Engine:
         params: Any,
         batch: int,
         max_len: int,
-        seed: int = 0,
+        *,
+        kv_backend: str = "auto",
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        hbm_budget_bytes: Optional[int] = None,
+        temperature: float = 0.0,
+        top_k: int = 0,
     ):
         self.model = model
         self.cfg = model.cfg
         self.params = params
         self.batch = batch
         self.max_len = max_len
-        self.cache = model.init_cache(batch, max_len)
-        self.slots: List[Optional[Request]] = [None] * batch
-        self.slot_pos = np.zeros(batch, np.int32)  # next position per slot
-        self._decode = jax.jit(model.decode_step)
+        self.temperature = temperature
+        self.top_k = top_k
         self.steps = 0
+        self.slots: List[Optional[Request]] = [None] * batch
+        # per-slot context length; -1 marks an idle slot (the decode-side
+        # convention: negative position => masked cache writes)
+        self.slot_pos = np.full(batch, -1, np.int32)
+        self._finished: List[Request] = []
+        self._preempted: List[Request] = []
 
-    # -- admission ------------------------------------------------------------
+        cfg = self.cfg
+        if cfg.sliding_window and cfg.sliding_window < max_len:
+            raise NotImplementedError(
+                "Engine does not serve sliding-window ring caches; use the "
+                "flat decode path directly (repro.launch.specs long_500k)"
+            )
+        if kv_backend == "auto":
+            backend = "paged" if model.supports_paged_kv else "flat"
+        elif kv_backend == "paged" and not model.supports_paged_kv:
+            if cfg.arch_type == "ssm":
+                backend = "flat"  # no growing KV to page: state cache as-is
+            else:
+                raise ValueError(
+                    f"paged KV unsupported for {cfg.name}: "
+                    f"attention_kind={cfg.attention_kind!r}"
+                )
+        elif kv_backend in ("paged", "flat"):
+            backend = kv_backend
+        else:
+            raise ValueError(f"unknown kv_backend {kv_backend!r}")
+        self.kv_backend = backend
+
+        if backend == "paged":
+            max_pages_per_req = -(-max_len // page_size)  # ceil
+            if num_pages is None:
+                if hbm_budget_bytes is not None:
+                    num_pages = hbm_budget_bytes // max(1, page_hbm_bytes(cfg, page_size))
+                else:
+                    num_pages = batch * max_pages_per_req
+            if num_pages < 1:
+                raise ValueError(
+                    f"HBM budget yields num_pages={num_pages}; need >= 1"
+                )
+            self.pool: Optional[PagePool] = PagePool(
+                num_pages, page_size, max_pages_per_req
+            )
+            self.cache = model.init_paged_cache(
+                batch, num_pages, page_size, max_pages_per_req
+            )
+            self._decode = jax.jit(model.decode_step_paged)
+        else:
+            self.pool = None
+            self.cache = model.init_cache(batch, max_len)
+            self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, toks, lens: model.prefill(p, tokens=toks, lengths=lens)
+        )
+        # Prompts are right-padded (exact — dt-masked SSM states, masked-out
+        # attention rows, true-last-token logits; see Model.prefill) so the
+        # jit'd prefill compiles one trace per length *bucket*, not per
+        # distinct prompt/resume length.  SSM needs chunk alignment anyway;
+        # MoE must see exact lengths because padded tokens would compete for
+        # expert capacity and perturb real-token outputs.
+        if cfg.arch_type in ("ssm", "hybrid"):
+            self._pad_to = cfg.ssm_chunk
+        elif cfg.arch_type == "moe":
+            self._pad_to = 1
+        else:
+            self._pad_to = 16
+
+    # -- introspection --------------------------------------------------------
     def has_free_slot(self) -> bool:
         return any(s is None for s in self.slots)
 
-    def admit(self, req: Request) -> int:
-        slot = self.slots.index(None)
-        self.slots[slot] = req
-        req.submitted_s = time.monotonic()
-        # prefill: feed prompt tokens one decode step at a time (correct and
-        # simple; the jit'd bulk prefill path is exercised by launch/serve.py)
-        pos = 0
-        for t in req.prompt:
-            tok = jnp.zeros((self.batch, 1), jnp.int32).at[slot, 0].set(int(t))
-            _, self.cache = self._decode(
-                self.params, self.cache, tok, jnp.int32(pos)
+    @property
+    def num_live(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def take_preempted(self) -> List[Request]:
+        """Requests evicted on pool exhaustion since the last call; re-admit
+        them (their generated tokens resume from the prompt) once capacity
+        frees up."""
+        out, self._preempted = self._preempted, []
+        return out
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, req: Request, rng: Optional[np.random.Generator] = None) -> int:
+        """Admit one request: batch-1 jit'd prefill over its context, cache
+        scattered into a free slot, first output token sampled from the
+        prefill logits.
+
+        Raises :class:`OutOfPages` (paged backend) when the pool cannot hold
+        the context plus one decode token — the admission-control signal; the
+        request is left untouched for the caller to retry later."""
+        ctx = np.asarray(req.prompt, np.int32)
+        if req.out_tokens:  # resuming after preemption
+            ctx = np.concatenate([ctx, np.asarray(req.out_tokens, np.int32)])
+        L = int(ctx.size)
+        if L < 1:
+            raise ValueError("empty prompt")
+        if L + 1 > self.max_len:
+            raise ValueError(
+                f"context length {L} does not fit max_len={self.max_len}"
             )
-            pos += 1
-        self.slot_pos[slot] = len(req.prompt)
+        slot = self.slots.index(None)
+        if self.pool is not None:
+            self.pool.admit(req.rid)
+            try:
+                # context + room for the first decode write (so an admitted
+                # request can always take at least one step)
+                self.pool.append_tokens(req.rid, L + 1)
+            except OutOfPages:
+                self.pool.release(req.rid)
+                raise
+        pad = -(-L // self._pad_to) * self._pad_to
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :L] = ctx
+        logits, pcache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray([L], jnp.int32)
+        )
+        page_ids = (
+            self.pool.request(req.rid).page_ids if self.pool is not None else None
+        )
+        self.cache = self.model.scatter_prefill(
+            self.cache, pcache, slot, L, page_ids
+        )
+        self.slots[slot] = req
+        self.slot_pos[slot] = L
+        if req.submitted_s == 0.0:
+            req.submitted_s = time.monotonic()
+        first = self._sample(np.asarray(logits.astype(jnp.float32))[0, 0], rng)
+        req.out_tokens.append(first)
+        if req.done:
+            self._finish(slot)
         return slot
 
     # -- decode ---------------------------------------------------------------
-    def step(self, rng: np.random.Generator) -> List[Request]:
-        """One decode step for all live slots; returns finished requests."""
+    def step(self, rng: Optional[np.random.Generator] = None) -> List[Request]:
+        """One ragged decode step for all live slots; returns finished
+        requests (including any that completed at admission since the last
+        step).  Paged backend: slots that cannot allocate their next token's
+        page are preempted first (see :meth:`take_preempted`)."""
+        finished, self._finished = self._finished, []
         live = [i for i, s in enumerate(self.slots) if s is not None]
         if not live:
-            return []
+            return finished
+        if self.pool is not None:
+            for i in list(live):
+                req = self.slots[i]
+                need = int(self.slot_pos[i]) + 1 - self.pool.request(req.rid).length
+                if need > 0:
+                    try:
+                        self.pool.append_tokens(req.rid, need)
+                    except OutOfPages:
+                        self._preempt(i)
+                        live.remove(i)
+            if not live:
+                return finished
+            self._refresh_page_tables()
         toks = np.zeros((self.batch, 1), np.int32)
+        pos = np.full(self.batch, -1, np.int32)
         for i in live:
-            req = self.slots[i]
-            toks[i, 0] = req.out_tokens[-1] if req.out_tokens else (
-                req.prompt[-1] if len(req.prompt) else 0
-            )
-        pos = int(max(self.slot_pos[i] for i in live))
+            toks[i, 0] = self.slots[i].out_tokens[-1]
+            pos[i] = self.slot_pos[i]
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), jnp.int32(min(pos, self.max_len - 1))
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos)
         )
-        logits = np.asarray(logits.astype(jnp.float32))
-        finished = []
+        lg = np.asarray(logits.astype(jnp.float32))
         for i in live:
             req = self.slots[i]
-            nxt = int(np.argmax(logits[i, 0]))
-            req.out_tokens.append(nxt)
             self.slot_pos[i] += 1
+            req.out_tokens.append(self._sample(lg[i, 0], rng))
             if req.done or self.slot_pos[i] >= self.max_len:
-                req.finished_s = time.monotonic()
-                finished.append(req)
-                self.slots[i] = None
+                self._finish(i)
         self.steps += 1
+        finished.extend(self._finished)
+        self._finished = []
         return finished
+
+    # -- internals ------------------------------------------------------------
+    def _sample(
+        self, logits_row: np.ndarray, rng: Optional[np.random.Generator]
+    ) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        if rng is None:
+            raise ValueError("temperature > 0 requires an rng")
+        z = logits_row.astype(np.float64) / self.temperature
+        if self.top_k and self.top_k < z.size:
+            kth = np.partition(z, -self.top_k)[-self.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(rng.choice(z.size, p=p))
+
+    def _finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        req.finished_s = time.monotonic()
+        self.slots[slot] = None
+        self.slot_pos[slot] = -1
+        if self.pool is not None:
+            self.pool.release(req.rid)
+        self._finished.append(req)
+
+    def _preempt(self, slot: int) -> None:
+        req = self.slots[slot]
+        # Re-admission prefills prompt + out_tokens (slot_pos + 1 tokens) and
+        # needs one more decode position; a request already at the context
+        # cap cannot resume — finish it truncated, exactly as the
+        # non-preempted max_len path would.
+        if int(self.slot_pos[slot]) + 2 > self.max_len:
+            self._finish(slot)
+            return
+        self.slots[slot] = None
+        self.slot_pos[slot] = -1
+        self.pool.release(req.rid)
+        self._preempted.append(req)
+
+    def _refresh_page_tables(self) -> None:
+        rids = [s.rid if s is not None else None for s in self.slots]
+        pt, _ = self.pool.tables(rids)
+        self.cache["page_tables"] = jnp.asarray(pt)
 
 
 @dataclasses.dataclass
 class ServeStats:
     served: int = 0
     tokens: int = 0
+    preempted: int = 0
     wall_s: float = 0.0
 
     @property
@@ -122,18 +342,55 @@ class ServeStats:
 
 
 def run_closed_loop(
-    engine: Engine, requests: List[Request], seed: int = 0
+    engine: Engine,
+    requests: List[Request],
+    seed: int = 0,
+    measured: Optional[Any] = None,  # repro.core.online_profiles.MeasuredProfile
+    service: Optional[str] = None,
+    size: Optional[int] = None,
 ) -> ServeStats:
-    """Admit-and-decode until all requests finish (the Engine's test driver)."""
+    """Admit-and-decode until all requests finish (the Engine's test driver).
+
+    Preempted requests are re-queued at the front (their generated tokens
+    resume from the prompt); admission refusals (``OutOfPages``) leave the
+    request pending until capacity frees up.  When ``measured`` (a
+    :class:`~repro.core.online_profiles.MeasuredProfile`) plus ``service``
+    and ``size`` are given, the measured throughput is fed back into the
+    profile — the paper's §8.3 production-measurement loop."""
     rng = np.random.default_rng(seed)
     pending = list(requests)
     stats = ServeStats()
     t0 = time.monotonic()
-    while pending or any(s is not None for s in engine.slots):
-        while pending and engine.has_free_slot():
-            engine.admit(pending.pop(0))
-        for req in engine.step(rng):
+    while stats.served < len(requests):
+        admitted = False
+        # first-fit admission: a request the pool cannot hold right now must
+        # not block admittable requests queued behind it
+        for req in list(pending):
+            if not engine.has_free_slot():
+                break
+            try:
+                engine.admit(req, rng)
+            except OutOfPages:
+                continue
+            pending.remove(req)
+            admitted = True
+        finished = engine.step(rng)
+        for req in finished:
             stats.served += 1
             stats.tokens += len(req.out_tokens)
+        preempted = engine.take_preempted()
+        stats.preempted += len(preempted)
+        pending = preempted + pending
+        # Stuck only if this iteration made no progress of any kind —
+        # a preemption frees pages the next admission pass can use.
+        if (not finished and not admitted and not preempted
+                and engine.num_live == 0 and pending):
+            raise RuntimeError(
+                f"requests {[r.rid for r in pending]} cannot be admitted: "
+                f"page pool too small for their contexts"
+            )
     stats.wall_s = time.monotonic() - t0
+    if measured is not None and service is not None and size is not None:
+        if stats.wall_s > 0:
+            measured.observe(service, size, engine.batch, stats.throughput)
     return stats

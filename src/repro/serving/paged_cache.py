@@ -1,13 +1,21 @@
 """Paged KV-cache pool management (the host side of paged attention).
 
-A :class:`PagePool` owns a fixed page inventory per layer; requests allocate
-pages as their context grows and release them on completion.  The pool is
-the serving-engine counterpart of ``repro.kernels.paged_attention`` — it
-produces the (page_tables, lengths) the kernel consumes.
+A :class:`PagePool` owns a fixed page inventory; requests allocate pages as
+their context grows and release them on completion (one logical page id
+addresses a slab across every attention layer).  The pool is the serving
+engine's KV accounting: :class:`~repro.serving.engine.Engine` admits a
+request's prompt into pages, grows it one token per decode step, and treats
+:class:`OutOfPages` as its admission-refusal / preemption signal; ``tables``
+produces the (page_tables, lengths) that ``repro.kernels.paged_attention``
+and ``Model.decode_step_paged`` consume.
+
+Allocation is **atomic**: a grow that cannot complete rolls back any pages
+it grabbed, so a refused request leaves the pool byte-identical.
 
 This is deliberately simple (free-list, no copy-on-write/prefix sharing);
 the point is that MIG-Serving's slice scheduler and a paged engine compose:
-a slice's HBM budget translates directly to ``num_pages``.
+a slice's HBM budget translates directly to ``num_pages`` (see
+``repro.serving.engine.page_hbm_bytes``).
 """
 
 from __future__ import annotations
@@ -20,6 +28,17 @@ import numpy as np
 
 class OutOfPages(RuntimeError):
     pass
+
+
+def page_bytes(
+    page_size: int, kv_heads: int, head_dim: int, n_layers: int,
+    dtype_bytes: int = 2,
+) -> int:
+    """HBM cost of ONE logical page: its k+v slabs across every attention
+    layer.  The single source of truth for paged-KV capacity math — both
+    :meth:`PagePool.hbm_bytes` and the engine's HBM-budget → ``num_pages``
+    mapping derive from it."""
+    return 2 * page_size * kv_heads * head_dim * n_layers * dtype_bytes
 
 
 @dataclasses.dataclass
@@ -48,29 +67,49 @@ class PagePool:
         r = self._requests.pop(rid)
         self._free.extend(r.page_ids)
 
+    def request(self, rid: int) -> RequestPages:
+        """The live allocation record for ``rid`` (page ids + token length)."""
+        return self._requests[rid]
+
     def append_tokens(self, rid: int, n: int = 1) -> None:
         """Grow a request's context by ``n`` tokens, allocating pages on
         boundary crossings.  Raises :class:`OutOfPages` when the pool (or the
-        per-request table) is exhausted — the engine's admission signal."""
+        per-request table) is exhausted — the engine's admission/preemption
+        signal.  **Atomic**: on failure any pages grabbed mid-loop are rolled
+        back to the free list and the request's record is unchanged, so a
+        refused grow leaves the pool exactly as it found it."""
         r = self._requests[rid]
         new_len = r.length + n
         needed = -(-new_len // self.page_size)  # ceil
-        while len(r.page_ids) < needed:
-            if len(r.page_ids) >= self.max_pages_per_req:
-                raise OutOfPages(f"request {rid} exceeds max context")
-            if not self._free:
-                raise OutOfPages("page pool exhausted")
-            r.page_ids.append(self._free.pop())
+        grabbed: List[int] = []
+        try:
+            while len(r.page_ids) + len(grabbed) < needed:
+                if len(r.page_ids) + len(grabbed) >= self.max_pages_per_req:
+                    raise OutOfPages(f"request {rid} exceeds max context")
+                if not self._free:
+                    raise OutOfPages("page pool exhausted")
+                grabbed.append(self._free.pop())
+        except OutOfPages:
+            # roll back in reverse so the free list is byte-identical to the
+            # pre-call state (allocation order stays deterministic)
+            self._free.extend(reversed(grabbed))
+            raise
+        r.page_ids.extend(grabbed)
         r.length = new_len
 
     # -- kernel inputs --------------------------------------------------------------
-    def tables(self, rids: List[int]) -> Tuple[np.ndarray, np.ndarray]:
+    def tables(
+        self, rids: List[Optional[int]]
+    ) -> Tuple[np.ndarray, np.ndarray]:
         """(page_tables (B, max_pages), lengths (B,)) for the given batch.
-        Unused slots point at page 0 (a legal dummy; masked by length)."""
+        ``None`` entries are idle slots; they (and unused table tail cells)
+        point at page 0 — a legal dummy the kernel masks by length 0."""
         B = len(rids)
         pt = np.zeros((B, self.max_pages_per_req), np.int32)
         lens = np.zeros((B,), np.int32)
         for i, rid in enumerate(rids):
+            if rid is None:
+                continue
             r = self._requests[rid]
             pt[i, : len(r.page_ids)] = r.page_ids
             lens[i] = r.length
@@ -87,7 +126,6 @@ class PagePool:
     def hbm_bytes(self, kv_heads: int, head_dim: int, n_layers: int,
                   dtype_bytes: int = 2) -> int:
         """Pool HBM footprint — what a slice's capacity check consumes."""
-        return (
-            2 * self.num_pages * self.page_size * kv_heads * head_dim
-            * n_layers * dtype_bytes
+        return self.num_pages * page_bytes(
+            self.page_size, kv_heads, head_dim, n_layers, dtype_bytes
         )

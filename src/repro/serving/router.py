@@ -9,7 +9,6 @@ proportional to each instance's profiled throughput.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, List, Sequence, Tuple
 
 
@@ -22,21 +21,40 @@ class InstanceHandle:
 
 
 class WeightedRouter:
-    """Deterministic smooth weighted round-robin."""
+    """Deterministic smooth weighted round-robin.
+
+    The weight total is computed once at construction (throughputs are fixed
+    for a router's lifetime — the simulator rebuilds the router when the
+    instance set changes), not on every pick.  When the weights carry no
+    signal — all zero (freshly profiled, unmeasured instances) or any
+    non-finite entry — smooth WRR would degenerate to always-instance-0, so
+    the router falls back to plain round-robin until it is rebuilt with real
+    throughputs."""
 
     def __init__(self, instances: Sequence[InstanceHandle]):
         assert instances, "router needs at least one instance"
         self.instances = list(instances)
         self._current = [0.0] * len(self.instances)
+        total = sum(i.throughput for i in self.instances)
+        finite = all(
+            t >= 0.0 and t == t and t != float("inf")
+            for t in (i.throughput for i in self.instances)
+        )
+        self._total = total if finite and total > 0.0 else None
+        self._rr = 0  # round-robin cursor for the degenerate fallback
 
     def pick(self) -> InstanceHandle:
-        total = sum(i.throughput for i in self.instances)
+        if self._total is None:  # no usable weights: plain round-robin
+            inst = self.instances[self._rr]
+            self._rr = (self._rr + 1) % len(self.instances)
+            inst.dispatched += 1
+            return inst
         best_i = 0
         for idx, inst in enumerate(self.instances):
             self._current[idx] += inst.throughput
             if self._current[idx] > self._current[best_i]:
                 best_i = idx
-        self._current[best_i] -= total
+        self._current[best_i] -= self._total
         inst = self.instances[best_i]
         inst.dispatched += 1
         return inst

@@ -1,0 +1,218 @@
+"""Ragged continuous-batching oracle + engine admission-control behavior.
+
+The pin for PR 5's rebuilt engine: a multi-slot engine with staggered
+admissions must produce *byte-identical* ``out_tokens`` to decoding each
+request alone in a batch-1 engine — on both the flat and the paged KV
+backend.  Any cross-slot KV corruption, shared decode position, or bad
+page-table wiring breaks token equality immediately.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.serving import Engine, OutOfPages, Request, run_closed_loop
+
+MAX_LEN = 64
+NEW_TOKENS = 6
+
+_CACHE = {}
+
+
+def model_and_params(arch):
+    if arch not in _CACHE:
+        cfg = get_smoke_config(arch)
+        m = Model(cfg, remat=False)
+        params, _ = m.init(jax.random.PRNGKey(0))
+        _CACHE[arch] = (m, params)
+    return _CACHE[arch]
+
+
+def make_prompts(cfg, lengths, seed=7):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(1, cfg.vocab_size, size=L).astype(np.int32) for L in lengths
+    ]
+
+
+def solo_tokens(m, params, prompt, new_tokens=NEW_TOKENS):
+    """The oracle: the request decoded alone in a batch-1 flat engine."""
+    eng = Engine(m, params, batch=1, max_len=MAX_LEN, kv_backend="flat")
+    req = Request(rid=0, prompt=prompt, max_new_tokens=new_tokens)
+    run_closed_loop(eng, [req])
+    return list(req.out_tokens)
+
+
+@pytest.mark.parametrize("backend", ["flat", "paged"])
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-370m"])
+def test_ragged_oracle_staggered_admits(arch, backend):
+    """≥3 requests of different prompt lengths, admitted at staggered steps:
+    every request's out_tokens is byte-identical to its solo decode."""
+    m, params = model_and_params(arch)
+    prompts = make_prompts(m.cfg, (3, 5, 9))
+    solo = [solo_tokens(m, params, p) for p in prompts]
+    eng = Engine(m, params, batch=3, max_len=MAX_LEN, kv_backend=backend)
+    reqs = [
+        Request(rid=i, prompt=p, max_new_tokens=NEW_TOKENS)
+        for i, p in enumerate(prompts)
+    ]
+    eng.admit(reqs[0])
+    eng.step()
+    eng.step()
+    eng.admit(reqs[1])
+    eng.step()
+    eng.admit(reqs[2])
+    while eng.num_live:
+        eng.step()
+    for req, want in zip(reqs, solo):
+        assert req.out_tokens == want, (req.rid, req.out_tokens, want)
+
+
+@pytest.mark.parametrize("backend", ["flat", "paged"])
+def test_ragged_oracle_slot_reuse(backend):
+    """More requests than slots through run_closed_loop: freed slots are
+    re-admitted at new offsets and the oracle still holds for every request."""
+    m, params = model_and_params("qwen3-8b")
+    prompts = make_prompts(m.cfg, (4, 7, 3, 6, 5), seed=11)
+    solo = [solo_tokens(m, params, p) for p in prompts]
+    eng = Engine(m, params, batch=2, max_len=MAX_LEN, kv_backend=backend)
+    reqs = [
+        Request(rid=i, prompt=p, max_new_tokens=NEW_TOKENS)
+        for i, p in enumerate(prompts)
+    ]
+    stats = run_closed_loop(eng, reqs)
+    assert stats.served == len(reqs)
+    for req, want in zip(reqs, solo):
+        assert req.out_tokens == want, (req.rid, req.out_tokens, want)
+
+
+def test_admission_refused_on_pool_exhaustion_then_recovers():
+    """A pool too small for the full batch refuses admission (OutOfPages, no
+    silent clamp); run_closed_loop completes everything once slots free up,
+    and all pages return to the pool."""
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(
+        m, params, batch=3, max_len=MAX_LEN,
+        kv_backend="paged", page_size=4, num_pages=6,
+    )
+    reqs = [
+        Request(rid=i, prompt=np.arange(1, 8, dtype=np.int32), max_new_tokens=2)
+        for i in range(4)
+    ]
+    # 7-token context + 1 decode slot = 2 pages each; 3 concurrent exhaust
+    # the pool, so the 4th admission must be refused (and retried later) —
+    # never silently clamped into another slot's pages.
+    with pytest.raises(OutOfPages):
+        e2 = Engine(m, params, batch=3, max_len=MAX_LEN,
+                    kv_backend="paged", page_size=4, num_pages=1)
+        e2.admit(Request(rid=99, prompt=np.arange(1, 8, dtype=np.int32),
+                         max_new_tokens=2))
+    stats = run_closed_loop(eng, reqs)
+    assert stats.served == 4
+    assert stats.preempted == 0  # refusal path only: nobody grows past 2 pages
+    assert all(r.done for r in reqs)
+    assert eng.pool.free_pages == eng.pool.num_pages
+
+
+def test_mid_decode_exhaustion_preempts_and_completes():
+    """When a request cannot grow mid-decode it is preempted (pages released,
+    restarted later with its generated tokens folded into the prompt) and
+    still finishes with the full token budget."""
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(
+        m, params, batch=3, max_len=MAX_LEN,
+        kv_backend="paged", page_size=4, num_pages=5,
+    )
+    reqs = [
+        Request(rid=i, prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=8)
+        for i in range(4)
+    ]
+    stats = run_closed_loop(eng, reqs)
+    assert stats.served == 4
+    assert stats.preempted > 0
+    assert all(len(r.out_tokens) == 8 for r in reqs)
+    assert eng.pool.free_pages == eng.pool.num_pages
+
+
+def test_preempt_at_context_cap_finishes_truncated():
+    """A request preempted with no room left to resume (context cap) is
+    finished truncated — like the non-preempted max_len path — instead of
+    crashing re-admission."""
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(m, params, batch=2, max_len=13,
+                 kv_backend="paged", page_size=4, num_pages=4)
+    reqs = [
+        Request(rid=0, prompt=np.arange(1, 12, dtype=np.int32), max_new_tokens=8),
+        Request(rid=1, prompt=np.arange(1, 4, dtype=np.int32), max_new_tokens=8),
+    ]
+    stats = run_closed_loop(eng, reqs)
+    assert stats.served == 2
+    assert reqs[1].done  # small request gets its full budget
+    assert 0 < len(reqs[0].out_tokens) <= 8  # truncated at the context cap
+    assert eng.pool.free_pages == eng.pool.num_pages
+
+
+def test_unservable_request_does_not_block_later_requests():
+    """First-fit admission: a request the pool can never hold must not
+    head-of-line block admittable requests behind it; the loop serves them,
+    then raises honestly for the stuck one."""
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(m, params, batch=2, max_len=20,
+                 kv_backend="paged", page_size=4, num_pages=4)
+    big = Request(rid=0, prompt=np.arange(1, 12, dtype=np.int32),
+                  max_new_tokens=12)  # grows past the whole pool
+    small = Request(rid=1, prompt=np.arange(1, 8, dtype=np.int32),
+                    max_new_tokens=4)
+    with pytest.raises(RuntimeError):
+        run_closed_loop(eng, [big, small])
+    assert small.done
+    assert not big.done
+
+
+def test_admit_rejects_context_longer_than_max_len():
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(m, params, batch=1, max_len=8)
+    with pytest.raises(ValueError):
+        eng.admit(Request(rid=0, prompt=np.arange(1, 10, dtype=np.int32),
+                          max_new_tokens=2))
+
+
+def test_seeded_sampling_reproducible_and_argmax_at_zero():
+    """temperature=0 is argmax (the deterministic default); temperature>0
+    draws from the seeded rng and reproduces exactly for the same seed."""
+    m, params = model_and_params("qwen3-8b")
+    prompts = make_prompts(m.cfg, (4, 4, 4), seed=3)
+
+    def run(temp, seed):
+        eng = Engine(m, params, batch=2, max_len=MAX_LEN,
+                     temperature=temp, top_k=8)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        run_closed_loop(eng, reqs, seed=seed)
+        return [list(r.out_tokens) for r in reqs]
+
+    assert run(0.0, 0) == run(0.0, 1)  # argmax ignores the rng
+    assert run(0.8, 5) == run(0.8, 5)
+    assert run(0.8, 5) != run(0.8, 6)
+
+
+def test_measured_profile_feedback_loop():
+    """§8.3: run_closed_loop feeds measured throughput into a
+    MeasuredProfile, which the optimizer-side latency query then reflects."""
+    from repro.core.arch_bridge import tpu_arch_profiles
+    from repro.core.online_profiles import MeasuredProfile
+
+    m, params = model_and_params("qwen3-8b")
+    measured = MeasuredProfile(tpu_arch_profiles(["qwen3-8b"]))
+    eng = Engine(m, params, batch=2, max_len=MAX_LEN)
+    reqs = [
+        Request(rid=i, prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=3)
+        for i in range(4)
+    ]
+    run_closed_loop(eng, reqs, measured=measured, service="qwen3-8b", size=16)
+    corr = measured.correction("qwen3-8b", 16)
+    assert corr != 1.0
+    base = measured.base.latency_ms("qwen3-8b", 16, 8)
+    assert measured.latency_ms("qwen3-8b", 16, 8) == pytest.approx(base / corr)

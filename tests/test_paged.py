@@ -74,6 +74,43 @@ class TestPagePool:
         # qwen3-8b-ish: 2*1024*16*8*128*36*2 bytes
         assert b == 2 * 1024 * 16 * 8 * 128 * 36 * 2
 
+    def test_tables_skip_idle_slots(self):
+        """None entries (idle engine slots) produce the all-zero dummy row."""
+        pool = PagePool(num_pages=8, page_size=4, max_pages_per_req=3)
+        pool.admit(5)
+        pool.append_tokens(5, 6)
+        pt, lens = pool.tables([None, 5, None])
+        assert lens.tolist() == [0, 6, 0]
+        assert pt[0].tolist() == [0, 0, 0] and pt[2].tolist() == [0, 0, 0]
+        assert pt[1, :2].tolist() == pool.request(5).page_ids
+
+    def test_append_is_atomic_on_pool_exhaustion(self):
+        """A failed grow must roll back mid-loop allocations: the request's
+        record and the pool's free list are exactly as before the call."""
+        pool = PagePool(num_pages=3, page_size=4, max_pages_per_req=8)
+        pool.admit(1)
+        pool.append_tokens(1, 4)  # 1 page
+        pool.admit(2)
+        pool.append_tokens(2, 1)  # 1 page
+        free_before = list(pool._free)
+        r = pool.request(1)
+        pages_before, len_before = list(r.page_ids), r.length
+        with pytest.raises(OutOfPages):
+            pool.append_tokens(1, 12)  # needs 3 more pages, only 1 free
+        assert pool._free == free_before
+        assert r.page_ids == pages_before and r.length == len_before
+        pool.append_tokens(1, 4)  # the single free page still works
+
+    def test_append_is_atomic_on_per_request_cap(self):
+        pool = PagePool(num_pages=16, page_size=4, max_pages_per_req=2)
+        pool.admit(1)
+        pool.append_tokens(1, 5)  # 2 pages
+        free_before = pool.free_pages
+        with pytest.raises(OutOfPages):
+            pool.append_tokens(1, 8)
+        assert pool.free_pages == free_before
+        assert pool.request(1).length == 5
+
     @given(st.lists(st.integers(1, 30), min_size=1, max_size=12))
     @settings(max_examples=25, deadline=None)
     def test_no_page_leaks(self, growths):
@@ -90,3 +127,39 @@ class TestPagePool:
         for rid in rids:
             pool.release(rid)
         assert pool.free_pages == 64
+
+    @given(st.lists(st.integers(1, 40), min_size=1, max_size=16),
+           st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_exhaustion_atomicity_property(self, growths, seed):
+        """Property: every failed append leaves (free count, per-request
+        lengths, per-request page counts) unchanged, and interleaved releases
+        still conserve the inventory."""
+        rng = np.random.default_rng(seed)
+        pool = PagePool(num_pages=16, page_size=4, max_pages_per_req=6)
+        live = {}
+        for i, g in enumerate(growths):
+            if live and rng.random() < 0.3:
+                victim = sorted(live)[int(rng.integers(len(live)))]
+                pool.release(victim)
+                del live[victim]
+            if i not in live:
+                pool.admit(i)
+                live[i] = True
+            snapshot = (
+                pool.free_pages,
+                {r: (pool.request(r).length, len(pool.request(r).page_ids))
+                 for r in live},
+            )
+            try:
+                pool.append_tokens(i, g)
+            except OutOfPages:
+                after = (
+                    pool.free_pages,
+                    {r: (pool.request(r).length, len(pool.request(r).page_ids))
+                     for r in live},
+                )
+                assert after == snapshot
+        for r in list(live):
+            pool.release(r)
+        assert pool.free_pages == 16
