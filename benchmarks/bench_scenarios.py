@@ -1,13 +1,14 @@
 """Scenario-matrix benchmark: which scheduling policy wins under which load.
 
 Runs the declarative scenario matrix (:mod:`repro.sim.scenarios` — trace
-shape x scheduler x scale x SLO policy x fault profile) through the
-closed-loop simulator and writes one comparable JSON report,
+shape x scheduler x scale x SLO policy x fault profile x serving model)
+through the closed-loop simulator and writes one comparable JSON report,
 ``BENCH_scenarios.json`` at the repo root: per-cell SLO attainment, GPUs
 used (final/peak), in-loop reoptimize latency (mean transition makespan),
-modeled power, the paper's headline "GPUs saved vs A100-as-is" (§8.1), and
-— on fault-profile cells — availability, recovery time to SLO
-re-attainment, reconcile iterations/retries, and shed requests.
+modeled power, the paper's headline "GPUs saved vs A100-as-is" (§8.1), on
+fault-profile cells availability, recovery time to SLO re-attainment,
+reconcile iterations/retries and shed requests, and on token-serving cells
+TTFT/TPOT/queue-delay percentiles plus preemption/refusal counts.
 
 The JSON is **seed-deterministic**: same seed => byte-identical file (the
 property CI's smoke step and tests/test_scenarios.py pin).  Wall-clock
@@ -23,6 +24,8 @@ Usage::
     PYTHONPATH=src python benchmarks/bench_scenarios.py --list     # enumerate
     PYTHONPATH=src python benchmarks/bench_scenarios.py \\
         --cell surge:greedy:small:uniform:gpu_loss  # one cell, no full matrix
+    PYTHONPATH=src python benchmarks/bench_scenarios.py \\
+        --cell flash:greedy:micro:uniform:none:token  # token serving model
 """
 
 from __future__ import annotations
@@ -55,6 +58,8 @@ def leaderboard(cells: Dict[str, Dict]) -> List[str]:
     groups: Dict[str, List[Dict]] = {}
     for c in cells.values():
         key = "{trace}/{scale}/{slo}/{fault}".format(**c["cell"])
+        if c["cell"].get("serving", "fluid") != "fluid":
+            key += "/" + c["cell"]["serving"]
         groups.setdefault(key, []).append(c)
     lines = []
     for key in sorted(groups):
@@ -74,15 +79,17 @@ def leaderboard(cells: Dict[str, Dict]) -> List[str]:
 
 
 def parse_cell(spec: str) -> ScenarioCell:
-    """``trace:sched:scale:slo[:fault]`` -> a validated ScenarioCell."""
+    """``trace:sched:scale:slo[:fault[:serving]]`` -> a validated
+    ScenarioCell."""
     from repro.sim.scenarios import (
         FAULT_PROFILES, SCALES, SCHEDULERS, SLO_POLICIES, TRACE_SHAPES,
     )
 
     parts = spec.split(":")
-    if len(parts) not in (4, 5):
+    if len(parts) not in (4, 5, 6):
         raise SystemExit(
-            f"--cell wants trace:sched:scale:slo[:fault], got {spec!r}"
+            f"--cell wants trace:sched:scale:slo[:fault[:serving]],"
+            f" got {spec!r}"
         )
     cell = ScenarioCell(*parts)
     for value, registry, axis in (
@@ -91,6 +98,7 @@ def parse_cell(spec: str) -> ScenarioCell:
         (cell.scale, SCALES, "scale"),
         (cell.slo, SLO_POLICIES, "slo"),
         (cell.fault, FAULT_PROFILES, "fault"),
+        (cell.serving, ("fluid", "token"), "serving"),
     ):
         if value not in registry:
             raise SystemExit(
@@ -154,12 +162,28 @@ def main() -> int:
                 f" retried={res.actions_retried}"
                 f" shed={res.shed_requests:.0f}"
             )
+        token_bits = ""
+        if res.token_serving is not None:
+            tot = res.token_serving["_totals"]
+            ttft_p95 = max(
+                (
+                    v["ttft_p95_s"]
+                    for k, v in res.token_serving.items()
+                    if k != "_totals"
+                ),
+                default=0.0,
+            )
+            token_bits = (
+                f" ttft_p95={ttft_p95:.2f}s preempt={tot['preemptions']}"
+                f" refuse={tot['refusals']}"
+            )
         print(
             f"[{cell.name}] gpus_peak={res.gpus_peak} asis={res.gpus_asis}"
             f" saved={res.gpus_saved} att={res.mean_attainment:.3f}"
             f" reopt_lat={res.reoptimize_latency_s:.0f}s"
             f" power={res.power_w:.0f}W transparent={res.transparent}"
             + fault_bits
+            + token_bits
             + f" wall={wall:.2f}s"
         )
 

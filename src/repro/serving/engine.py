@@ -52,13 +52,18 @@ from repro.models.config import ModelConfig
 from repro.serving.paged_cache import OutOfPages, PagePool, page_bytes
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
+    # eq=False: requests are identity-compared.  A generated __eq__ would
+    # tuple-compare fields including the numpy ``prompt``, so two distinct
+    # requests sharing a rid would make ``pending.remove(req)`` raise on the
+    # ambiguous array truth value instead of removing the right object.
     rid: int
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     submitted_s: float = 0.0
+    first_token_s: float = 0.0
     finished_s: float = 0.0
 
     @property
@@ -218,24 +223,42 @@ class Engine:
             except OutOfPages:
                 self.pool.release(req.rid)
                 raise
-        pad = -(-L // self._pad_to) * self._pad_to
-        toks = np.zeros((1, pad), np.int32)
-        toks[0, :L] = ctx
-        logits, pcache = self._prefill(
-            self.params, jnp.asarray(toks), jnp.asarray([L], jnp.int32)
-        )
-        page_ids = (
-            self.pool.request(req.rid).page_ids if self.pool is not None else None
-        )
-        self.cache = self.model.scatter_prefill(
-            self.cache, pcache, slot, L, page_ids
-        )
-        self.slots[slot] = req
-        self.slot_pos[slot] = L
-        if req.submitted_s == 0.0:
-            req.submitted_s = time.monotonic()
-        first = self._sample(np.asarray(logits.astype(jnp.float32))[0, 0], rng)
-        req.out_tokens.append(first)
+        try:
+            pad = -(-L // self._pad_to) * self._pad_to
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :L] = ctx
+            logits, pcache = self._prefill(
+                self.params, jnp.asarray(toks), jnp.asarray([L], jnp.int32)
+            )
+            page_ids = (
+                self.pool.request(req.rid).page_ids
+                if self.pool is not None
+                else None
+            )
+            self.cache = self.model.scatter_prefill(
+                self.cache, pcache, slot, L, page_ids
+            )
+            self.slots[slot] = req
+            self.slot_pos[slot] = L
+            if req.submitted_s == 0.0:
+                req.submitted_s = time.monotonic()
+            first = self._sample(
+                np.asarray(logits.astype(jnp.float32))[0, 0], rng
+            )
+            req.out_tokens.append(first)
+            if req.first_token_s == 0.0:
+                req.first_token_s = time.monotonic()
+        except BaseException:
+            # prefill/scatter/sampling failed after the pages were reserved:
+            # undo the reservation (free list byte-identical, stale rid entry
+            # dropped so a retry of the same rid re-admits cleanly) and free
+            # the slot — the OutOfPages contract says a failed admission
+            # leaves the engine untouched.
+            self.slots[slot] = None
+            self.slot_pos[slot] = -1
+            if self.pool is not None:
+                self.pool.abort(req.rid)
+            raise
         if req.done:
             self._finish(slot)
         return slot
@@ -293,8 +316,14 @@ class Engine:
             raise ValueError("temperature > 0 requires an rng")
         z = logits_row.astype(np.float64) / self.temperature
         if self.top_k and self.top_k < z.size:
-            kth = np.partition(z, -self.top_k)[-self.top_k]
-            z = np.where(z >= kth, z, -np.inf)
+            # exactly k candidates: a >= kth-value cut would keep *every*
+            # logit tied with the k-th and sample from more than k on ties.
+            # Stable sort makes the tie order deterministic (lowest index
+            # wins), so seeded runs stay reproducible.
+            keep = np.argsort(-z, kind="stable")[: self.top_k]
+            cut = np.full_like(z, -np.inf)
+            cut[keep] = z[keep]
+            z = cut
         z -= z.max()
         p = np.exp(z)
         p /= p.sum()
@@ -335,6 +364,11 @@ class ServeStats:
     tokens: int = 0
     preempted: int = 0
     wall_s: float = 0.0
+    # per-request latency observations (wall clock): time-to-first-token and
+    # mean time-per-output-token — the measured twins of the token-level
+    # serving model's TTFT/TPOT metrics (repro.sim.servemodel)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    tpot_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def throughput(self) -> float:
@@ -378,6 +412,13 @@ def run_closed_loop(
         for req in finished:
             stats.served += 1
             stats.tokens += len(req.out_tokens)
+            if req.first_token_s > 0.0:
+                stats.ttft_s.append(req.first_token_s - req.submitted_s)
+                if len(req.out_tokens) > 1:
+                    stats.tpot_s.append(
+                        (req.finished_s - req.first_token_s)
+                        / (len(req.out_tokens) - 1)
+                    )
         preempted = engine.take_preempted()
         stats.preempted += len(preempted)
         pending = preempted + pending

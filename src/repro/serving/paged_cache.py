@@ -67,6 +67,15 @@ class PagePool:
         r = self._requests.pop(rid)
         self._free.extend(r.page_ids)
 
+    def abort(self, rid: int) -> None:
+        """Undo a *fresh* admission whose pages came from one
+        :meth:`append_tokens` grab — the engine's cleanup path when prefill
+        fails after the reservation succeeded.  Pages go back in reverse
+        grab order, so the free list (hence every later allocation) is
+        byte-identical to the pre-admission state."""
+        r = self._requests.pop(rid)
+        self._free.extend(reversed(r.page_ids))
+
     def request(self, rid: int) -> RequestPages:
         """The live allocation record for ``rid`` (page ids + token length)."""
         return self._requests[rid]

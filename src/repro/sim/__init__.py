@@ -39,6 +39,12 @@ from repro.sim.scenarios import (
     run_matrix,
     smoke_matrix,
 )
+from repro.sim.servemodel import (
+    InstanceModel,
+    TokenKnobs,
+    TokenRequest,
+    TokenServingState,
+)
 from repro.sim.simulator import ClusterSimulator, SimConfig
 from repro.sim.traffic import (
     Trace,
@@ -57,4 +63,5 @@ __all__ = [
     "replay_trace", "FAULT_PROFILES", "SCALES", "SCHEDULERS", "SLO_POLICIES",
     "TRACE_SHAPES", "CellResult", "ScaleSpec", "ScenarioCell", "build_cell",
     "default_matrix", "run_cell", "run_matrix", "smoke_matrix",
+    "InstanceModel", "TokenKnobs", "TokenRequest", "TokenServingState",
 ]

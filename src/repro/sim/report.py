@@ -78,6 +78,10 @@ class ServiceTimeline:
     # degraded-mode admission control (fault profiles only; None otherwise
     # so default-mode serializations are unchanged)
     shed: Optional[np.ndarray] = None  # requests shed by admission control
+    # token-level serving model only (serving_model="token"; None in fluid
+    # mode so fluid serializations keep their exact pre-token bytes)
+    preempted: Optional[np.ndarray] = None  # KV-pressure preemptions per bin
+    refused: Optional[np.ndarray] = None  # OutOfPages admission refusals
 
 
 @dataclasses.dataclass
@@ -93,6 +97,13 @@ class SimReport:
     # injected device faults (control-plane fault profiles only; empty in
     # default mode, where the serializer omits the key entirely)
     faults: List[FaultRecord] = dataclasses.field(default_factory=list)
+    # token-level serving model extensions (serving_model="token" only; the
+    # serializer omits both keys in fluid mode so fluid reports keep their
+    # exact pre-token bytes)
+    serving_model: str = "fluid"
+    # per-service TTFT/TPOT/queueing-delay percentiles + "_totals" counts,
+    # as produced by TokenServingState.latency_summary()
+    latency: Optional[Dict] = None
 
     # -- derived -----------------------------------------------------------------
     def slo_satisfaction(self, svc: str) -> float:
@@ -186,6 +197,18 @@ class SimReport:
                     # key present only under fault profiles — default-mode
                     # bytes must not change
                     **({"shed": arr(tl.shed)} if tl.shed is not None else {}),
+                    # keys present only under the token serving model —
+                    # fluid-mode bytes must not change
+                    **(
+                        {"preempted": arr(tl.preempted)}
+                        if tl.preempted is not None
+                        else {}
+                    ),
+                    **(
+                        {"refused": arr(tl.refused)}
+                        if tl.refused is not None
+                        else {}
+                    ),
                 }
                 for svc, tl in sorted(self.timelines.items())
             },
@@ -221,6 +244,13 @@ class SimReport:
                 if self.faults
                 else {}
             ),
+            # token serving model only: fluid-mode reports omit both keys so
+            # their serializations keep the exact pre-token bytes
+            **(
+                {"serving_model": self.serving_model, "latency": self.latency}
+                if self.serving_model != "fluid"
+                else {}
+            ),
         }
 
     def to_json(self) -> str:
@@ -241,6 +271,23 @@ class SimReport:
                 f" mean attainment {self.mean_attainment(svc):.3f},"
                 f" served {self.served_fraction(svc):.1%} of arrivals"
             )
+        if self.latency is not None:
+            tot = self.latency.get("_totals", {})
+            lines.append(
+                f"  token serving: completed={tot.get('completed', 0)}"
+                f" preemptions={tot.get('preemptions', 0)}"
+                f" refusals={tot.get('refusals', 0)}"
+            )
+            for svc in self.services:
+                s = self.latency.get(svc)
+                if not s:
+                    continue
+                lines.append(
+                    f"    {svc}: ttft p50={s['ttft_p50_s']:.3f}s"
+                    f" p99={s['ttft_p99_s']:.3f}s"
+                    f" tpot p50={s['tpot_p50_s'] * 1e3:.1f}ms"
+                    f" queue p99={s['queue_delay_p99_s']:.3f}s"
+                )
         for f in self.faults:
             lines.append(
                 f"  FAULT t={f.time_s:.0f}s {f.kind} target={f.target}"

@@ -7,7 +7,9 @@ the cross-product
 
     TRACE_SHAPES  x  SCHEDULERS  x  SCALES  x  SLO_POLICIES  x  FAULT_PROFILES
 
-and :func:`run_cell` runs that cell through the closed-loop simulator
+(plus two curated slices: the fault axis and the token-serving axis — see
+:func:`default_matrix`), and :func:`run_cell` runs that cell through the
+closed-loop simulator
 (:class:`repro.sim.simulator.ClusterSimulator`), returning a
 :class:`CellResult` with the comparable per-cell metrics:
 
@@ -44,7 +46,11 @@ Extending the matrix (ROADMAP "Scenario matrix" / "Control plane"):
   * new SLO policy   -> an ``SLO_POLICIES`` entry mapping sorted service
     names to (default latency, per-service overrides);
   * new fault profile -> ``repro.controlplane.faults.register_fault_profile``
-    (seeded; ``default_matrix`` picks it up on the curated fault slice).
+    (seeded; ``default_matrix`` picks it up on the curated fault slice);
+  * serving model    -> ``ScenarioCell.serving`` selects
+    ``SimConfig.serving_model`` ("fluid" | "token"); token cells also carry
+    TTFT/TPOT/queue-delay percentiles and preemption/refusal counts in
+    ``CellResult.token_serving``.
 """
 
 from __future__ import annotations
@@ -62,11 +68,13 @@ from repro.core.profiles import SyntheticPaperProfiles
 from repro.core.zoo import PowerModel
 
 from repro.sim.report import SimReport
+from repro.sim.servemodel import TokenKnobs
 from repro.sim.simulator import ClusterSimulator, SimConfig
 from repro.sim.traffic import (
     Trace,
     correlated_surge_trace,
     diurnal_trace,
+    flash_crowd_trace,
     poisson_burst_trace,
 )
 
@@ -86,6 +94,15 @@ class ScaleSpec:
 SCALES: Dict[str, ScaleSpec] = {
     "small": ScaleSpec(3, 7.0, 2 * 3600.0, 60.0, 1800.0),
     "medium": ScaleSpec(6, 7.6, 2 * 3600.0, 60.0, 1800.0),
+    # request-level scale: rates low enough that the token serving model
+    # (every request a discrete object) stays cheap, duration short enough
+    # for CI — used by the curated token slice, not the fluid cross-product.
+    # profile_seed=2 picks the lowest-throughput synthetic models (so
+    # demand can plausibly stress an instance), and rate_scale=3.6 sits
+    # just past the point where the flash crowd outruns the deployment:
+    # the cell shows a real queueing ramp + KV-pressure preemption storm,
+    # then fully drains once the re-optimizer reacts
+    "micro": ScaleSpec(2, 3.6, 600.0, 30.0, 300.0, profile_seed=2),
 }
 
 # peaks are per-service peak req/s; generators down-scale them to base rates
@@ -106,7 +123,19 @@ TRACE_SHAPES: Dict[str, Callable[[Mapping[str, float], ScaleSpec, int], Trace]] 
         surge_mult=4.0, n_surges=2, surge_len_bins=15, ramp_bins=3,
         correlation=0.8, seed=seed,
     ),
+    "flash": lambda peaks, spec, seed: flash_crowd_trace(
+        {s: p / 5.0 for s, p in peaks.items()},
+        duration_s=spec.duration_s, at_s=spec.duration_s / 3.0,
+        bin_s=spec.bin_s, mult=5.0, ramp_s=2 * spec.bin_s, decay_s=600.0,
+    ),
 }
+
+# the fluid cross-product is pinned to its historical axes: "flash" and
+# "micro" exist for the curated token slice (a flash crowd is exactly the
+# queueing/KV-pressure event the fluid model cannot represent), and folding
+# them into the 4-way product would add a page of redundant fluid cells
+FLUID_TRACES = ("burst", "diurnal", "surge")
+FLUID_SCALES = ("medium", "small")
 
 # scheduler name -> optimizer_kwargs routed to TwoPhaseOptimizer's registry
 SCHEDULERS: Dict[str, Dict[str, str]] = {
@@ -138,12 +167,17 @@ class ScenarioCell:
     scale: str
     slo: str = "uniform"
     fault: str = "none"  # FAULT_PROFILES name; != "none" => control plane
+    serving: str = "fluid"  # SimConfig.serving_model: "fluid" | "token"
 
     @property
     def name(self) -> str:
+        # the serving suffix appears only off the default, so every
+        # pre-existing cell keeps its exact historical name (and the report
+        # documents keyed by it stay comparable)
         return (
             f"{self.trace}/{self.scheduler}/{self.scale}/{self.slo}"
             f"/{self.fault}"
+            + (f"/{self.serving}" if self.serving != "fluid" else "")
         )
 
 
@@ -155,15 +189,30 @@ class ScenarioCell:
 # triple the benchmark's wall clock for redundant cells
 FAULT_SLICE_SCHEDULERS = ("frag", "greedy")
 
+# the serving axis is curated like the fault axis: the token model runs the
+# two traces whose request-level dynamics the fluid model cannot represent
+# (a flash crowd's queueing ramp, a correlated surge's KV-pressure spike) at
+# the request-level scale
+TOKEN_SLICE_TRACES = ("flash", "surge")
+
+# knobs of the token slice: drawn decode budgets are 4x the budget the
+# profile's latency numbers assumed, so real per-request service time is
+# ~4x the profiled request latency and the planner's rate math (which the
+# fluid model serves at face value) over-promises capacity — the slice's
+# flash crowd then actually outruns the deployment between re-optimization
+# points, producing the queueing/preemption dynamics the cell exists to show
+TOKEN_SLICE_KNOBS = TokenKnobs(profiled_decode_tokens=4)
+
 
 def default_matrix() -> List[ScenarioCell]:
     """The published matrix: the full 4-axis cross-product under the
-    ``none`` profile, plus the curated fault slice."""
+    ``none`` profile (historical fluid axes only), plus the curated fault
+    and token-serving slices."""
     cells = [
         ScenarioCell(trace, sched, scale, slo)
-        for trace in sorted(TRACE_SHAPES)
+        for trace in sorted(FLUID_TRACES)
         for sched in sorted(SCHEDULERS)
-        for scale in sorted(SCALES)
+        for scale in sorted(FLUID_SCALES)
         for slo in sorted(SLO_POLICIES)
     ]
     cells += [
@@ -171,6 +220,10 @@ def default_matrix() -> List[ScenarioCell]:
         for fault in sorted(FAULT_PROFILES)
         if fault != "none"
         for sched in FAULT_SLICE_SCHEDULERS
+    ]
+    cells += [
+        ScenarioCell(trace, "greedy", "micro", "uniform", serving="token")
+        for trace in TOKEN_SLICE_TRACES
     ]
     return cells
 
@@ -184,6 +237,7 @@ def smoke_matrix() -> List[ScenarioCell]:
         ScenarioCell("surge", "frag", "small", "uniform"),
         ScenarioCell("surge", "energy", "small", "tiered"),
         ScenarioCell("surge", "greedy", "small", "uniform", "gpu_loss"),
+        ScenarioCell("flash", "greedy", "micro", "uniform", serving="token"),
     ]
 
 
@@ -216,6 +270,9 @@ class CellResult:
     actions_retried: int = 0  # attempts killed by injected faults
     actions_abandoned: int = 0  # diff items given up on
     shed_requests: float = 0.0  # dropped by degraded-mode admission control
+    # token-serving cells only (cell.serving == "token"): the report's
+    # per-service TTFT/TPOT/queue-delay percentiles + "_totals" counts
+    token_serving: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)  # recurses into the nested cell
@@ -238,6 +295,10 @@ def build_cell(
         seed=seed,
         fault_profile=cell.fault,
         control_plane=cell.fault != "none",
+        serving_model=cell.serving,
+        token_knobs=(
+            TOKEN_SLICE_KNOBS if cell.serving == "token" else None
+        ),
     )
     sim = ClusterSimulator(
         a100_rules(), prof, trace, cfg,
@@ -290,6 +351,7 @@ def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
         actions_retried=sum(r["retried"] for r in reconciles),
         actions_abandoned=sum(r["abandoned"] for r in reconciles),
         shed_requests=rep.shed_total(),
+        token_serving=rep.latency,
     )
     return result, rep
 
@@ -308,6 +370,7 @@ def matrix_doc(
             "scales": sorted({c.scale for c in cells}),
             "slo_policies": sorted({c.slo for c in cells}),
             "fault_profiles": sorted({c.fault for c in cells}),
+            "serving_models": sorted({c.serving for c in cells}),
         },
         "cells": results,
     }

@@ -1,0 +1,481 @@
+"""Token-level serving model: a discrete, numpy-only twin of the Engine.
+
+The fluid bin model in :mod:`repro.sim.simulator` serves at profile rates —
+it cannot represent queueing delay, TTFT/TPOT latency, preemption storms, or
+KV-pressure collapse, exactly the effects the paper's SLO story (§7 "largest
+batch size possible, as far as the inference latency is smaller than what
+required by SLOs", §8.3 measured-profile feedback) hinges on.  This module
+is the drop-in alternative (``SimConfig.serving_model = "token"``): every
+request is a discrete object with a per-token clock, and every simulated
+instance is an :class:`InstanceModel` that mirrors the real
+:class:`repro.serving.engine.Engine` state machine —
+
+  * a fixed number of batch *slots* (the §7 rule: the profile's best
+    SLO-compliant batch),
+  * paged-KV accounting through the *same* :class:`PagePool` /
+    :func:`page_bytes` math the engine uses (a slice's HBM budget maps to
+    ``num_pages``),
+  * admission = reserve ``context + 1`` page-tokens, pay a prefill charge,
+    emit the first output token (the engine samples it from the prefill
+    logits); :class:`OutOfPages` *refuses* admission,
+  * decode = one step advances every live slot by one token; a slot that
+    cannot grow its pages mid-decode is *preempted* — pages released,
+    request resumed later with its generated tokens folded into the context,
+  * per-token step time comes from the profile:
+    ``latency_ms(svc, size, b) / 1000 / profiled_decode_tokens`` — the
+    profile's request latency at batch ``b`` is the time to decode the
+    *profiled* token budget at that occupancy, so when the workload's drawn
+    budgets match the profiled one, a full batch sustains the profile's
+    throughput (and when they are longer, capacity falls short of the
+    planner's rate math — the fidelity gap the fluid model hides).  Running
+    the simulation on a
+    :class:`repro.core.online_profiles.MeasuredProfile` (fed by the real
+    engine's ``run_closed_loop(measured=...)`` §8.3 loop) calibrates the
+    per-token rates to *measured* throughput.
+
+Everything is numpy-only (the ``repro.sim`` jax-free contract) and
+seed-deterministic: request shapes are drawn from the simulator's single
+seeded rng, instances advance in sorted-uid order, and queues are FIFO with
+preempted requests resumed first — same seed, byte-identical
+:meth:`repro.sim.report.SimReport.to_json`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.paged_cache import OutOfPages, PagePool, page_bytes
+
+# uid -> (service, size, throughput); mirrors repro.sim.reoptimize.InstanceSet
+InstanceSet = Dict[int, Tuple[str, int, float]]
+
+# how many queued requests one admission pass may scan past a refusal: the
+# engine's run_closed_loop scans its whole pending list (first-fit), but a
+# simulated flash crowd can queue thousands of requests per instance — a
+# bounded head-of-line window keeps the per-step cost O(slots)
+ADMIT_SCAN = 4
+
+# percentiles the latency summaries report (ISSUE: p50/p95/p99)
+_PCTS = (50.0, 95.0, 99.0)
+
+
+@dataclasses.dataclass
+class TokenRequest:
+    """One discrete request moving through the token-level model."""
+
+    rid: int
+    service: str
+    arrival_s: float
+    prompt_tokens: int
+    decode_tokens: int  # output-token budget
+    generated: int = 0  # survives preemption (engine folds them into ctx)
+    admit_s: float = -1.0  # first successful admission
+    first_token_s: float = -1.0
+    finish_s: float = -1.0
+    preemptions: int = 0
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_tokens + self.generated
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.decode_tokens
+
+
+@dataclasses.dataclass
+class TokenKnobs:
+    """Shape of the modeled requests and of the per-instance KV budget.
+
+    The KV geometry (heads / head_dim / layers / page size) feeds the same
+    :func:`page_bytes` math the engine's ``page_hbm_bytes`` uses, so an
+    instance of MIG size ``s`` gets ``s * hbm_gb_per_unit`` GB of page pool.
+    Defaults are sized so a flash crowd actually produces KV pressure
+    (refusals/preemptions) at the curated ``micro`` scenario scale.
+    """
+
+    prompt_tokens: int = 24  # mean prompt length (uniform in [1, 2*mean))
+    decode_tokens: int = 16  # mean output budget (uniform in [1, 2*mean))
+    # decode budget the profile's latency numbers assumed: per-token step
+    # time is latency_ms / 1000 / profiled_decode_tokens.  When the drawn
+    # budgets (decode_tokens) exceed this, requests take longer than the
+    # profile's request latency and real capacity falls short of the
+    # planner's rate math — the fidelity gap the token model exists to show.
+    # None -> equal to decode_tokens (profile matches the workload).
+    profiled_decode_tokens: Optional[int] = None
+    max_len: int = 96  # context cap, like Engine.max_len
+    page_size: int = 16
+    kv_heads: int = 8
+    head_dim: int = 128
+    n_layers: int = 32
+    hbm_gb_per_unit: float = 0.020  # page-pool GB per MIG size unit
+    prefill_chunk: int = 32  # prompt tokens prefilled per step-equivalent
+
+    def num_pages(self, size: int) -> int:
+        """A slice's HBM budget -> page count (engine's page_hbm_bytes math),
+        floored so one max-context request always fits (no livelock)."""
+        per_page = page_bytes(
+            self.page_size, self.kv_heads, self.head_dim, self.n_layers
+        )
+        budget = int(size * self.hbm_gb_per_unit * 2**30)
+        return max(budget // per_page, self.max_pages_per_req)
+
+    @property
+    def step_decode_tokens(self) -> int:
+        """Decode budget behind the profile's latency numbers (the per-token
+        step-time denominator)."""
+        if self.profiled_decode_tokens is not None:
+            return self.profiled_decode_tokens
+        return self.decode_tokens
+
+    @property
+    def max_pages_per_req(self) -> int:
+        # context cap + the one-ahead decode write the engine reserves
+        return -(-(self.max_len + 1) // self.page_size)
+
+
+class InstanceModel:
+    """Twin of one Engine: slots + page pool + a per-token clock.
+
+    ``step_time_s(b)`` is the seconds one ragged decode step takes with
+    ``b`` live slots; admission charges ``ceil(context / prefill_chunk)``
+    step-equivalents serially (the engine's jit'd batch-1 prefill blocks the
+    decode loop the same way).
+    """
+
+    def __init__(
+        self,
+        uid: int,
+        service: str,
+        size: int,
+        slots: int,
+        knobs: TokenKnobs,
+        step_time_s: Callable[[int], float],
+        now: float,
+    ):
+        self.uid = uid
+        self.service = service
+        self.size = size
+        self.slots = max(int(slots), 1)
+        self.knobs = knobs
+        self.step_time_s = step_time_s
+        self.clock = now
+        self.pool = PagePool(
+            knobs.num_pages(size), knobs.page_size, knobs.max_pages_per_req
+        )
+        self.live: List[TokenRequest] = []
+        self.queue: List[TokenRequest] = []  # FIFO; preempted resume first
+
+    # -- admission (mirrors Engine.admit) -------------------------------------
+    def _try_admit(self, req: TokenRequest, metrics: "TokenMetrics") -> bool:
+        L = req.context_len
+        self.pool.admit(req.rid)
+        try:
+            # context + room for the first decode write, like the engine
+            self.pool.append_tokens(req.rid, L + 1)
+        except OutOfPages:
+            self.pool.release(req.rid)
+            metrics.refusals[req.service] += 1
+            return False
+        if req.admit_s < 0.0:
+            req.admit_s = self.clock
+            metrics.queue_delay_s[req.service].append(
+                self.clock - req.arrival_s
+            )
+        # serialized prefill charge, then the first token from its logits
+        steps = -(-max(L, 1) // self.knobs.prefill_chunk)
+        self.clock += steps * self.step_time_s(len(self.live) + 1)
+        req.generated += 1
+        if req.first_token_s < 0.0:
+            req.first_token_s = self.clock
+            metrics.ttft_s[req.service].append(self.clock - req.arrival_s)
+        if req.done or req.context_len >= self.knobs.max_len:
+            self._finish(req, metrics)
+        else:
+            self.live.append(req)
+        return True
+
+    def _admit_pass(self, metrics: "TokenMetrics") -> None:
+        """First-fit over the arrived head of the queue (bounded scan), like
+        the engine's run_closed_loop: a request the pool cannot hold must
+        not head-of-line block admittable requests right behind it."""
+        scanned = 0
+        i = 0
+        while i < len(self.queue) and len(self.live) < self.slots:
+            req = self.queue[i]
+            if req.arrival_s > self.clock + 1e-12 or scanned >= ADMIT_SCAN:
+                break
+            if self._try_admit(req, metrics):
+                self.queue.pop(i)
+            else:
+                scanned += 1
+                i += 1
+
+    # -- decode (mirrors Engine.step) ------------------------------------------
+    def _decode_step(self, metrics: "TokenMetrics") -> None:
+        dt = self.step_time_s(len(self.live))
+        self.clock += dt
+        still_live: List[TokenRequest] = []
+        resumed: List[TokenRequest] = []
+        for req in self.live:
+            # grow pages to cover this step's cache write (the engine keeps
+            # pool length == written positions + the sampled-but-unwritten
+            # token: exactly context_len), so the first post-admission step
+            # needs no growth — the admission reserved one slot ahead
+            need = req.context_len - self.pool.request(req.rid).length
+            if need > 0:
+                try:
+                    self.pool.append_tokens(req.rid, need)
+                except OutOfPages:
+                    # preempt: pages released, resume later with generated
+                    # tokens folded into the context (engine semantics); a
+                    # resume needs context + 1 <= max_len to re-admit — at
+                    # the cap there is no room, finish truncated like the
+                    # engine's max_len path
+                    if req.context_len + 1 > self.knobs.max_len:
+                        self._finish(req, metrics)
+                        continue
+                    self.pool.release(req.rid)
+                    req.preemptions += 1
+                    metrics.preemptions[req.service] += 1
+                    resumed.append(req)
+                    continue
+            req.generated += 1
+            if req.done or req.context_len >= self.knobs.max_len:
+                self._finish(req, metrics)
+            else:
+                still_live.append(req)
+        self.live = still_live
+        # preempted requests resume first, like run_closed_loop's re-queue
+        self.queue[:0] = resumed
+
+    def _finish(self, req: TokenRequest, metrics: "TokenMetrics") -> None:
+        req.finish_s = self.clock
+        self.pool.release(req.rid)
+        if req.generated > 1:
+            metrics.tpot_s[req.service].append(
+                (req.finish_s - req.first_token_s) / (req.generated - 1)
+            )
+        metrics.completed_at[req.service].append(req.finish_s)
+
+    # -- one traffic bin --------------------------------------------------------
+    def run_until(self, t_end: float, metrics: "TokenMetrics") -> None:
+        """Advance this instance's clock to ``t_end``, admitting and
+        decoding.  The clock may overrun ``t_end`` by a fraction of a step —
+        the remainder carries into the next bin, like a real engine whose
+        step straddles a metrics-bin edge."""
+        while self.clock < t_end - 1e-12:
+            self._admit_pass(metrics)
+            if not self.live:
+                # idle: jump to the next queued arrival (an empty pool can
+                # always admit an arrived request, so nothing arrived yet)
+                nxt = [
+                    r.arrival_s
+                    for r in self.queue
+                    if r.arrival_s > self.clock + 1e-12
+                ]
+                self.clock = min(min(nxt), t_end) if nxt else t_end
+                continue
+            self._decode_step(metrics)
+
+    def drain(self) -> List[TokenRequest]:
+        """Evict everything (the instance vanished mid-transition): queued
+        and in-flight requests spill back to the service level; in-flight
+        ones resume elsewhere with their generated tokens (a migration is a
+        preemption from the request's point of view)."""
+        for req in self.live:
+            self.pool.release(req.rid)
+            req.preemptions += 1
+        out = self.live + self.queue
+        self.live, self.queue = [], []
+        return out
+
+    @property
+    def in_system(self) -> int:
+        return len(self.live) + len(self.queue)
+
+
+@dataclasses.dataclass
+class TokenMetrics:
+    """Per-service observation streams the report's summaries derive from."""
+
+    services: List[str]
+    ttft_s: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+    tpot_s: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+    queue_delay_s: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict
+    )
+    completed_at: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict
+    )
+    # per-service running event counts (a refusal is one OutOfPages
+    # admission attempt; the same request may be refused many times)
+    preemptions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    refusals: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        for svc in self.services:
+            self.ttft_s.setdefault(svc, [])
+            self.tpot_s.setdefault(svc, [])
+            self.queue_delay_s.setdefault(svc, [])
+            self.completed_at.setdefault(svc, [])
+            self.preemptions.setdefault(svc, 0)
+            self.refusals.setdefault(svc, 0)
+
+
+def _summary(vals: List[float], prefix: str) -> Dict[str, float]:
+    if not vals:
+        return {f"{prefix}_p{int(p)}_s": 0.0 for p in _PCTS}
+    a = np.asarray(vals, dtype=np.float64)
+    return {
+        f"{prefix}_p{int(p)}_s": float(np.percentile(a, p)) for p in _PCTS
+    }
+
+
+class TokenServingState:
+    """The simulator-side owner of the token model: one
+    :class:`InstanceModel` per live instance, service-level spill queues,
+    and the latency/preemption observation streams.
+
+    ``step_time_for`` closes over the simulator's profile: per-token step
+    time at occupancy ``b`` is ``latency_ms(svc, size, b) / 1000 /
+    decode_tokens`` (corrected profiles — §8.3 ``MeasuredProfile`` — flow
+    through unchanged, which is the calibration loop).
+    """
+
+    def __init__(
+        self,
+        services: List[str],
+        profile,
+        latency_slo_for: Callable[[str], float],
+        knobs: Optional[TokenKnobs] = None,
+    ):
+        self.knobs = knobs or TokenKnobs()
+        self.profile = profile
+        self.latency_slo_for = latency_slo_for
+        self.metrics = TokenMetrics(list(services))
+        self.instances: Dict[int, InstanceModel] = {}
+        self.spill: Dict[str, List[TokenRequest]] = {s: [] for s in services}
+        self._next_rid = 0
+
+    # -- construction helpers ---------------------------------------------------
+    def step_time_for(
+        self, svc: str, size: int, noise: float = 1.0
+    ) -> Callable[[int], float]:
+        knobs = self.knobs
+        cache: Dict[int, float] = {}  # profile is fixed for the model's life
+
+        def step_time_s(b: int) -> float:
+            b = max(b, 1)
+            v = cache.get(b)
+            if v is None:
+                lat = self.profile.latency_ms(svc, size, b)
+                v = cache[b] = (
+                    lat / 1000.0 / knobs.step_decode_tokens
+                ) / noise
+            return v
+
+        return step_time_s
+
+    def slots_for(self, svc: str, size: int) -> int:
+        """§7: the largest SLO-compliant batch is the engine's slot count."""
+        return max(
+            self.profile.best_batch(svc, size, self.latency_slo_for(svc)), 1
+        )
+
+    def make_request(
+        self, svc: str, arrival_s: float, rng: np.random.Generator
+    ) -> TokenRequest:
+        knobs = self.knobs
+        prompt = int(rng.integers(1, 2 * knobs.prompt_tokens))
+        decode = int(rng.integers(1, 2 * knobs.decode_tokens))
+        # clamp so prompt + decode fits the context cap (no unservable reqs)
+        prompt = min(prompt, knobs.max_len - 2)
+        decode = min(decode, knobs.max_len - 1 - prompt)
+        rid = self._next_rid
+        self._next_rid += 1
+        return TokenRequest(rid, svc, arrival_s, prompt, max(decode, 1))
+
+    # -- instance-set sync -------------------------------------------------------
+    def sync_instances(
+        self, live: InstanceSet, noise_of: Callable[[int], float], now: float
+    ) -> None:
+        """Reconcile the per-uid models with this bin's instance set: new
+        uids get fresh models, vanished uids spill their requests back to
+        the service level (re-routed this bin)."""
+        for uid in [u for u in self.instances if u not in live]:
+            inst = self.instances.pop(uid)
+            for req in inst.live:
+                self.metrics.preemptions[req.service] += 1
+            for req in inst.drain():
+                self.spill[req.service].append(req)
+        for uid in sorted(live):
+            if uid in self.instances:
+                continue
+            svc, size, _tput = live[uid]
+            self.instances[uid] = InstanceModel(
+                uid,
+                svc,
+                size,
+                self.slots_for(svc, size),
+                self.knobs,
+                self.step_time_for(svc, size, noise_of(uid)),
+                now,
+            )
+
+    # -- per-bin serving ---------------------------------------------------------
+    def dispatch(
+        self,
+        svc: str,
+        members: List[int],
+        pick: Callable[[], int],
+        new_requests: List[TokenRequest],
+    ) -> None:
+        """Route spilled + newly arrived requests over the service's
+        instances (spill first: those arrived earlier).  ``pick`` is the
+        service's smooth-WRR router returning a uid."""
+        pending = self.spill[svc] + new_requests
+        self.spill[svc] = []
+        if not members:
+            self.spill[svc] = pending
+            return
+        for req in pending:
+            self.instances[pick()].queue.append(req)
+
+    def serve_bin(self, t_end: float) -> None:
+        for uid in sorted(self.instances):
+            self.instances[uid].run_until(t_end, self.metrics)
+
+    # -- accounting ---------------------------------------------------------------
+    def completed_in(self, svc: str, t0: float, t1: float) -> int:
+        return sum(
+            1 for t in self.metrics.completed_at[svc] if t0 <= t < t1
+        )
+
+    def in_system(self, svc: str) -> int:
+        return len(self.spill[svc]) + sum(
+            i.in_system for i in self.instances.values() if i.service == svc
+        )
+
+    def latency_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-service TTFT/TPOT/queue-delay p50/p95/p99 plus conservation
+        counts — the report extension serialized only in token mode."""
+        m = self.metrics
+        out: Dict[str, Dict[str, float]] = {}
+        for svc in sorted(m.services):
+            entry: Dict[str, float] = {}
+            entry.update(_summary(m.ttft_s[svc], "ttft"))
+            entry.update(_summary(m.tpot_s[svc], "tpot"))
+            entry.update(_summary(m.queue_delay_s[svc], "queue_delay"))
+            entry["completed"] = len(m.completed_at[svc])
+            entry["in_system"] = self.in_system(svc)
+            out[svc] = entry
+        out["_totals"] = {
+            "preemptions": sum(m.preemptions.values()),
+            "refusals": sum(m.refusals.values()),
+            "completed": sum(len(v) for v in m.completed_at.values()),
+        }
+        return out

@@ -51,6 +51,7 @@ from repro.sim.report import (
     SimReport,
     TransitionRecord,
 )
+from repro.sim.servemodel import TokenKnobs, TokenServingState
 from repro.sim.traffic import Trace
 
 
@@ -78,10 +79,21 @@ class SimConfig:
     # fault profile implies control_plane=True.
     control_plane: bool = False
     fault_profile: str = "none"  # a repro.controlplane FAULT_PROFILES name
+    # serving model: "fluid" (per-bin rate arithmetic, the historical
+    # default) or "token" (repro.sim.servemodel: discrete requests with
+    # per-token clocks, paged-KV pressure, preemption, TTFT/TPOT metrics)
+    serving_model: str = "fluid"
+    token_knobs: Optional[TokenKnobs] = None  # None -> TokenKnobs() defaults
 
     def __post_init__(self):
         assert self.arrivals in ("poisson", "fluid"), self.arrivals
         assert self.fault_profile in FAULT_PROFILES, self.fault_profile
+        assert self.serving_model in ("fluid", "token"), self.serving_model
+        if self.serving_model == "token":
+            # discrete requests need integer arrivals
+            assert self.arrivals == "poisson", (
+                "serving_model='token' requires arrivals='poisson'"
+            )
         if self.fault_profile != "none":
             self.control_plane = True
 
@@ -133,6 +145,23 @@ class ClusterSimulator:
         self._noise: Dict[int, float] = {}  # uid -> serving noise factor
         self._dead_uids: set = set()  # instances lost to device failures
         self._faults: List[FaultRecord] = []  # injected device faults
+        # token serving model (None in fluid mode — the fluid path is
+        # untouched, so fluid reports keep their exact bytes)
+        self._token: Optional[TokenServingState] = None
+        if self.config.serving_model == "token":
+            targets = self.config.latency_targets or {}
+            default_slo = self.config.latency_slo_ms
+            self._token = TokenServingState(
+                trace.services,
+                profile,
+                lambda svc: targets.get(svc, default_slo),
+                self.config.token_knobs,
+            )
+            # per-service [preemptions, refusals] seen through the prior
+            # bin, for the per-bin delta series
+            self._tok_prev: Dict[str, List[int]] = {
+                svc: [0, 0] for svc in trace.services
+            }
 
     @property
     def _fault_mode(self) -> bool:
@@ -193,6 +222,9 @@ class ClusterSimulator:
         rng: np.random.Generator,
         out: Dict[str, Dict[str, List[float]]],
     ) -> None:
+        if self._token is not None:
+            self._process_bin_token(k, t, rng, out)
+            return
         dt = self.trace.bin_s
         instances = self._active_instances(t)
         # queued requests of instances that vanished (deleted/migrated away
@@ -302,6 +334,123 @@ class ClusterSimulator:
             if self._fault_mode:
                 series["shed"].append(shed)
 
+    def _process_bin_token(
+        self,
+        k: int,
+        t: float,
+        rng: np.random.Generator,
+        out: Dict[str, Dict[str, List[float]]],
+    ) -> None:
+        """Token-level serving for one bin: discrete requests through the
+        per-instance :class:`repro.sim.servemodel.InstanceModel`s instead of
+        fluid backlog arithmetic.  capacity/required/attainment use the same
+        math as the fluid path; served and backlog come from actual request
+        completions and in-system counts, and two extra series (preempted,
+        refused) surface the KV-pressure events the fluid model cannot see.
+        """
+        dt = self.trace.bin_s
+        tok = self._token
+        instances = self._active_instances(t)
+        # uids never recur (itertools.count), so their noise draws are dead
+        for uid in [u for u in self._noise if u not in instances]:
+            del self._noise[uid]
+        by_svc: Dict[str, List[Tuple[int, int, float]]] = {}
+        for uid in sorted(instances):
+            svc, size, tput = instances[uid]
+            by_svc.setdefault(svc, []).append(
+                (uid, size, tput * self._noise_of(uid))
+            )
+        # vanished instances spill their queued/in-flight requests back to
+        # the service level; new instances get fresh engine twins
+        tok.sync_instances(instances, self._noise_of, t)
+        required = {
+            s.name: s.slo.throughput for s in self.driver.workload.services
+        } if self.driver.workload else {}
+        admission = (
+            self.control_plane.admission
+            if self.control_plane is not None
+            else None
+        )
+        degraded = bool(
+            admission is not None
+            and self.driver.desired is not None
+            and (
+                (
+                    self._pending is not None
+                    and self._pending.record.trigger == "fault"
+                )
+                or self.control_plane.reconciler.diverged(
+                    self.cluster, self.driver.desired
+                )
+            )
+        )
+
+        # dispatch pass: draw this bin's discrete arrivals and route them
+        # through the same persistent smooth-WRR the fluid path uses
+        arrived: Dict[str, int] = {}
+        shed_by_svc: Dict[str, float] = {}
+        for svc in self.trace.services:
+            rate = float(self.trace.rates[svc][k])
+            n = int(rng.poisson(rate * dt))
+            arrived[svc] = n
+            members = by_svc.get(svc, [])
+            capacity_rate = sum(m[2] for m in members)
+            shed = 0.0
+            n_admit = n
+            req_rate_now = required.get(svc, 0.0)
+            if (
+                degraded
+                and req_rate_now > 0
+                and capacity_rate < req_rate_now * (1.0 - 1e-9)
+            ):
+                kept, _ = admission.admit(float(n), capacity_rate * dt)
+                n_admit = int(kept)
+                shed = float(n - n_admit)
+            shed_by_svc[svc] = shed
+            # deterministic arrival offsets spread through the bin
+            reqs = [
+                tok.make_request(svc, t + (i + 0.5) * dt / n_admit, rng)
+                for i in range(n_admit)
+            ]
+            if members:
+                router = self._router_for(svc, members)
+                tok.dispatch(
+                    svc,
+                    [m[0] for m in members],
+                    lambda r=router: r.pick().instance_id,
+                    reqs,
+                )
+            else:
+                tok.dispatch(svc, [], lambda: 0, reqs)
+
+        # serving pass: advance every instance's clock to the bin edge
+        tok.serve_bin(t + dt)
+
+        # accounting pass; the last bin's window is open-ended so step
+        # overrun past the trace end still counts its completions
+        t1 = float("inf") if k == self.trace.num_bins - 1 else t + dt
+        for svc in self.trace.services:
+            members = by_svc.get(svc, [])
+            capacity_rate = sum(m[2] for m in members)
+            req_rate = required.get(svc, 0.0)
+            prev = self._tok_prev[svc]
+            pre = tok.metrics.preemptions[svc]
+            ref = tok.metrics.refusals[svc]
+            series = out[svc]
+            series["arrivals"].append(float(arrived[svc]))
+            series["served"].append(float(tok.completed_in(svc, t, t1)))
+            series["capacity"].append(capacity_rate * dt)
+            series["backlog"].append(float(tok.in_system(svc)))
+            series["required"].append(req_rate * dt)
+            series["attainment"].append(
+                min(1.0, capacity_rate / req_rate) if req_rate > 0 else 1.0
+            )
+            series["preempted"].append(float(pre - prev[0]))
+            series["refused"].append(float(ref - prev[1]))
+            self._tok_prev[svc] = [pre, ref]
+            if self._fault_mode:
+                series["shed"].append(shed_by_svc[svc])
+
     # -- main loop ---------------------------------------------------------------
     def run(self) -> SimReport:
         cfg = self.config
@@ -328,7 +477,9 @@ class ClusterSimulator:
         series_names = (
             "arrivals", "served", "capacity",
             "backlog", "required", "attainment",
-        ) + (("shed",) if self._fault_mode else ())
+        ) + (("shed",) if self._fault_mode else ()) + (
+            ("preempted", "refused") if self._token is not None else ()
+        )
         out: Dict[str, Dict[str, List[float]]] = {
             svc: {name: [] for name in series_names}
             for svc in trace.services
@@ -392,6 +543,16 @@ class ClusterSimulator:
                 shed=(
                     np.asarray(series["shed"]) if "shed" in series else None
                 ),
+                preempted=(
+                    np.asarray(series["preempted"])
+                    if "preempted" in series
+                    else None
+                ),
+                refused=(
+                    np.asarray(series["refused"])
+                    if "refused" in series
+                    else None
+                ),
             )
             for svc, series in out.items()
         }
@@ -405,6 +566,12 @@ class ClusterSimulator:
             reoptimize_checks=checks,
             final_gpus=self.cluster.gpus_in_use(),
             faults=self._faults,
+            serving_model=cfg.serving_model,
+            latency=(
+                self._token.latency_summary()
+                if self._token is not None
+                else None
+            ),
         )
 
     # -- device faults -----------------------------------------------------------

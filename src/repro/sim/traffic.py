@@ -68,10 +68,29 @@ class Trace:
 
     def mean_rates(self, t0: float, t1: float) -> Dict[str, float]:
         """Mean per-service rate over the window [t0, t1) — what a
-        re-optimizer observes from its metrics backend."""
+        re-optimizer observes from its metrics backend.
+
+        The mean is time-weighted: a bin only partially covered by the
+        window contributes in proportion to the overlap, so a window that is
+        not a bin multiple no longer over-weights its edge bins (the bias
+        the reoptimizer would otherwise observe whenever
+        ``reoptimize_every_s`` is not a multiple of ``bin_s``).  Bin-aligned
+        windows take the unweighted path, bit-identical to the historical
+        behavior (existing sim goldens depend on those exact bytes)."""
         k0, k1 = self.bin_of(t0), self.bin_of(max(t1 - 1e-9, t0))
+        edges = np.arange(k0, k1 + 2, dtype=np.float64) * self.bin_s
+        w = np.clip(
+            np.minimum(edges[1:], t1) - np.maximum(edges[:-1], t0), 0.0, None
+        )
+        total = float(w.sum())
+        if total <= 0.0 or np.all(w == self.bin_s):
+            return {
+                svc: float(np.mean(r[k0 : k1 + 1]))
+                for svc, r in self.rates.items()
+            }
         return {
-            svc: float(np.mean(r[k0 : k1 + 1])) for svc, r in self.rates.items()
+            svc: float(np.sum(r[k0 : k1 + 1] * w) / total)
+            for svc, r in self.rates.items()
         }
 
 

@@ -171,6 +171,66 @@ def test_unservable_request_does_not_block_later_requests():
     assert not big.done
 
 
+def test_failed_prefill_releases_pool_reservation():
+    """If prefill (or scatter) raises after the pages were reserved, the
+    reservation is rolled back: the free list is byte-identical and a retry
+    of the same rid succeeds instead of tripping the pool's rid assert."""
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(m, params, batch=2, max_len=MAX_LEN,
+                 kv_backend="paged", page_size=4, num_pages=8)
+    free_before = list(eng.pool._free)
+    req = Request(rid=0, prompt=np.arange(1, 6, dtype=np.int32),
+                  max_new_tokens=2)
+    good_prefill = eng._prefill
+
+    def boom(*a, **k):
+        raise RuntimeError("injected prefill failure")
+
+    eng._prefill = boom
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.admit(req)
+    assert eng.pool._free == free_before  # byte-identical pool
+    assert eng.num_live == 0 and eng.slots == [None, None]
+    assert req.out_tokens == []
+    eng._prefill = good_prefill
+    eng.admit(req)  # same rid re-admits cleanly
+    while eng.num_live:
+        eng.step()
+    assert req.done
+    assert eng.pool.free_pages == eng.pool.num_pages
+
+
+def test_top_k_ties_sample_exactly_k():
+    """top_k=k with tied logits must sample from exactly k candidates
+    (deterministic lowest-index tie order), never from every tied logit."""
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(m, params, batch=1, max_len=MAX_LEN,
+                 temperature=1.0, top_k=2)
+    logits = np.zeros(8, np.float32)
+    logits[[1, 3, 6]] = 5.0  # three-way tie for the top-2 cut
+    rng = np.random.default_rng(0)
+    drawn = {eng._sample(logits, rng) for _ in range(200)}
+    assert drawn == {1, 3}  # stable order keeps the lowest tied indices
+
+
+def test_equal_rid_requests_are_identity_compared():
+    """Two distinct requests sharing a rid (and prompt bytes) must not make
+    run_closed_loop's pending.remove() raise on numpy array equality."""
+    m, params = model_and_params("qwen3-8b")
+    eng = Engine(m, params, batch=1, max_len=MAX_LEN, kv_backend="flat")
+    prompt = np.arange(1, 5, dtype=np.int32)
+    r1 = Request(rid=7, prompt=prompt.copy(), max_new_tokens=2)
+    r2 = Request(rid=7, prompt=prompt.copy(), max_new_tokens=2)
+    assert r1 != r2  # identity, not field, comparison
+    stats = run_closed_loop(eng, [r1, r2])
+    assert stats.served == 2
+    assert r1.done and r2.done
+    assert r1.out_tokens == r2.out_tokens  # same prompt => same argmax tokens
+    # the run_closed_loop calibration hooks observed per-request latencies
+    assert len(stats.ttft_s) == 2 and all(t >= 0.0 for t in stats.ttft_s)
+    assert len(stats.tpot_s) == 2
+
+
 def test_admit_rejects_context_longer_than_max_len():
     m, params = model_and_params("qwen3-8b")
     eng = Engine(m, params, batch=1, max_len=8)

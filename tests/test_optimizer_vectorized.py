@@ -278,6 +278,7 @@ def test_core_and_sim_stay_jax_free():
     code = (
         "import sys; import repro.core, repro.sim, repro.controlplane; "
         "import repro.core.zoo, repro.sim.scenarios; "  # the scheduler zoo + matrix
+        "import repro.sim.servemodel; "  # the token-level serving model
         "import repro.controlplane.reconciler, repro.controlplane.faults; "
         "bad = [m for m in sys.modules if m == 'jax' or m.startswith('jax.')]; "
         "assert not bad, f'jax leaked into the numpy-only core: {bad}'; "

@@ -37,28 +37,37 @@ from repro.sim import (
 def test_default_matrix_covers_the_required_axes():
     """Acceptance floor: >= 2 trace shapes x >= 4 schedulers (incl. both new
     zoo policies) x >= 2 scales, plus the curated fault slice covering
-    every registered fault profile."""
+    every registered fault profile and the curated token-serving slice."""
     cells = default_matrix()
-    none_cells = [c for c in cells if c.fault == "none"]
+    fluid_cells = [
+        c for c in cells if c.fault == "none" and c.serving == "fluid"
+    ]
     fault_cells = [c for c in cells if c.fault != "none"]
-    traces = {c.trace for c in none_cells}
-    scheds = {c.scheduler for c in none_cells}
-    scales = {c.scale for c in none_cells}
+    token_cells = [c for c in cells if c.serving == "token"]
+    traces = {c.trace for c in fluid_cells}
+    scheds = {c.scheduler for c in fluid_cells}
+    scales = {c.scale for c in fluid_cells}
     assert len(traces) >= 2
     assert len(scheds) >= 4 and {"frag", "energy"} <= scheds
     assert len(scales) >= 2
-    assert len(none_cells) == (
+    assert len(fluid_cells) == (
         len(traces) * len(scheds) * len(scales) * len(SLO_POLICIES)
     )
     # the fifth axis: every non-none fault profile appears in the slice
     assert {c.fault for c in fault_cells} == set(FAULT_PROFILES) - {"none"}
+    # the sixth axis: the token slice runs flash + surge at micro scale
+    assert {c.trace for c in token_cells} == {"flash", "surge"}
+    assert all(c.scale == "micro" for c in token_cells)
     assert len(set(c.name for c in cells)) == len(cells)  # names are unique
 
 
 def test_smoke_matrix_exercises_both_new_schedulers():
     scheds = {c.scheduler for c in smoke_matrix()}
     assert {"frag", "energy"} <= scheds
-    assert all(c.scale == "small" for c in smoke_matrix())
+    fluid = [c for c in smoke_matrix() if c.serving == "fluid"]
+    assert all(c.scale == "small" for c in fluid)
+    # one token-serving cell keeps the discrete model in every CI run
+    assert any(c.serving == "token" for c in smoke_matrix())
 
 
 def test_registries_are_consistent():
@@ -68,6 +77,16 @@ def test_registries_are_consistent():
         assert cell.scale in SCALES
         assert cell.slo in SLO_POLICIES
         assert cell.fault in FAULT_PROFILES
+        assert cell.serving in ("fluid", "token")
+
+
+def test_token_cell_name_is_suffixed_and_fluid_names_unchanged():
+    """Fluid cells keep their exact historical names (report documents are
+    keyed by them); token cells append the serving segment."""
+    fluid = ScenarioCell("surge", "greedy", "small", "uniform")
+    assert fluid.name == "surge/greedy/small/uniform/none"
+    token = ScenarioCell("flash", "greedy", "micro", "uniform", serving="token")
+    assert token.name == "flash/greedy/micro/uniform/none/token"
 
 
 # -- cell execution and schema ---------------------------------------------------

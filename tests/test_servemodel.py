@@ -1,0 +1,395 @@
+"""Token-level serving model tests (repro.sim.servemodel).
+
+Pins the properties ISSUE 6 names for ``SimConfig.serving_model="token"``:
+
+* golden pin — the curated token scenario cell's seeded report SHA and its
+  TTFT/TPOT/queue-delay summary are recorded byte-for-byte in
+  ``tests/golden/servemodel_golden.json`` (same contract as the optimizer
+  and scheduler-zoo goldens), alongside a fluid-cell SHA pin proving the
+  token-model wiring left the fluid path's bytes untouched.  Regenerate
+  (only on intentional behavior changes) with::
+
+      PYTHONPATH=src python tests/test_servemodel.py --regen
+
+* determinism — same seed, byte-identical token ``SimReport.to_json()``;
+  the token-only keys (serving_model / latency / preempted / refused) are
+  present in token mode and absent in fluid mode.
+* conservation — every drawn arrival is accounted for: per service,
+  ``sum(arrivals) == completed + in_system`` (and the served series sums to
+  the completion count), over arbitrary seeds.
+* calibration — the §8.3 loop: a real Engine run feeds a
+  ``MeasuredProfile``; the token model built on the corrected profile
+  reproduces the engine's measured throughput within tolerance.
+* unit coverage of the engine-twin mechanics: page-pool floor, admission
+  refusals, mid-decode preemption + resume, max_len truncation, TTFT and
+  queue-delay observation, instance-loss spill.
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+if __name__ == "__main__":  # regen mode runs without pytest/conftest
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import SyntheticPaperProfiles, a100_rules
+from repro.core.online_profiles import MeasuredProfile
+from repro.sim import (
+    ClusterSimulator,
+    ScenarioCell,
+    SimConfig,
+    TokenKnobs,
+    TokenRequest,
+    TokenServingState,
+    Trace,
+    run_cell,
+)
+from repro.sim.servemodel import InstanceModel, TokenMetrics
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "golden", "servemodel_golden.json"
+)
+
+# the curated token slice's smoke cell (also in smoke_matrix / CI)
+TOKEN_CELL = ScenarioCell("flash", "greedy", "micro", "uniform", serving="token")
+# a historical fluid cell: its SHA must never move when token code changes
+FLUID_PIN_CELL = ScenarioCell("diurnal", "greedy", "small", "uniform")
+
+
+def compute_golden():
+    golden = {"schema": 1, "token_cells": {}, "fluid_pin": {}}
+    res, rep = run_cell(TOKEN_CELL, seed=0)
+    golden["token_cells"][f"{TOKEN_CELL.name}@seed0"] = {
+        "report_sha256": res.report_sha256,
+        "latency": rep.latency,
+    }
+    fres, _ = run_cell(FLUID_PIN_CELL, seed=0)
+    golden["fluid_pin"] = {
+        "cell": FLUID_PIN_CELL.name,
+        "seed": 0,
+        "report_sha256": fres.report_sha256,
+    }
+    return golden
+
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+# -- golden pins -----------------------------------------------------------------
+
+
+def test_servemodel_golden_file_exists():
+    assert os.path.exists(GOLDEN_PATH), (
+        "golden file missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_servemodel.py --regen`"
+    )
+
+
+def test_token_cell_and_fluid_pin_match_golden():
+    got = compute_golden()
+    want = _load_golden()
+    assert got["fluid_pin"] == want["fluid_pin"], (
+        "the fluid path's bytes moved — the token model must leave "
+        "serving_model='fluid' runs bit-identical"
+    )
+    assert got["token_cells"] == want["token_cells"], (
+        "token-model seeded output diverged from the recorded behavior"
+    )
+
+
+# -- a tiny direct token simulation (no scenario harness) -------------------------
+
+
+def _token_sim(seed, serving_model="token"):
+    prof = SyntheticPaperProfiles(n_models=2, seed=2)
+    svcs = sorted(prof.services())
+    rates = {
+        svcs[0]: np.array([30.0, 30.0, 90.0, 90.0, 30.0, 30.0]),
+        svcs[1]: np.full(6, 20.0),
+    }
+    trace = Trace(bin_s=20.0, rates=rates)
+    cfg = SimConfig(
+        reoptimize_every_s=60.0,
+        seed=seed,
+        serving_model=serving_model,
+        token_knobs=(
+            TokenKnobs(profiled_decode_tokens=4)
+            if serving_model == "token"
+            else None
+        ),
+    )
+    return ClusterSimulator(a100_rules(), prof, trace, cfg)
+
+
+# -- determinism + serialization schema -------------------------------------------
+
+
+def test_same_seed_byte_identical_token_report():
+    r1 = _token_sim(5).run()
+    r2 = _token_sim(5).run()
+    assert r1.to_json() == r2.to_json()
+    r3 = _token_sim(6).run()
+    assert r1.to_json() != r3.to_json()  # the seed actually flows through
+
+
+def test_token_keys_only_serialized_in_token_mode():
+    tok = _token_sim(1).run().to_dict()
+    assert tok["serving_model"] == "token"
+    assert isinstance(tok["latency"], dict) and "_totals" in tok["latency"]
+    for tl in tok["timelines"].values():
+        assert "preempted" in tl and "refused" in tl
+    fluid = _token_sim(1, serving_model="fluid").run().to_dict()
+    assert "serving_model" not in fluid and "latency" not in fluid
+    for tl in fluid["timelines"].values():
+        assert "preempted" not in tl and "refused" not in tl
+
+
+def test_token_latency_summary_schema():
+    rep = _token_sim(2).run()
+    tot = rep.latency["_totals"]
+    assert set(tot) == {"preemptions", "refusals", "completed"}
+    for svc in rep.services:
+        entry = rep.latency[svc]
+        for prefix in ("ttft", "tpot", "queue_delay"):
+            for p in (50, 95, 99):
+                assert entry[f"{prefix}_p{p}_s"] >= 0.0
+        # percentiles are monotone
+        assert entry["ttft_p50_s"] <= entry["ttft_p95_s"] <= entry["ttft_p99_s"]
+    assert tot["completed"] == sum(
+        rep.latency[s]["completed"] for s in rep.services
+    )
+
+
+# -- conservation ------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=4, deadline=None)
+def test_every_arrival_is_accounted_for(seed):
+    """Discrete requests cannot leak: per service, the drawn arrivals all
+    end up either completed or still in the system, and the per-bin served
+    series sums to exactly the completion count."""
+    rep = _token_sim(seed).run()
+    for svc in rep.services:
+        tl = rep.timelines[svc]
+        arrived = int(np.sum(tl.arrivals))
+        served = int(np.sum(tl.served))
+        completed = rep.latency[svc]["completed"]
+        in_system = rep.latency[svc]["in_system"]
+        assert served == completed
+        assert arrived == completed + in_system, (
+            svc, arrived, completed, in_system,
+        )
+        # final backlog sample agrees with the in-system count
+        assert int(tl.backlog[-1]) == in_system
+
+
+# -- calibration against the real Engine (§8.3) -----------------------------------
+
+
+def test_token_model_calibrates_to_measured_engine_throughput():
+    """The MeasuredProfile loop: run the real Engine, feed its measured
+    throughput into the profile (ewma=1.0 -> corrected == measured), build
+    the token model on the corrected profile with the engine's geometry,
+    and check the model reproduces the engine's request throughput."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.serving import Engine, Request, run_closed_loop
+
+    BATCH, MAX_LEN, PROMPT, DECODE = 4, 64, 6, 8
+    cfg = get_smoke_config("qwen3-8b")
+    m = Model(cfg, remat=False)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    eng = Engine(
+        m, params, batch=BATCH, max_len=MAX_LEN,
+        kv_backend="paged", page_size=4, num_pages=8 * BATCH,
+    )
+    rng = np.random.default_rng(0)
+
+    def make_reqs(n, rid0=0):
+        return [
+            Request(
+                rid=rid0 + i,
+                prompt=rng.integers(1, cfg.vocab_size, size=PROMPT).astype(
+                    np.int32
+                ),
+                max_new_tokens=DECODE,
+            )
+            for i in range(n)
+        ]
+
+    run_closed_loop(eng, make_reqs(BATCH))  # warm the jit caches
+    base = SyntheticPaperProfiles(n_models=2, seed=2)
+    svc = sorted(base.services())[0]
+    measured = MeasuredProfile(base, ewma=1.0)
+    N = 24
+    stats = run_closed_loop(
+        eng, make_reqs(N, rid0=100), measured=measured, service=svc, size=1
+    )
+    assert stats.served == N
+    assert measured.correction(svc, 1) != 1.0  # the observation landed
+
+    # token model on the corrected profile, matching the engine's shape;
+    # page pool oversized on both sides so KV pressure plays no role here
+    knobs = TokenKnobs(
+        prompt_tokens=PROMPT,
+        decode_tokens=DECODE,
+        profiled_decode_tokens=DECODE,
+        max_len=MAX_LEN,
+        page_size=4,
+        hbm_gb_per_unit=1.0,
+        prefill_chunk=PROMPT,
+    )
+    state = TokenServingState([svc], measured, lambda s: 1e9, knobs)
+    inst = InstanceModel(
+        0, svc, 1, slots=BATCH, knobs=knobs,
+        step_time_s=state.step_time_for(svc, 1), now=0.0,
+    )
+    metrics = TokenMetrics([svc])
+    for i in range(N):
+        inst.queue.append(TokenRequest(i, svc, 0.0, PROMPT, DECODE))
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at[svc]) == N
+    makespan = max(metrics.completed_at[svc])
+    model_tput = N / makespan
+    rel = abs(model_tput - stats.throughput) / stats.throughput
+    assert rel <= 0.35, (
+        f"token model {model_tput:.2f} req/s vs engine "
+        f"{stats.throughput:.2f} req/s (rel err {rel:.2f})"
+    )
+
+
+# -- engine-twin mechanics ---------------------------------------------------------
+
+
+def _small_knobs(**over):
+    kw = dict(
+        prompt_tokens=8, decode_tokens=4, max_len=16, page_size=4,
+        hbm_gb_per_unit=1e-12,  # floor-limited pool: max_pages_per_req pages
+        prefill_chunk=4,
+    )
+    kw.update(over)
+    return TokenKnobs(**kw)
+
+
+def _instance(knobs, slots=4, svc="svc"):
+    return InstanceModel(
+        0, svc, 1, slots=slots, knobs=knobs,
+        step_time_s=lambda b: 0.01, now=0.0,
+    )
+
+
+def test_num_pages_flooring_fits_one_max_context_request():
+    knobs = _small_knobs()
+    # max_len 16 + the one-ahead decode write, page_size 4 -> 5 pages
+    assert knobs.max_pages_per_req == 5
+    assert knobs.num_pages(1) == 5  # tiny budget floors at one full request
+    big = TokenKnobs(max_len=16, page_size=4, hbm_gb_per_unit=1.0)
+    assert big.num_pages(2) == 2 * big.num_pages(1) > big.max_pages_per_req
+
+
+def test_admission_refusal_counts_and_recovers():
+    """Two long-prompt requests against a one-request pool: the second is
+    refused (OutOfPages) until the first finishes, then completes — and the
+    refusal counter records each failed admission attempt."""
+    knobs = _small_knobs()
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    # prompt 10 -> reserve 11 tokens = 3 of the 5 pages; two cannot coexist
+    inst.queue.append(TokenRequest(0, "svc", 0.0, 10, 2))
+    inst.queue.append(TokenRequest(1, "svc", 0.0, 10, 2))
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at["svc"]) == 2
+    assert metrics.refusals["svc"] >= 1
+    assert inst.in_system == 0
+    # both requests got TTFT + queue-delay observations; the refused one
+    # waited, so its queueing delay is strictly positive
+    assert len(metrics.ttft_s["svc"]) == 2
+    assert len(metrics.queue_delay_s["svc"]) == 2
+    assert max(metrics.queue_delay_s["svc"]) > 0.0
+    assert min(metrics.queue_delay_s["svc"]) == 0.0
+
+
+def test_mid_decode_preemption_resumes_and_completes():
+    """Exact-fit pool: two live requests decode until one cannot grow its
+    pages, gets preempted (pages released, generated tokens kept), resumes,
+    and still completes its full budget."""
+    knobs = _small_knobs()
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    # A: prompt 10 -> 3 pages; B: prompt 6 -> 2 pages; pool is 5 pages, so
+    # the first mid-decode page growth must preempt somebody
+    a = TokenRequest(0, "svc", 0.0, 10, 4)
+    b = TokenRequest(1, "svc", 0.0, 6, 8)
+    inst.queue.extend([a, b])
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at["svc"]) == 2
+    assert metrics.preemptions["svc"] >= 1
+    assert a.preemptions + b.preemptions == metrics.preemptions["svc"]
+    assert inst.in_system == 0
+    assert len(inst.pool._free) == knobs.num_pages(1)  # all pages returned
+
+
+def test_max_len_truncates_like_the_engine():
+    knobs = _small_knobs(hbm_gb_per_unit=1.0)
+    inst = _instance(knobs, slots=1)
+    metrics = TokenMetrics(["svc"])
+    req = TokenRequest(0, "svc", 0.0, 10, 20)  # budget exceeds context room
+    inst.queue.append(req)
+    inst.run_until(1e9, metrics)
+    assert req.finish_s > 0.0
+    assert req.context_len == knobs.max_len  # truncated at the cap
+    assert req.generated == knobs.max_len - 10 < 20
+
+
+def test_make_request_draws_are_servable_and_rids_unique():
+    prof = SyntheticPaperProfiles(n_models=2, seed=2)
+    svc = sorted(prof.services())[0]
+    state = TokenServingState([svc], prof, lambda s: 100.0, TokenKnobs())
+    rng = np.random.default_rng(0)
+    reqs = [state.make_request(svc, 0.0, rng) for _ in range(300)]
+    assert len({r.rid for r in reqs}) == len(reqs)
+    for r in reqs:
+        assert r.prompt_tokens >= 1 and r.decode_tokens >= 1
+        # prompt + budget + the one-ahead write always fit the context cap
+        assert r.prompt_tokens + r.decode_tokens < state.knobs.max_len
+
+
+def test_vanished_instance_spills_requests_and_counts_preemptions():
+    prof = SyntheticPaperProfiles(n_models=2, seed=2)
+    svc = sorted(prof.services())[0]
+    state = TokenServingState(
+        [svc], prof, lambda s: 100.0, _small_knobs(hbm_gb_per_unit=1.0)
+    )
+    state.sync_instances({7: (svc, 1, 50.0)}, lambda uid: 1.0, 0.0)
+    inst = state.instances[7]
+    inst.queue.append(TokenRequest(0, svc, 0.0, 4, 8))
+    inst.queue.append(TokenRequest(1, svc, 5.0, 4, 8))
+    inst.run_until(0.01, state.metrics)  # admit the first, second still queued
+    assert len(inst.live) == 1 and len(inst.queue) == 1
+    state.sync_instances({}, lambda uid: 1.0, 10.0)  # the instance vanished
+    assert not state.instances
+    assert len(state.spill[svc]) == 2  # live + queued both spilled
+    assert state.metrics.preemptions[svc] == 1  # only the in-flight one
+    assert state.in_system(svc) == 2
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        data = compute_golden()
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print("run under pytest, or with --regen to rewrite the golden file")

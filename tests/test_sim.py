@@ -114,6 +114,18 @@ class TestTraffic:
         assert tr.mean_rates(0, 120)["a"] == pytest.approx(15.0)
         assert tr.mean_rates(120, 240)["a"] == pytest.approx(35.0)
 
+    def test_mean_rates_weights_partial_edge_bins(self):
+        """A window that is not a bin multiple must weight edge bins by
+        overlap: [30, 120) covers 30s of bin 0 and 60s of bin 1."""
+        tr = replay_trace({"a": [10.0, 20.0, 30.0, 40.0]}, bin_s=60.0)
+        want = (10.0 * 30.0 + 20.0 * 60.0) / 90.0  # not the naive 15.0
+        assert tr.mean_rates(30, 120)["a"] == pytest.approx(want)
+        # both edges partial: [30, 90) = 30s of each bin
+        assert tr.mean_rates(30, 90)["a"] == pytest.approx(15.0)
+        # bin-aligned windows stay bit-identical to the unweighted mean
+        aligned = tr.mean_rates(60, 180)["a"]
+        assert aligned == float(np.mean(np.asarray([20.0, 30.0])))
+
 
 # -- events ---------------------------------------------------------------------
 
