@@ -26,6 +26,9 @@ Usage::
         --cell surge:greedy:small:uniform:gpu_loss  # one cell, no full matrix
     PYTHONPATH=src python benchmarks/bench_scenarios.py \\
         --cell flash:greedy:micro:uniform:none:token  # token serving model
+    PYTHONPATH=src python benchmarks/bench_scenarios.py \\
+        --cell flash:greedy:micro:uniform:instance_crash:token:mixed
+                              # overload cell: priority classes + crash fault
 """
 
 from __future__ import annotations
@@ -60,6 +63,8 @@ def leaderboard(cells: Dict[str, Dict]) -> List[str]:
         key = "{trace}/{scale}/{slo}/{fault}".format(**c["cell"])
         if c["cell"].get("serving", "fluid") != "fluid":
             key += "/" + c["cell"]["serving"]
+        if c["cell"].get("priority", "none") != "none":
+            key += "/" + c["cell"]["priority"]
         groups.setdefault(key, []).append(c)
     lines = []
     for key in sorted(groups):
@@ -79,16 +84,17 @@ def leaderboard(cells: Dict[str, Dict]) -> List[str]:
 
 
 def parse_cell(spec: str) -> ScenarioCell:
-    """``trace:sched:scale:slo[:fault[:serving]]`` -> a validated
+    """``trace:sched:scale:slo[:fault[:serving[:priority]]]`` -> a validated
     ScenarioCell."""
     from repro.sim.scenarios import (
-        FAULT_PROFILES, SCALES, SCHEDULERS, SLO_POLICIES, TRACE_SHAPES,
+        FAULT_PROFILES, PRIORITY_MIXES, SCALES, SCHEDULERS, SLO_POLICIES,
+        TRACE_SHAPES,
     )
 
     parts = spec.split(":")
-    if len(parts) not in (4, 5, 6):
+    if len(parts) not in (4, 5, 6, 7):
         raise SystemExit(
-            f"--cell wants trace:sched:scale:slo[:fault[:serving]],"
+            f"--cell wants trace:sched:scale:slo[:fault[:serving[:priority]]],"
             f" got {spec!r}"
         )
     cell = ScenarioCell(*parts)
@@ -99,6 +105,7 @@ def parse_cell(spec: str) -> ScenarioCell:
         (cell.slo, SLO_POLICIES, "slo"),
         (cell.fault, FAULT_PROFILES, "fault"),
         (cell.serving, ("fluid", "token"), "serving"),
+        (cell.priority, PRIORITY_MIXES, "priority"),
     ):
         if value not in registry:
             raise SystemExit(
@@ -176,6 +183,11 @@ def main() -> int:
             token_bits = (
                 f" ttft_p95={ttft_p95:.2f}s preempt={tot['preemptions']}"
                 f" refuse={tot['refusals']}"
+            )
+        if res.priority is not None:
+            token_bits += " " + " ".join(
+                f"{cls}={v['goodput']}/{v['arrivals']}"
+                for cls, v in res.priority.items()
             )
         print(
             f"[{cell.name}] gpus_peak={res.gpus_peak} asis={res.gpus_asis}"

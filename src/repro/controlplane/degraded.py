@@ -23,7 +23,7 @@ or after an outage, keep the fluid-queue backlog semantics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import List, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -44,3 +44,70 @@ class AdmissionController:
             return demand, 0.0
         admitted = max(capacity, demand * self.min_admit_frac)
         return admitted, demand - admitted
+
+    def admit_by_class(
+        self,
+        demands: Sequence[Tuple[int, float, float]],
+        capacity: float,
+    ) -> List[Tuple[float, float]]:
+        """Priority-aware shedding: split each ``(priority_class, weight,
+        demand)`` entry into ``(admitted, shed)`` under a shared capacity.
+
+        Classes are served in priority order (class index 0 first): a class
+        is shed only after every higher class is fully admitted, so the
+        excess lands lowest-class-first.  The one *marginal* class that the
+        remaining capacity only partially covers splits it across its
+        entries by weighted max-min fairness (water-filling: each entry's
+        share grows in proportion to its weight until its demand is met,
+        surplus re-flows to the still-hungry), never by who asked loudest.
+        ``min_admit_frac`` keeps its per-entry floor.  Deterministic, order
+        preserving: the result aligns with the input sequence, and
+        ``admitted + shed == demand`` holds exactly per entry."""
+        out: List[Tuple[float, float]] = [(0.0, 0.0)] * len(demands)
+        remaining = max(float(capacity), 0.0)
+        for cls in sorted({c for c, _, _ in demands}):
+            idx = [
+                i
+                for i, (c, _, d) in enumerate(demands)
+                if c == cls and d > 0.0
+            ]
+            total = sum(demands[i][2] for i in idx)
+            if total <= remaining:
+                for i in idx:
+                    out[i] = (demands[i][2], 0.0)
+                remaining -= total
+                continue
+            # marginal class: weighted water-filling of what's left
+            alloc = {i: 0.0 for i in idx}
+            budget = remaining
+            hungry = list(idx)
+            while budget > 1e-12 and hungry:
+                wsum = sum(max(demands[i][1], 0.0) for i in hungry)
+                if wsum <= 0.0:
+                    # all-zero weights degenerate to equal split
+                    share = {i: budget / len(hungry) for i in hungry}
+                else:
+                    share = {
+                        i: budget * max(demands[i][1], 0.0) / wsum
+                        for i in hungry
+                    }
+                budget = 0.0
+                nxt = []
+                for i in hungry:
+                    room = demands[i][2] - alloc[i]
+                    take = min(share[i], room)
+                    alloc[i] += take
+                    budget += share[i] - take
+                    if alloc[i] < demands[i][2] - 1e-12:
+                        nxt.append(i)
+                if len(nxt) == len(hungry) and budget <= 1e-12:
+                    break
+                hungry = nxt
+            for i in idx:
+                d = demands[i][2]
+                admitted = min(
+                    max(alloc[i], d * self.min_admit_frac), d
+                )
+                out[i] = (admitted, d - admitted)
+            remaining = 0.0
+        return out

@@ -44,6 +44,13 @@ class FaultProfile:
     # node drains (cordon a whole machine; instances migrate off)
     node_drains: int = 0
     drain_window: Tuple[float, float] = (0.3, 0.6)
+    # serving-path faults: an instance's *process* dies mid-decode — the
+    # device stays healthy (no repair transition), but every in-flight
+    # request on it loses its KV cache and spills for retry.  Only the
+    # token serving model can represent this; under the fluid model the
+    # instance's backlog re-spills to the service level instead.
+    instance_crashes: int = 0
+    crash_window: Tuple[float, float] = (0.25, 0.7)
     # MIG repartition attempts error with this probability; the reconciler
     # retries under exponential backoff.  Creates carve a MIG slice — the
     # same GI/CI reconfiguration — so they get their own error knob.
@@ -73,7 +80,11 @@ class FaultProfile:
 
     @property
     def injects_devices(self) -> bool:
-        return self.gpu_failures > 0 or self.node_drains > 0
+        return (
+            self.gpu_failures > 0
+            or self.node_drains > 0
+            or self.instance_crashes > 0
+        )
 
 
 FAULT_PROFILES: Dict[str, FaultProfile] = {}
@@ -104,6 +115,9 @@ register_fault_profile(
     )
 )
 register_fault_profile(
+    FaultProfile("instance_crash", instance_crashes=2)
+)
+register_fault_profile(
     FaultProfile(
         "chaos",
         gpu_failures=2,
@@ -127,7 +141,7 @@ class DeviceFault:
     """One scheduled device-level fault (target picked at fire time)."""
 
     time_s: float
-    kind: str  # "gpu_failure" | "node_drain"
+    kind: str  # "gpu_failure" | "node_drain" | "instance_crash"
 
 
 class FaultInjector:
@@ -156,6 +170,13 @@ class FaultInjector:
         for _ in range(p.node_drains):
             t = float(self.rng.uniform(lo, hi)) * self.duration_s
             faults.append(DeviceFault(t, "node_drain"))
+        # crash draws come AFTER the historical ones: pre-existing profiles
+        # consume the rng in the same order, so their schedules (and every
+        # golden pinned on them) stay byte-identical
+        lo, hi = p.crash_window
+        for _ in range(p.instance_crashes):
+            t = float(self.rng.uniform(lo, hi)) * self.duration_s
+            faults.append(DeviceFault(t, "instance_crash"))
         faults.sort(key=lambda f: f.time_s)
         return faults
 
@@ -172,6 +193,12 @@ class FaultInjector:
 
     def pick_machine(self, machines: List[int]) -> Optional[int]:
         cands = sorted(machines)
+        if not cands:
+            return None
+        return cands[int(self.rng.integers(len(cands)))]
+
+    def pick_instance(self, busy_uids: List[int]) -> Optional[int]:
+        cands = sorted(busy_uids)
         if not cands:
             return None
         return cands[int(self.rng.integers(len(cands)))]

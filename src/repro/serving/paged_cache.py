@@ -63,9 +63,17 @@ class PagePool:
         self._requests[rid] = r
         return r
 
-    def release(self, rid: int) -> None:
-        r = self._requests.pop(rid)
+    def release(self, rid: int) -> bool:
+        """Return ``rid``'s pages to the free list.  Releasing a request the
+        pool no longer holds (a preempt racing a finish/drain, or a release
+        after a crash replaced the pool) is a deterministic no-op returning
+        False — never a double free-list insertion, which would let two
+        requests share a page and corrupt both caches."""
+        r = self._requests.pop(rid, None)
+        if r is None:
+            return False
         self._free.extend(r.page_ids)
+        return True
 
     def abort(self, rid: int) -> None:
         """Undo a *fresh* admission whose pages came from one

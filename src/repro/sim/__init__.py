@@ -26,6 +26,7 @@ from repro.sim.report import (
     TransitionRecord,
 )
 from repro.sim.scenarios import (
+    PRIORITY_MIXES,
     SCALES,
     SCHEDULERS,
     SLO_POLICIES,
@@ -47,6 +48,8 @@ from repro.sim.servemodel import (
 )
 from repro.sim.simulator import ClusterSimulator, SimConfig
 from repro.sim.traffic import (
+    PRIORITY_CLASSES,
+    PriorityMix,
     Trace,
     correlated_surge_trace,
     diurnal_trace,
@@ -64,4 +67,5 @@ __all__ = [
     "TRACE_SHAPES", "CellResult", "ScaleSpec", "ScenarioCell", "build_cell",
     "default_matrix", "run_cell", "run_matrix", "smoke_matrix",
     "InstanceModel", "TokenKnobs", "TokenRequest", "TokenServingState",
+    "PRIORITY_CLASSES", "PRIORITY_MIXES", "PriorityMix",
 ]

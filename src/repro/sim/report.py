@@ -48,11 +48,15 @@ class FaultRecord:
     """One injected device-level fault (repro.controlplane.faults)."""
 
     time_s: float
-    kind: str  # "gpu_failure" | "node_drain"
-    target: int  # gpu id (failure) or machine id (drain)
+    kind: str  # "gpu_failure" | "node_drain" | "instance_crash"
+    target: int  # gpu id (failure), machine id (drain) or uid (crash)
     fault_domain: str
     killed_instances: int
     lost_throughput: Dict[str, float]  # per-service req/s that vanished
+    # instance_crash only: in-flight requests (token mode) or backlogged
+    # fluid requests that spilled with their work lost.  Serialized only
+    # for crash records so historical fault-profile bytes stay identical.
+    spilled: float = 0.0
 
     def to_dict(self) -> Dict:
         return {
@@ -62,6 +66,11 @@ class FaultRecord:
             "fault_domain": self.fault_domain,
             "killed_instances": self.killed_instances,
             "lost_throughput": dict(sorted(self.lost_throughput.items())),
+            **(
+                {"spilled": self.spilled}
+                if self.kind == "instance_crash"
+                else {}
+            ),
         }
 
 
@@ -82,6 +91,10 @@ class ServiceTimeline:
     # mode so fluid serializations keep their exact pre-token bytes)
     preempted: Optional[np.ndarray] = None  # KV-pressure preemptions per bin
     refused: Optional[np.ndarray] = None  # OutOfPages admission refusals
+    # resilience path only (token mode + priority mix; None otherwise so
+    # no-priority token serializations keep their exact bytes)
+    deadline_dropped: Optional[np.ndarray] = None  # expired-in-queue drops
+    retry_dropped: Optional[np.ndarray] = None  # retry-budget exhaustions
 
 
 @dataclasses.dataclass
@@ -104,6 +117,11 @@ class SimReport:
     # per-service TTFT/TPOT/queueing-delay percentiles + "_totals" counts,
     # as produced by TokenServingState.latency_summary()
     latency: Optional[Dict] = None
+    # per-priority-class goodput / SLO-attainment / drop / retry totals, as
+    # produced by TokenServingState.priority_summary(); present only when a
+    # priority mix is active (the serializer omits the key otherwise so
+    # no-priority reports keep their exact bytes)
+    priority: Optional[Dict] = None
 
     # -- derived -----------------------------------------------------------------
     def slo_satisfaction(self, svc: str) -> float:
@@ -209,6 +227,18 @@ class SimReport:
                         if tl.refused is not None
                         else {}
                     ),
+                    # keys present only on the resilience path (token +
+                    # priority mix) — no-priority bytes must not change
+                    **(
+                        {"deadline_dropped": arr(tl.deadline_dropped)}
+                        if tl.deadline_dropped is not None
+                        else {}
+                    ),
+                    **(
+                        {"retry_dropped": arr(tl.retry_dropped)}
+                        if tl.retry_dropped is not None
+                        else {}
+                    ),
                 }
                 for svc, tl in sorted(self.timelines.items())
             },
@@ -251,6 +281,13 @@ class SimReport:
                 if self.serving_model != "fluid"
                 else {}
             ),
+            # priority-mix resilience path only: no-priority reports (token
+            # or fluid) omit the key so their bytes stay identical
+            **(
+                {"priority": self.priority}
+                if self.priority is not None
+                else {}
+            ),
         }
 
     def to_json(self) -> str:
@@ -288,11 +325,25 @@ class SimReport:
                     f" tpot p50={s['tpot_p50_s'] * 1e3:.1f}ms"
                     f" queue p99={s['queue_delay_p99_s']:.3f}s"
                 )
+        if self.priority is not None:
+            for cls, s in self.priority.items():
+                lines.append(
+                    f"  class {cls}: goodput={s['goodput']}/{s['arrivals']}"
+                    f" (slo {s['slo_attainment']:.1%})"
+                    f" deadline_dropped={s['deadline_dropped']}"
+                    f" retry_dropped={s['retry_dropped']}"
+                    f" shed={s['shed']} retries={s['retries']}"
+                )
         for f in self.faults:
+            spill = (
+                f" spilled={f.spilled:.0f}"
+                if f.kind == "instance_crash"
+                else ""
+            )
             lines.append(
                 f"  FAULT t={f.time_s:.0f}s {f.kind} target={f.target}"
                 f" ({f.fault_domain}) killed={f.killed_instances}"
-                f" lost={dict(sorted(f.lost_throughput.items()))}"
+                f" lost={dict(sorted(f.lost_throughput.items()))}" + spill
             )
         for i, t in enumerate(self.transitions):
             extra = ""

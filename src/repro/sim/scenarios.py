@@ -71,6 +71,7 @@ from repro.sim.report import SimReport
 from repro.sim.servemodel import TokenKnobs
 from repro.sim.simulator import ClusterSimulator, SimConfig
 from repro.sim.traffic import (
+    PriorityMix,
     Trace,
     correlated_surge_trace,
     diurnal_trace,
@@ -168,16 +169,18 @@ class ScenarioCell:
     slo: str = "uniform"
     fault: str = "none"  # FAULT_PROFILES name; != "none" => control plane
     serving: str = "fluid"  # SimConfig.serving_model: "fluid" | "token"
+    priority: str = "none"  # PRIORITY_MIXES name; != "none" => resilience
 
     @property
     def name(self) -> str:
-        # the serving suffix appears only off the default, so every
-        # pre-existing cell keeps its exact historical name (and the report
-        # documents keyed by it stay comparable)
+        # the serving/priority suffixes appear only off their defaults, so
+        # every pre-existing cell keeps its exact historical name (and the
+        # report documents keyed by it stay comparable)
         return (
             f"{self.trace}/{self.scheduler}/{self.scale}/{self.slo}"
             f"/{self.fault}"
             + (f"/{self.serving}" if self.serving != "fluid" else "")
+            + (f"/{self.priority}" if self.priority != "none" else "")
         )
 
 
@@ -203,6 +206,41 @@ TOKEN_SLICE_TRACES = ("flash", "surge")
 # points, producing the queueing/preemption dynamics the cell exists to show
 TOKEN_SLICE_KNOBS = TokenKnobs(profiled_decode_tokens=4)
 
+# priority-mix registry (the seventh axis): "none" keeps every historical
+# code path; "mixed" is the curated overload mix — a fifth of traffic is
+# latency-critical with a tight deadline, most is standard, the tail is
+# deadline-less batch.  Deadlines are sized against the micro-scale token
+# cells' TTFT distribution so an overloaded bin produces real deadline
+# drops without collapsing goodput outright.
+PRIORITY_MIXES: Dict[str, Optional[PriorityMix]] = {
+    "none": None,
+    "mixed": PriorityMix(
+        weights=(0.2, 0.6, 0.2),
+        deadline_s=(3.0, 12.0, float("inf")),
+    ),
+}
+
+# the overload slice (curated like the fault and token slices): adversarial
+# traffic x the "mixed" priority load x a serving-path fault, at the
+# request-level scale.  The instance-crash cells put the crash-spill /
+# retry-backoff path under KV pressure; the gpu_loss cell exercises
+# priority-aware (lowest-class-first) shedding during a real capacity
+# outage, which an in-place crash never triggers.
+OVERLOAD_SLICE = (
+    ("flash", "instance_crash"),
+    ("surge", "instance_crash"),
+    ("flash", "gpu_loss"),
+)
+
+
+def _validate_axis(value: str, registry, axis: str) -> None:
+    """Fail fast with the registry's valid names — not a KeyError mid-run."""
+    if value not in registry:
+        raise ValueError(
+            f"unknown {axis} {value!r}; valid {axis} names: "
+            f"{sorted(registry)}"
+        )
+
 
 def default_matrix() -> List[ScenarioCell]:
     """The published matrix: the full 4-axis cross-product under the
@@ -225,6 +263,13 @@ def default_matrix() -> List[ScenarioCell]:
         ScenarioCell(trace, "greedy", "micro", "uniform", serving="token")
         for trace in TOKEN_SLICE_TRACES
     ]
+    cells += [
+        ScenarioCell(
+            trace, "greedy", "micro", "uniform", fault,
+            serving="token", priority="mixed",
+        )
+        for trace, fault in OVERLOAD_SLICE
+    ]
     return cells
 
 
@@ -238,6 +283,10 @@ def smoke_matrix() -> List[ScenarioCell]:
         ScenarioCell("surge", "energy", "small", "tiered"),
         ScenarioCell("surge", "greedy", "small", "uniform", "gpu_loss"),
         ScenarioCell("flash", "greedy", "micro", "uniform", serving="token"),
+        ScenarioCell(
+            "flash", "greedy", "micro", "uniform", "instance_crash",
+            serving="token", priority="mixed",
+        ),
     ]
 
 
@@ -273,6 +322,9 @@ class CellResult:
     # token-serving cells only (cell.serving == "token"): the report's
     # per-service TTFT/TPOT/queue-delay percentiles + "_totals" counts
     token_serving: Optional[Dict] = None
+    # priority-mix cells only (cell.priority != "none"): the report's
+    # per-class goodput / SLO-attainment / drop / retry block
+    priority: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)  # recurses into the nested cell
@@ -281,7 +333,18 @@ class CellResult:
 def build_cell(
     cell: ScenarioCell, seed: int = 0
 ) -> Tuple[ClusterSimulator, Trace]:
-    """Materialize one cell: profiles, trace, config, wired simulator."""
+    """Materialize one cell: profiles, trace, config, wired simulator.
+
+    Every axis name is validated up front (ValueError listing the registry's
+    valid names) so a typo'd cell fails fast instead of KeyError-ing deep in
+    the run."""
+    _validate_axis(cell.trace, TRACE_SHAPES, "trace")
+    _validate_axis(cell.scheduler, SCHEDULERS, "scheduler")
+    _validate_axis(cell.scale, SCALES, "scale")
+    _validate_axis(cell.slo, SLO_POLICIES, "SLO policy")
+    _validate_axis(cell.fault, FAULT_PROFILES, "fault profile")
+    _validate_axis(cell.serving, ("fluid", "token"), "serving model")
+    _validate_axis(cell.priority, PRIORITY_MIXES, "priority mix")
     spec = SCALES[cell.scale]
     prof = SyntheticPaperProfiles(n_models=spec.n_services, seed=spec.profile_seed)
     rng = np.random.default_rng((seed, spec.n_services, spec.profile_seed))
@@ -299,6 +362,7 @@ def build_cell(
         token_knobs=(
             TOKEN_SLICE_KNOBS if cell.serving == "token" else None
         ),
+        priority_mix=PRIORITY_MIXES[cell.priority],
     )
     sim = ClusterSimulator(
         a100_rules(), prof, trace, cfg,
@@ -352,6 +416,7 @@ def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
         actions_abandoned=sum(r["abandoned"] for r in reconciles),
         shed_requests=rep.shed_total(),
         token_serving=rep.latency,
+        priority=rep.priority,
     )
     return result, rep
 
@@ -371,6 +436,7 @@ def matrix_doc(
             "slo_policies": sorted({c.slo for c in cells}),
             "fault_profiles": sorted({c.fault for c in cells}),
             "serving_models": sorted({c.serving for c in cells}),
+            "priority_mixes": sorted({c.priority for c in cells}),
         },
         "cells": results,
     }

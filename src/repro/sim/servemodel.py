@@ -38,16 +38,31 @@ seed-deterministic: request shapes are drawn from the simulator's single
 seeded rng, instances advance in sorted-uid order, and queues are FIFO with
 preempted requests resumed first — same seed, byte-identical
 :meth:`repro.sim.report.SimReport.to_json`.
+
+Overload resilience (ISSUE 7): when a :class:`repro.sim.traffic.PriorityMix`
+is active, requests carry a priority class and an SLO deadline, and the
+model switches to the resilience path — per-class FIFO queues admitted
+class-major (critical first, FIFO within class, preempted-resume-first
+preserved), deadline-expired queued requests dropped instead of served
+uselessly (goodput, not throughput), ``OutOfPages`` mid-decode growth
+evicting the lowest-class/shortest victim instead of always preempting
+self, and refused/crash-spilled requests retrying with capped exponential
+backoff under a retry budget.  Without a mix, every request is standard
+class with an infinite deadline and the legacy code paths run untouched —
+the no-priority token goldens stay byte-identical.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serving.paged_cache import OutOfPages, PagePool, page_bytes
+from repro.sim.traffic import PRIORITY_CLASSES, STANDARD_CLASS, PriorityMix
 
 # uid -> (service, size, throughput); mirrors repro.sim.reoptimize.InstanceSet
 InstanceSet = Dict[int, Tuple[str, int, float]]
@@ -76,6 +91,10 @@ class TokenRequest:
     first_token_s: float = -1.0
     finish_s: float = -1.0
     preemptions: int = 0
+    priority: int = STANDARD_CLASS  # index into PRIORITY_CLASSES (0 = top)
+    deadline_s: float = math.inf  # absolute SLO deadline; inf = deadline-less
+    retries: int = 0  # backoff retries consumed (refusals + crash spills)
+    next_try_s: float = 0.0  # not admittable before this clock (backoff)
 
     @property
     def context_len(self) -> int:
@@ -113,6 +132,21 @@ class TokenKnobs:
     n_layers: int = 32
     hbm_gb_per_unit: float = 0.020  # page-pool GB per MIG size unit
     prefill_chunk: int = 32  # prompt tokens prefilled per step-equivalent
+    # refused / crash-spilled requests retry with capped exponential backoff:
+    # attempt k waits min(retry_base_s * retry_mult**(k-1), retry_cap_s); a
+    # request past retry_budget attempts is dropped (counted retry_dropped).
+    # Only consulted when a priority mix is active (the resilience path).
+    retry_budget: int = 4
+    retry_base_s: float = 0.25
+    retry_mult: float = 2.0
+    retry_cap_s: float = 4.0
+
+    def retry_backoff_s(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (1-based), capped exponential."""
+        return min(
+            self.retry_base_s * self.retry_mult ** max(attempt - 1, 0),
+            self.retry_cap_s,
+        )
 
     def num_pages(self, size: int) -> int:
         """A slice's HBM budget -> page count (engine's page_hbm_bytes math),
@@ -155,6 +189,7 @@ class InstanceModel:
         knobs: TokenKnobs,
         step_time_s: Callable[[int], float],
         now: float,
+        resilience: bool = False,
     ):
         self.uid = uid
         self.service = service
@@ -163,11 +198,29 @@ class InstanceModel:
         self.knobs = knobs
         self.step_time_s = step_time_s
         self.clock = now
+        self.resilience = resilience
         self.pool = PagePool(
             knobs.num_pages(size), knobs.page_size, knobs.max_pages_per_req
         )
         self.live: List[TokenRequest] = []
-        self.queue: List[TokenRequest] = []  # FIFO; preempted resume first
+        # one FIFO per priority class; preempted requests resume first
+        # within their class.  Without a mix every request is standard
+        # class, so queues[STANDARD_CLASS] is the legacy single queue.
+        self.queues: List[List[TokenRequest]] = [
+            [] for _ in PRIORITY_CLASSES
+        ]
+        # (ready_s, seq, req) min-heap of backed-off refused/spilled requests
+        self.backoff: List[Tuple[float, int, TokenRequest]] = []
+        self._seq = 0
+
+    @property
+    def queue(self) -> List[TokenRequest]:
+        """Legacy view: the standard-class FIFO (the only populated queue
+        when no priority mix is active)."""
+        return self.queues[STANDARD_CLASS]
+
+    def enqueue(self, req: TokenRequest) -> None:
+        self.queues[req.priority].append(req)
 
     # -- admission (mirrors Engine.admit) -------------------------------------
     def _try_admit(self, req: TokenRequest, metrics: "TokenMetrics") -> bool:
@@ -214,43 +267,164 @@ class InstanceModel:
                 scanned += 1
                 i += 1
 
+    def _admit_pass_priority(self, metrics: "TokenMetrics") -> None:
+        """Resilience-path admission: class-major (higher class first), FIFO
+        within class, preempted-resume-first preserved (preempted requests
+        sit at their class's head).  Deadline-expired queued requests are
+        dropped instead of served uselessly, and an ``OutOfPages`` refusal
+        backs the request off with capped exponential backoff instead of
+        letting it spin at the queue head every step."""
+        # backed-off requests whose timer expired rejoin their class's head
+        # (they are the oldest of their class — they were refused earlier)
+        if self.backoff and self.backoff[0][0] <= self.clock + 1e-12:
+            ready: List[List[TokenRequest]] = [[] for _ in PRIORITY_CLASSES]
+            while self.backoff and self.backoff[0][0] <= self.clock + 1e-12:
+                _, _, req = heapq.heappop(self.backoff)
+                ready[req.priority].append(req)
+            for cls, reqs in enumerate(ready):
+                if reqs:
+                    self.queues[cls][:0] = reqs
+        scanned = 0
+        for q in self.queues:
+            i = 0
+            while (
+                i < len(q)
+                and len(self.live) < self.slots
+                and scanned < ADMIT_SCAN
+            ):
+                req = q[i]
+                if req.arrival_s > self.clock + 1e-12:
+                    break  # this class's tail has not arrived yet
+                if req.deadline_s < self.clock:
+                    # deadline already passed while queued: serving it is
+                    # wasted work — drop for goodput, not throughput
+                    q.pop(i)
+                    metrics.deadline_dropped[req.service] += 1
+                    metrics.class_deadline_dropped[req.priority] += 1
+                    continue
+                if self._try_admit(req, metrics):
+                    q.pop(i)
+                    continue
+                # refused (OutOfPages): back off under the retry budget
+                q.pop(i)
+                scanned += 1
+                req.retries += 1
+                metrics.class_retries[req.priority] += 1
+                if req.retries > self.knobs.retry_budget:
+                    metrics.retry_dropped[req.service] += 1
+                    metrics.class_retry_dropped[req.priority] += 1
+                else:
+                    req.next_try_s = self.clock + self.knobs.retry_backoff_s(
+                        req.retries
+                    )
+                    heapq.heappush(
+                        self.backoff, (req.next_try_s, self._seq, req)
+                    )
+                    self._seq += 1
+            if len(self.live) >= self.slots or scanned >= ADMIT_SCAN:
+                break
+
     # -- decode (mirrors Engine.step) ------------------------------------------
     def _decode_step(self, metrics: "TokenMetrics") -> None:
         dt = self.step_time_s(len(self.live))
         self.clock += dt
         still_live: List[TokenRequest] = []
         resumed: List[TokenRequest] = []
+        evicted: set = set()  # rids evicted mid-step as preemption victims
+        finished: set = set()  # rids finished this step (pages released)
         for req in self.live:
+            if req.rid in evicted or req.rid in finished:
+                continue
             # grow pages to cover this step's cache write (the engine keeps
             # pool length == written positions + the sampled-but-unwritten
             # token: exactly context_len), so the first post-admission step
             # needs no growth — the admission reserved one slot ahead
             need = req.context_len - self.pool.request(req.rid).length
-            if need > 0:
-                try:
-                    self.pool.append_tokens(req.rid, need)
-                except OutOfPages:
-                    # preempt: pages released, resume later with generated
-                    # tokens folded into the context (engine semantics); a
-                    # resume needs context + 1 <= max_len to re-admit — at
-                    # the cap there is no room, finish truncated like the
-                    # engine's max_len path
-                    if req.context_len + 1 > self.knobs.max_len:
-                        self._finish(req, metrics)
-                        continue
-                    self.pool.release(req.rid)
-                    req.preemptions += 1
-                    metrics.preemptions[req.service] += 1
-                    resumed.append(req)
-                    continue
+            if need > 0 and not self._grow(
+                req, need, still_live, resumed, evicted, finished, metrics
+            ):
+                continue
             req.generated += 1
             if req.done or req.context_len >= self.knobs.max_len:
+                finished.add(req.rid)
                 self._finish(req, metrics)
             else:
                 still_live.append(req)
         self.live = still_live
         # preempted requests resume first, like run_closed_loop's re-queue
-        self.queue[:0] = resumed
+        # (within their own class on the resilience path)
+        for cls in range(len(self.queues)):
+            front = [r for r in resumed if r.priority == cls]
+            if front:
+                self.queues[cls][:0] = front
+
+    def _grow(
+        self,
+        req: TokenRequest,
+        need: int,
+        still_live: List[TokenRequest],
+        resumed: List[TokenRequest],
+        evicted: set,
+        finished: set,
+        metrics: "TokenMetrics",
+    ) -> bool:
+        """Grow ``req``'s pages by ``need`` mid-decode.  On ``OutOfPages``
+        the legacy path always preempts ``req`` itself; the resilience path
+        evicts the lowest-class / shortest victim among the live batch
+        (possibly ``req``) and retries.  Returns True when the pages were
+        grown, False when ``req`` left the live batch."""
+        while True:
+            try:
+                self.pool.append_tokens(req.rid, need)
+                return True
+            except OutOfPages:
+                victim = req
+                if self.resilience:
+                    # lowest class first (largest priority index), then the
+                    # shortest context (cheapest restart), then rid; a
+                    # higher-class request is never evicted to grow a
+                    # lower-class one
+                    victim = min(
+                        (
+                            r
+                            for r in self.live
+                            if r.rid not in evicted
+                            and r.rid not in finished
+                            and (r is req or r.priority >= req.priority)
+                        ),
+                        key=lambda r: (-r.priority, r.context_len, r.rid),
+                    )
+                if victim is req:
+                    # preempt self: pages released, resume later with
+                    # generated tokens folded into the context (engine
+                    # semantics); a resume needs context + 1 <= max_len to
+                    # re-admit — at the cap there is no room, finish
+                    # truncated like the engine's max_len path
+                    if req.context_len + 1 > self.knobs.max_len:
+                        finished.add(req.rid)
+                        self._finish(req, metrics)
+                        return False
+                    self.pool.release(req.rid)
+                    req.preemptions += 1
+                    metrics.preemptions[req.service] += 1
+                    resumed.append(req)
+                    # mark it out of the live batch: a later request's
+                    # victim search this same step must not pick it again
+                    # (its pages are gone; a second resume would duplicate
+                    # the request in its queue)
+                    evicted.add(req.rid)
+                    return False
+                evicted.add(victim.rid)
+                if victim in still_live:
+                    still_live.remove(victim)
+                if victim.context_len + 1 > self.knobs.max_len:
+                    finished.add(victim.rid)
+                    self._finish(victim, metrics)
+                    continue
+                self.pool.release(victim.rid)
+                victim.preemptions += 1
+                metrics.preemptions[victim.service] += 1
+                resumed.append(victim)
 
     def _finish(self, req: TokenRequest, metrics: "TokenMetrics") -> None:
         req.finish_s = self.clock
@@ -260,6 +434,9 @@ class InstanceModel:
                 (req.finish_s - req.first_token_s) / (req.generated - 1)
             )
         metrics.completed_at[req.service].append(req.finish_s)
+        metrics.class_completed[req.priority] += 1
+        if req.finish_s <= req.deadline_s:
+            metrics.class_goodput[req.priority] += 1
 
     # -- one traffic bin --------------------------------------------------------
     def run_until(self, t_end: float, metrics: "TokenMetrics") -> None:
@@ -268,15 +445,22 @@ class InstanceModel:
         the remainder carries into the next bin, like a real engine whose
         step straddles a metrics-bin edge."""
         while self.clock < t_end - 1e-12:
-            self._admit_pass(metrics)
+            if self.resilience:
+                self._admit_pass_priority(metrics)
+            else:
+                self._admit_pass(metrics)
             if not self.live:
-                # idle: jump to the next queued arrival (an empty pool can
-                # always admit an arrived request, so nothing arrived yet)
+                # idle: jump to the next queued arrival or backoff expiry
+                # (an empty pool can always admit an arrived, non-backing-
+                # off request, so nothing is admittable right now)
                 nxt = [
                     r.arrival_s
-                    for r in self.queue
+                    for q in self.queues
+                    for r in q
                     if r.arrival_s > self.clock + 1e-12
                 ]
+                if self.backoff:
+                    nxt.append(self.backoff[0][0])
                 self.clock = min(min(nxt), t_end) if nxt else t_end
                 continue
             self._decode_step(metrics)
@@ -289,13 +473,54 @@ class InstanceModel:
         for req in self.live:
             self.pool.release(req.rid)
             req.preemptions += 1
-        out = self.live + self.queue
-        self.live, self.queue = [], []
+        out = list(self.live)
+        for q in self.queues:
+            out.extend(q)
+        for _, _, req in sorted(self.backoff):
+            out.append(req)
+        self.live = []
+        self.queues = [[] for _ in PRIORITY_CLASSES]
+        self.backoff = []
         return out
+
+    def crash(
+        self, now: float, metrics: "TokenMetrics"
+    ) -> Tuple[List[TokenRequest], List[TokenRequest]]:
+        """The instance's process died mid-decode (the ISSUE 7 serving-path
+        fault family): every in-flight request loses its KV cache *and* its
+        generated tokens (the sampled outputs lived in the dead process) and
+        must restart from the prompt; queued and backing-off requests spill
+        intact.  The replacement process starts with a cold, empty page
+        pool.  Returns ``(inflight, queued)`` spill lists."""
+        self.clock = max(self.clock, now)
+        inflight: List[TokenRequest] = []
+        for req in self.live:
+            req.preemptions += 1
+            metrics.preemptions[req.service] += 1
+            req.generated = 0  # KV and sampled tokens are gone
+            inflight.append(req)
+        queued: List[TokenRequest] = []
+        for q in self.queues:
+            queued.extend(q)
+        for _, _, req in sorted(self.backoff):
+            queued.append(req)
+        self.live = []
+        self.queues = [[] for _ in PRIORITY_CLASSES]
+        self.backoff = []
+        self.pool = PagePool(
+            self.knobs.num_pages(self.size),
+            self.knobs.page_size,
+            self.knobs.max_pages_per_req,
+        )
+        return inflight, queued
 
     @property
     def in_system(self) -> int:
-        return len(self.live) + len(self.queue)
+        return (
+            len(self.live)
+            + sum(len(q) for q in self.queues)
+            + len(self.backoff)
+        )
 
 
 @dataclasses.dataclass
@@ -315,6 +540,33 @@ class TokenMetrics:
     # admission attempt; the same request may be refused many times)
     preemptions: Dict[str, int] = dataclasses.field(default_factory=dict)
     refusals: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # resilience-path per-service drop counts (stay zero without a mix)
+    deadline_dropped: Dict[str, int] = dataclasses.field(default_factory=dict)
+    retry_dropped: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-priority-class conservation counters, indexed by PRIORITY_CLASSES;
+    # goodput = completions that beat their deadline, retries = backoff
+    # retry attempts charged (refusals + crash/migration spills)
+    class_arrivals: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * len(PRIORITY_CLASSES)
+    )
+    class_completed: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * len(PRIORITY_CLASSES)
+    )
+    class_goodput: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * len(PRIORITY_CLASSES)
+    )
+    class_deadline_dropped: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * len(PRIORITY_CLASSES)
+    )
+    class_retry_dropped: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * len(PRIORITY_CLASSES)
+    )
+    class_shed: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * len(PRIORITY_CLASSES)
+    )
+    class_retries: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * len(PRIORITY_CLASSES)
+    )
 
     def __post_init__(self):
         for svc in self.services:
@@ -324,6 +576,8 @@ class TokenMetrics:
             self.completed_at.setdefault(svc, [])
             self.preemptions.setdefault(svc, 0)
             self.refusals.setdefault(svc, 0)
+            self.deadline_dropped.setdefault(svc, 0)
+            self.retry_dropped.setdefault(svc, 0)
 
 
 def _summary(vals: List[float], prefix: str) -> Dict[str, float]:
@@ -352,14 +606,21 @@ class TokenServingState:
         profile,
         latency_slo_for: Callable[[str], float],
         knobs: Optional[TokenKnobs] = None,
+        mix: Optional[PriorityMix] = None,
     ):
         self.knobs = knobs or TokenKnobs()
         self.profile = profile
         self.latency_slo_for = latency_slo_for
+        self.mix = mix
         self.metrics = TokenMetrics(list(services))
         self.instances: Dict[int, InstanceModel] = {}
         self.spill: Dict[str, List[TokenRequest]] = {s: [] for s in services}
         self._next_rid = 0
+
+    @property
+    def resilience(self) -> bool:
+        """Priority/deadline/backoff semantics are active iff a mix is."""
+        return self.mix is not None
 
     # -- construction helpers ---------------------------------------------------
     def step_time_for(
@@ -397,7 +658,34 @@ class TokenServingState:
         decode = min(decode, knobs.max_len - 1 - prompt)
         rid = self._next_rid
         self._next_rid += 1
-        return TokenRequest(rid, svc, arrival_s, prompt, max(decode, 1))
+        req = TokenRequest(rid, svc, arrival_s, prompt, max(decode, 1))
+        if self.mix is not None:
+            # the class draw comes AFTER the shape draws so the no-mix rng
+            # stream (and its goldens) stays byte-identical
+            cls = self.mix.class_of(svc, rng)
+            req.priority = cls
+            req.deadline_s = arrival_s + self.mix.deadline_s[cls]
+        self.metrics.class_arrivals[req.priority] += 1
+        return req
+
+    def record_shed(self, req: TokenRequest) -> None:
+        """Charge one admission-control shed against the request's class
+        (the per-service shed series is charged by the simulator)."""
+        self.metrics.class_shed[req.priority] += 1
+
+    def retry_or_drop(self, req: TokenRequest, now: float) -> bool:
+        """Charge one backoff retry for a spilled in-flight request; False
+        when the retry budget is exhausted (the request is dropped and
+        counted ``retry_dropped``)."""
+        m = self.metrics
+        req.retries += 1
+        m.class_retries[req.priority] += 1
+        if req.retries > self.knobs.retry_budget:
+            m.retry_dropped[req.service] += 1
+            m.class_retry_dropped[req.priority] += 1
+            return False
+        req.next_try_s = now + self.knobs.retry_backoff_s(req.retries)
+        return True
 
     # -- instance-set sync -------------------------------------------------------
     def sync_instances(
@@ -408,9 +696,16 @@ class TokenServingState:
         the service level (re-routed this bin)."""
         for uid in [u for u in self.instances if u not in live]:
             inst = self.instances.pop(uid)
+            inflight = {id(r) for r in inst.live}
             for req in inst.live:
                 self.metrics.preemptions[req.service] += 1
             for req in inst.drain():
+                if (
+                    self.resilience
+                    and id(req) in inflight
+                    and not self.retry_or_drop(req, now)
+                ):
+                    continue  # migration-spill retry budget exhausted
                 self.spill[req.service].append(req)
         for uid in sorted(live):
             if uid in self.instances:
@@ -424,7 +719,25 @@ class TokenServingState:
                 self.knobs,
                 self.step_time_for(svc, size, noise_of(uid)),
                 now,
+                resilience=self.resilience,
             )
+
+    def crash_instance(self, uid: int, now: float) -> int:
+        """Apply an ``instance_crash`` fault: the uid's model loses its
+        process (in-flight KV + outputs gone, cold page pool); spilled
+        requests re-route this bin, in-flight ones under the retry budget.
+        Returns the number of in-flight requests spilled."""
+        inst = self.instances.get(uid)
+        if inst is None:
+            return 0
+        inflight, queued = inst.crash(now, self.metrics)
+        for req in inflight:
+            if self.resilience and not self.retry_or_drop(req, now):
+                continue  # crash-spill retry budget exhausted
+            self.spill[req.service].append(req)
+        for req in queued:
+            self.spill[req.service].append(req)
+        return len(inflight)
 
     # -- per-bin serving ---------------------------------------------------------
     def dispatch(
@@ -443,7 +756,7 @@ class TokenServingState:
             self.spill[svc] = pending
             return
         for req in pending:
-            self.instances[pick()].queue.append(req)
+            self.instances[pick()].enqueue(req)
 
     def serve_bin(self, t_end: float) -> None:
         for uid in sorted(self.instances):
@@ -478,4 +791,44 @@ class TokenServingState:
             "refusals": sum(m.refusals.values()),
             "completed": sum(len(v) for v in m.completed_at.values()),
         }
+        return out
+
+    def _in_system_by_class(self) -> List[int]:
+        counts = [0] * len(PRIORITY_CLASSES)
+        for reqs in self.spill.values():
+            for r in reqs:
+                counts[r.priority] += 1
+        for inst in self.instances.values():
+            for r in inst.live:
+                counts[r.priority] += 1
+            for q in inst.queues:
+                for r in q:
+                    counts[r.priority] += 1
+            for _, _, r in inst.backoff:
+                counts[r.priority] += 1
+        return counts
+
+    def priority_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-priority-class goodput / SLO-attainment / drop / retry
+        totals — the report extension serialized only when a mix is active.
+        Conservation holds exactly per class:
+        ``arrivals == completed + deadline_dropped + retry_dropped + shed +
+        in_system``."""
+        m = self.metrics
+        in_sys = self._in_system_by_class()
+        out: Dict[str, Dict[str, float]] = {}
+        for c, name in enumerate(PRIORITY_CLASSES):
+            arr = m.class_arrivals[c]
+            good = m.class_goodput[c]
+            out[name] = {
+                "arrivals": arr,
+                "completed": m.class_completed[c],
+                "goodput": good,
+                "deadline_dropped": m.class_deadline_dropped[c],
+                "retry_dropped": m.class_retry_dropped[c],
+                "shed": m.class_shed[c],
+                "retries": m.class_retries[c],
+                "in_system": in_sys[c],
+                "slo_attainment": (good / arr) if arr else 1.0,
+            }
         return out

@@ -52,7 +52,7 @@ from repro.sim.report import (
     TransitionRecord,
 )
 from repro.sim.servemodel import TokenKnobs, TokenServingState
-from repro.sim.traffic import Trace
+from repro.sim.traffic import PRIORITY_CLASSES, PriorityMix, Trace
 
 
 @dataclasses.dataclass
@@ -84,15 +84,40 @@ class SimConfig:
     # per-token clocks, paged-KV pressure, preemption, TTFT/TPOT metrics)
     serving_model: str = "fluid"
     token_knobs: Optional[TokenKnobs] = None  # None -> TokenKnobs() defaults
+    # overload resilience (token mode only): when set, requests carry a
+    # priority class + SLO deadline, the token model runs its resilience
+    # path (priority admission, deadline drops, victim eviction, retry
+    # backoff), admission control sheds lowest-class-first, and the report
+    # gains the per-class priority block.  None keeps every historical code
+    # path (and its goldens) byte-identical.
+    priority_mix: Optional[PriorityMix] = None
 
     def __post_init__(self):
-        assert self.arrivals in ("poisson", "fluid"), self.arrivals
-        assert self.fault_profile in FAULT_PROFILES, self.fault_profile
-        assert self.serving_model in ("fluid", "token"), self.serving_model
-        if self.serving_model == "token":
+        # fail fast with the valid names — not a deep KeyError mid-run
+        if self.arrivals not in ("poisson", "fluid"):
+            raise ValueError(
+                f"unknown arrivals mode {self.arrivals!r}; "
+                "valid: ['fluid', 'poisson']"
+            )
+        if self.fault_profile not in FAULT_PROFILES:
+            raise ValueError(
+                f"unknown fault profile {self.fault_profile!r}; "
+                f"registered profiles: {sorted(FAULT_PROFILES)}"
+            )
+        if self.serving_model not in ("fluid", "token"):
+            raise ValueError(
+                f"unknown serving model {self.serving_model!r}; "
+                "valid: ['fluid', 'token']"
+            )
+        if self.serving_model == "token" and self.arrivals != "poisson":
             # discrete requests need integer arrivals
-            assert self.arrivals == "poisson", (
+            raise ValueError(
                 "serving_model='token' requires arrivals='poisson'"
+            )
+        if self.priority_mix is not None and self.serving_model != "token":
+            raise ValueError(
+                "priority_mix requires serving_model='token' (the fluid "
+                "model has no per-request priority semantics)"
             )
         if self.fault_profile != "none":
             self.control_plane = True
@@ -156,11 +181,13 @@ class ClusterSimulator:
                 profile,
                 lambda svc: targets.get(svc, default_slo),
                 self.config.token_knobs,
+                mix=self.config.priority_mix,
             )
-            # per-service [preemptions, refusals] seen through the prior
-            # bin, for the per-bin delta series
+            # per-service [preemptions, refusals, deadline_dropped,
+            # retry_dropped] seen through the prior bin, for the per-bin
+            # delta series (the last two only serialize under a mix)
             self._tok_prev: Dict[str, List[int]] = {
-                svc: [0, 0] for svc in trace.services
+                svc: [0, 0, 0, 0] for svc in trace.services
             }
 
     @property
@@ -396,22 +423,55 @@ class ClusterSimulator:
             members = by_svc.get(svc, [])
             capacity_rate = sum(m[2] for m in members)
             shed = 0.0
-            n_admit = n
             req_rate_now = required.get(svc, 0.0)
-            if (
+            under_capacity = bool(
                 degraded
                 and req_rate_now > 0
                 and capacity_rate < req_rate_now * (1.0 - 1e-9)
-            ):
-                kept, _ = admission.admit(float(n), capacity_rate * dt)
-                n_admit = int(kept)
-                shed = float(n - n_admit)
+            )
+            if tok.mix is not None:
+                # resilience path: draw ALL arrivals first (each with its
+                # class + deadline), then shed lowest-class-first through
+                # the priority-aware admission controller, keeping the
+                # earliest arrivals within the marginal class
+                reqs = [
+                    tok.make_request(svc, t + (i + 0.5) * dt / n, rng)
+                    for i in range(n)
+                ]
+                if under_capacity:
+                    counts = [0] * len(PRIORITY_CLASSES)
+                    for r in reqs:
+                        counts[r.priority] += 1
+                    plan = admission.admit_by_class(
+                        [
+                            (c, 1.0, float(counts[c]))
+                            for c in range(len(counts))
+                        ],
+                        capacity_rate * dt,
+                    )
+                    quota = [int(adm) for adm, _ in plan]
+                    kept = []
+                    used = [0] * len(PRIORITY_CLASSES)
+                    for r in reqs:
+                        if used[r.priority] < quota[r.priority]:
+                            used[r.priority] += 1
+                            kept.append(r)
+                        else:
+                            tok.record_shed(r)
+                    shed = float(len(reqs) - len(kept))
+                    reqs = kept
+            else:
+                n_admit = n
+                if under_capacity:
+                    kept, _ = admission.admit(float(n), capacity_rate * dt)
+                    n_admit = int(kept)
+                    shed = float(n - n_admit)
+                # deterministic arrival offsets spread through the bin
+                reqs = [
+                    tok.make_request(svc, t + (i + 0.5) * dt / n_admit, rng)
+                    for i in range(n_admit)
+                ]
             shed_by_svc[svc] = shed
-            # deterministic arrival offsets spread through the bin
-            reqs = [
-                tok.make_request(svc, t + (i + 0.5) * dt / n_admit, rng)
-                for i in range(n_admit)
-            ]
             if members:
                 router = self._router_for(svc, members)
                 tok.dispatch(
@@ -436,6 +496,8 @@ class ClusterSimulator:
             prev = self._tok_prev[svc]
             pre = tok.metrics.preemptions[svc]
             ref = tok.metrics.refusals[svc]
+            dd = tok.metrics.deadline_dropped[svc]
+            rd = tok.metrics.retry_dropped[svc]
             series = out[svc]
             series["arrivals"].append(float(arrived[svc]))
             series["served"].append(float(tok.completed_in(svc, t, t1)))
@@ -447,7 +509,10 @@ class ClusterSimulator:
             )
             series["preempted"].append(float(pre - prev[0]))
             series["refused"].append(float(ref - prev[1]))
-            self._tok_prev[svc] = [pre, ref]
+            if tok.mix is not None:
+                series["deadline_dropped"].append(float(dd - prev[2]))
+                series["retry_dropped"].append(float(rd - prev[3]))
+            self._tok_prev[svc] = [pre, ref, dd, rd]
             if self._fault_mode:
                 series["shed"].append(shed_by_svc[svc])
 
@@ -479,6 +544,10 @@ class ClusterSimulator:
             "backlog", "required", "attainment",
         ) + (("shed",) if self._fault_mode else ()) + (
             ("preempted", "refused") if self._token is not None else ()
+        ) + (
+            ("deadline_dropped", "retry_dropped")
+            if self._token is not None and self._token.mix is not None
+            else ()
         )
         out: Dict[str, Dict[str, List[float]]] = {
             svc: {name: [] for name in series_names}
@@ -511,13 +580,19 @@ class ClusterSimulator:
                 rec = self._apply_device_fault(ev.payload, ev.time)
                 if rec is not None:
                     self._faults.append(rec)
-                    self._routers.clear()
-                    # the control plane notices after its detection delay
-                    queue.push(
-                        ev.time + self.control_plane.profile.detection_delay_s,
-                        RECONCILE,
-                        None,
-                    )
+                    if rec.kind != "instance_crash":
+                        self._routers.clear()
+                        # the control plane notices after its detection delay
+                        queue.push(
+                            ev.time
+                            + self.control_plane.profile.detection_delay_s,
+                            RECONCILE,
+                            None,
+                        )
+                    # an instance crash restarts in place: the device is
+                    # healthy and the instance set unchanged, so there is
+                    # nothing for the reconciler to repair — the cost is
+                    # the spilled in-flight work, not a capacity hole
             elif ev.kind == RECONCILE:
                 if self._pending is not None and ev.time < self._pending.end_s - 1e-9:
                     # let the in-flight transition settle, then look again
@@ -553,6 +628,16 @@ class ClusterSimulator:
                     if "refused" in series
                     else None
                 ),
+                deadline_dropped=(
+                    np.asarray(series["deadline_dropped"])
+                    if "deadline_dropped" in series
+                    else None
+                ),
+                retry_dropped=(
+                    np.asarray(series["retry_dropped"])
+                    if "retry_dropped" in series
+                    else None
+                ),
             )
             for svc, series in out.items()
         }
@@ -570,6 +655,11 @@ class ClusterSimulator:
             latency=(
                 self._token.latency_summary()
                 if self._token is not None
+                else None
+            ),
+            priority=(
+                self._token.priority_summary()
+                if self._token is not None and self._token.mix is not None
                 else None
             ),
         )
@@ -613,6 +703,48 @@ class ClusterSimulator:
                 fault_domain=spec.fault_domain_of(machine),
                 killed_instances=len(killed),
                 lost_throughput=lost,
+            )
+        if fault.kind == "instance_crash":
+            # serving-path fault: one instance's process dies mid-decode.
+            # The device stays healthy and the instance restarts in place
+            # with cold state, so no repair transition fires — the damage is
+            # the spilled in-flight work (KV lost in token mode, backlog
+            # respilled in fluid mode)
+            if self._token is not None:
+                tok = self._token
+                busy = [
+                    u
+                    for u, inst in tok.instances.items()
+                    if inst.in_system > 0
+                ]
+                uid = injector.pick_instance(busy or sorted(tok.instances))
+                if uid is None:
+                    return None
+                svc = tok.instances[uid].service
+                spilled = float(tok.crash_instance(uid, now))
+            else:
+                busy = [u for u, q in self._backlog.items() if q > 0]
+                uid = injector.pick_instance(busy)
+                if uid is None:
+                    return None
+                spilled = float(self._backlog.pop(uid, 0.0))
+                svc = self._backlog_svc.pop(uid, "")
+                if svc and spilled > 0:
+                    self._spill[svc] = self._spill.get(svc, 0.0) + spilled
+            gid = cluster.uid_gpu.get(uid)
+            domain = (
+                spec.fault_domain_of(cluster.gpus[gid].machine)
+                if gid is not None and gid in cluster.gpus
+                else "unknown"
+            )
+            return FaultRecord(
+                time_s=now,
+                kind="instance_crash",
+                target=uid,
+                fault_domain=domain,
+                killed_instances=0,
+                lost_throughput={},
+                spilled=spilled,
             )
         if fault.kind == "node_drain":
             machines = sorted(

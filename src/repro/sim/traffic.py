@@ -21,9 +21,82 @@ run on it) is reproducible bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+import math
+from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
+
+# request importance classes, highest first.  The index IS the priority
+# (0 = most important): the token serving model admits lower indices first,
+# prefers higher indices as preemption victims, and degraded-mode admission
+# control sheds higher indices first.
+PRIORITY_CLASSES: Tuple[str, ...] = ("critical", "standard", "batch")
+STANDARD_CLASS: int = PRIORITY_CLASSES.index("standard")
+
+
+@dataclasses.dataclass(frozen=True)
+class PriorityMix:
+    """How requests acquire a priority class and an SLO deadline.
+
+    Every request drawn under a mix gets a class (index into
+    :data:`PRIORITY_CLASSES`) and an *absolute* deadline
+    ``arrival + deadline_s[class]`` — the SLO the request is worth serving
+    against; a request still queued past its deadline is dropped (goodput,
+    not throughput).  Classes are assigned either per-service
+    (``per_service`` pins a service's every request to one class, consuming
+    no randomness) or by a seeded per-request draw over ``weights``.  All
+    draws flow from the simulator's single rng, so a mix keeps the
+    byte-identical-report contract.
+    """
+
+    # per-class draw weights (critical, standard, batch); normalized
+    weights: Tuple[float, ...] = (0.2, 0.6, 0.2)
+    # per-class relative SLO deadline in seconds; inf = deadline-less
+    deadline_s: Tuple[float, ...] = (3.0, 12.0, math.inf)
+    # svc -> class name: pin a whole service to one class (no rng draw)
+    per_service: Optional[Mapping[str, str]] = None
+
+    def __post_init__(self):
+        # fail fast with actionable messages, not a mid-run IndexError
+        n = len(PRIORITY_CLASSES)
+        if len(self.weights) != n or len(self.deadline_s) != n:
+            raise ValueError(
+                f"weights and deadline_s need one entry per class "
+                f"{PRIORITY_CLASSES}, got {len(self.weights)} and "
+                f"{len(self.deadline_s)}"
+            )
+        if any(w < 0.0 for w in self.weights) or sum(self.weights) <= 0.0:
+            raise ValueError(
+                f"weights must be non-negative with a positive sum, "
+                f"got {self.weights}"
+            )
+        if any(d <= 0.0 for d in self.deadline_s):
+            raise ValueError(
+                f"deadlines must be positive (inf = deadline-less), "
+                f"got {self.deadline_s}"
+            )
+        for svc, name in (self.per_service or {}).items():
+            if name not in PRIORITY_CLASSES:
+                raise ValueError(
+                    f"per_service[{svc!r}] = {name!r} is not a priority "
+                    f"class; valid: {list(PRIORITY_CLASSES)}"
+                )
+
+    def class_of(self, svc: str, rng: np.random.Generator) -> int:
+        """The class index of one request of ``svc``.  Pinned services
+        consume no randomness; everything else is one seeded draw."""
+        if self.per_service:
+            pinned = self.per_service.get(svc)
+            if pinned is not None:
+                return PRIORITY_CLASSES.index(pinned)
+        total = float(sum(self.weights))
+        u = float(rng.random()) * total
+        acc = 0.0
+        for c, w in enumerate(self.weights):
+            acc += w
+            if u < acc:
+                return c
+        return len(PRIORITY_CLASSES) - 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -419,6 +419,84 @@ class TestAdmission:
         admitted, shed = adm.admit(100.0, 10.0)
         assert admitted == 50.0 and shed == 50.0
 
+    def test_zero_capacity_sheds_everything_above_the_floor(self):
+        adm = AdmissionController()
+        assert adm.admit(40.0, 0.0) == (0.0, 40.0)
+        plan = adm.admit_by_class([(0, 1.0, 10.0), (2, 1.0, 5.0)], 0.0)
+        assert plan == [(0.0, 10.0), (0.0, 5.0)]
+        floor = AdmissionController(min_admit_frac=0.1)
+        assert floor.admit(40.0, 0.0) == (4.0, 36.0)
+
+    def test_no_shedding_without_a_visible_outage(self):
+        """A burst that merely exceeds capacity is queued, not shed: the
+        degraded path engages only while the control plane can *see* an
+        outage, so fault-free runs report zero shed requests."""
+        res, rep = run_cell(
+            ScenarioCell("flash", "greedy", "micro", "uniform"), seed=0
+        )
+        assert res.shed_requests == 0.0
+        assert all(tl.shed is None or float(np.sum(tl.shed)) == 0.0
+                   for tl in rep.timelines.values())
+
+    def test_admit_by_class_sheds_lowest_class_first(self):
+        adm = AdmissionController()
+        # capacity 10 covers critical (4) + standard (4), leaves 2 of the
+        # batch class's 8: only batch sheds
+        plan = adm.admit_by_class(
+            [(0, 1.0, 4.0), (1, 1.0, 4.0), (2, 1.0, 8.0)], 10.0
+        )
+        assert plan[0] == (4.0, 0.0) and plan[1] == (4.0, 0.0)
+        assert plan[2][0] == pytest.approx(2.0)
+        assert plan[2][1] == pytest.approx(6.0)
+
+    def test_admit_by_class_weighted_fairness_within_marginal_class(self):
+        adm = AdmissionController()
+        # one class, two entries, 3:1 weights, capacity half the demand:
+        # water-filling splits 6 as 4.5/1.5
+        plan = adm.admit_by_class([(1, 3.0, 6.0), (1, 1.0, 6.0)], 6.0)
+        assert plan[0][0] == pytest.approx(4.5)
+        assert plan[1][0] == pytest.approx(1.5)
+        # a small-demand entry saturates; its surplus re-flows
+        plan = adm.admit_by_class([(1, 3.0, 1.0), (1, 1.0, 6.0)], 6.0)
+        assert plan[0][0] == pytest.approx(1.0)
+        assert plan[1][0] == pytest.approx(5.0)
+
+    @given(
+        entries=st.lists(
+            st.tuples(
+                st.integers(0, 2),
+                st.floats(min_value=0.0, max_value=5.0),
+                st.floats(min_value=0.0, max_value=50.0),
+            ),
+            min_size=1, max_size=8,
+        ),
+        capacity=st.floats(min_value=0.0, max_value=120.0),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_admit_by_class_conserves_every_request(self, entries, capacity):
+        """Property: per entry, admitted + shed == demand *exactly* (no
+        request invented or lost), 0 <= admitted <= demand, and a higher
+        class is never shed while a lower class is admitted beyond its
+        floor."""
+        adm = AdmissionController()
+        plan = adm.admit_by_class(entries, capacity)
+        assert len(plan) == len(entries)
+        for (cls, _w, demand), (admitted, shed) in zip(entries, plan):
+            assert admitted + shed == demand  # exact, not approximate
+            assert 0.0 <= admitted <= demand
+        total = sum(a for a, _ in plan)
+        assert total <= max(capacity, 0.0) + 1e-9
+        # class ordering: any class with shed traffic means every lower
+        # class index (higher priority) was fully admitted
+        shed_classes = {
+            c for (c, _w, _d), (_a, s) in zip(entries, plan) if s > 1e-9
+        }
+        if shed_classes:
+            top = min(shed_classes)
+            for (c, _w, d), (a, _s) in zip(entries, plan):
+                if c < top:
+                    assert a == d
+
 
 # -- fault injector determinism ---------------------------------------------------
 

@@ -54,6 +54,25 @@ class TestPagePool:
         pool.release(1)
         assert pool.free_pages == 4
 
+    def test_double_release_is_a_guarded_noop(self):
+        """Releasing a rid twice (a preempt racing a finish, or a release
+        after a crash swapped the pool) must not re-insert its pages into
+        the free list — a double free would hand one page to two requests
+        and silently corrupt both KV caches."""
+        pool = PagePool(num_pages=4, page_size=8, max_pages_per_req=4)
+        pool.admit(1)
+        pool.append_tokens(1, 16)  # two pages
+        assert pool.release(1) is True
+        assert pool.free_pages == 4
+        assert pool.release(1) is False  # second release: no-op
+        assert pool.free_pages == 4  # and no free-list growth
+        assert pool.release(99) is False  # never-admitted rid: same guard
+        # the free list still hands out 4 distinct pages
+        pool.admit(2)
+        pool.append_tokens(2, 32)
+        assert pool.free_pages == 0
+        assert len(set(pool._requests[2].page_ids)) == 4
+
     def test_pool_exhaustion_signals_admission_control(self):
         pool = PagePool(num_pages=2, page_size=4, max_pages_per_req=4)
         pool.admit(1)

@@ -1,0 +1,443 @@
+"""Overload-resilience tests (ISSUE 7): priority classes, deadlines,
+retry-with-backoff, and the serving-path crash fault.
+
+Pins the resilience layer spanning traffic -> admission -> token serving
+-> control plane -> reporting:
+
+* golden pin — the curated overload cell (adversarial flash burst x mixed
+  priority classes x seeded ``instance_crash`` fault on the token model)
+  records its seeded report SHA plus the full per-class
+  goodput/SLO-attainment/drop/retry block in
+  ``tests/golden/resilience_golden.json``.  Regenerate (only on
+  intentional behavior changes) with::
+
+      PYTHONPATH=src python tests/test_resilience.py --regen
+
+* conservation — per priority class, over arbitrary seeds and under the
+  chaos of crashes + shedding, every arrival is accounted for exactly:
+  ``arrivals == completed + deadline_dropped + retry_dropped + shed +
+  in_system``.
+* byte-identity — a priority mix is opt-in: without one, reports carry
+  none of the new keys (the historical golden suites pin the bytes).
+* unit coverage of the mechanisms: class-major admission order, deadline
+  drops for goodput, capped exponential backoff under a retry budget,
+  lowest-class-first victim eviction, crash semantics (KV + sampled
+  tokens lost, cold page pool), and fail-fast config validation.
+"""
+
+import json
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+if __name__ == "__main__":  # regen mode runs without pytest/conftest
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import SyntheticPaperProfiles
+from repro.sim import (
+    PRIORITY_CLASSES,
+    PriorityMix,
+    ScenarioCell,
+    SimConfig,
+    TokenKnobs,
+    TokenRequest,
+    TokenServingState,
+    build_cell,
+    run_cell,
+)
+from repro.sim.servemodel import InstanceModel, TokenMetrics
+from repro.sim.traffic import STANDARD_CLASS
+
+GOLDEN_PATH = os.path.join(
+    os.path.dirname(__file__), "golden", "resilience_golden.json"
+)
+
+# the curated overload cell: adversarial burst x priority mix x crash fault
+# (also in smoke_matrix, so both CI jobs execute it)
+OVERLOAD_CELL = ScenarioCell(
+    "flash", "greedy", "micro", "uniform", "instance_crash",
+    serving="token", priority="mixed",
+)
+
+
+def compute_golden():
+    res, rep = run_cell(OVERLOAD_CELL, seed=0)
+    return {
+        "schema": 1,
+        "overload_cells": {
+            f"{OVERLOAD_CELL.name}@seed0": {
+                "report_sha256": res.report_sha256,
+                "priority": rep.priority,
+                "faults": [
+                    {"kind": f.kind, "spilled": f.spilled}
+                    for f in rep.faults
+                ],
+            }
+        },
+    }
+
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+# -- golden pin -------------------------------------------------------------------
+
+
+def test_resilience_golden_file_exists():
+    assert os.path.exists(GOLDEN_PATH), (
+        "golden file missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_resilience.py --regen`"
+    )
+
+
+def test_overload_cell_matches_golden():
+    got = compute_golden()
+    want = _load_golden()
+    assert got == want, (
+        "the overload cell's seeded behavior diverged from the recorded "
+        "per-class goodput/retry block or report SHA"
+    )
+
+
+def test_overload_cell_exercises_every_mechanism():
+    """The curated cell is only a meaningful pin if the resilience
+    machinery actually fires in it."""
+    _, rep = run_cell(OVERLOAD_CELL, seed=0)
+    p = rep.priority
+    assert set(p) == set(PRIORITY_CLASSES)
+    assert sum(v["retries"] for v in p.values()) > 0
+    assert sum(v["deadline_dropped"] + v["retry_dropped"] for v in p.values()) > 0
+    assert any(f.kind == "instance_crash" and f.spilled > 0 for f in rep.faults)
+    # crashes are process deaths, not capacity faults: no fault-triggered
+    # reconcile pass fires (demand-triggered reoptimizes may still run)
+    assert all(t.trigger != "fault" for t in rep.transitions)
+
+
+# -- per-class conservation ------------------------------------------------------
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=3, deadline=None)
+def test_per_class_conservation_under_chaos(seed):
+    """Requests cannot leak across the crash/shed/retry paths: per class,
+    arrivals == completed + deadline_dropped + retry_dropped + shed +
+    in_system, exactly."""
+    _, rep = run_cell(OVERLOAD_CELL, seed=seed)
+    for cls, v in rep.priority.items():
+        assert v["arrivals"] == (
+            v["completed"] + v["deadline_dropped"] + v["retry_dropped"]
+            + v["shed"] + v["in_system"]
+        ), (cls, v)
+        assert v["goodput"] <= v["completed"] <= v["arrivals"]
+        assert 0.0 <= v["slo_attainment"] <= 1.0
+
+
+def test_overload_cell_is_seed_deterministic():
+    r1 = run_cell(OVERLOAD_CELL, seed=3)[1].to_json()
+    r2 = run_cell(OVERLOAD_CELL, seed=3)[1].to_json()
+    assert r1 == r2
+    assert r1 != run_cell(OVERLOAD_CELL, seed=4)[1].to_json()
+
+
+# -- byte-identity: the mix is opt-in --------------------------------------------
+
+
+def test_priority_keys_absent_without_a_mix():
+    """No mix -> none of the new report keys exist: historical token and
+    fluid reports keep their exact byte layout."""
+    plain = ScenarioCell(
+        "flash", "greedy", "micro", "uniform", serving="token"
+    )
+    d = run_cell(plain, seed=0)[1].to_dict()
+    assert "priority" not in d
+    for tl in d["timelines"].values():
+        assert "deadline_dropped" not in tl and "retry_dropped" not in tl
+    mixed = run_cell(OVERLOAD_CELL, seed=0)[1].to_dict()
+    assert set(mixed["priority"]) == set(PRIORITY_CLASSES)
+    for tl in mixed["timelines"].values():
+        assert "deadline_dropped" in tl and "retry_dropped" in tl
+
+
+# -- PriorityMix ------------------------------------------------------------------
+
+
+class TestPriorityMix:
+    def test_rejects_malformed_mixes(self):
+        with pytest.raises(ValueError):
+            PriorityMix(weights=(1.0, 1.0))  # wrong arity
+        with pytest.raises(ValueError):
+            PriorityMix(weights=(-1.0, 1.0, 1.0))  # negative weight
+        with pytest.raises(ValueError):
+            PriorityMix(weights=(0.0, 0.0, 0.0))  # nothing to draw
+        with pytest.raises(ValueError):
+            PriorityMix(deadline_s=(0.0, 1.0, 2.0))  # non-positive deadline
+        with pytest.raises(ValueError):
+            PriorityMix(per_service={"svc": "premium"})  # unknown class name
+
+    def test_pinned_service_consumes_no_randomness(self):
+        mix = PriorityMix(per_service={"svc-a": "critical"})
+        r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+        assert mix.class_of("svc-a", r1) == PRIORITY_CLASSES.index("critical")
+        assert r1.random() == r2.random()  # rng untouched by the pin
+        # unpinned services draw exactly one uniform
+        mix.class_of("svc-b", r1)
+        r2.random()
+        assert r1.random() == r2.random()
+
+    def test_weighted_draw_matches_weights(self):
+        mix = PriorityMix(weights=(0.5, 0.5, 0.0))
+        rng = np.random.default_rng(0)
+        draws = [mix.class_of("s", rng) for _ in range(500)]
+        assert set(draws) == {0, 1}  # zero-weight class never drawn
+        assert 150 < draws.count(0) < 350  # roughly half each
+
+
+# -- instance-level mechanisms ----------------------------------------------------
+
+
+def _small_knobs(**over):
+    kw = dict(
+        prompt_tokens=8, decode_tokens=4, max_len=16, page_size=4,
+        hbm_gb_per_unit=1e-12,  # floor-limited pool: max_pages_per_req pages
+        prefill_chunk=4,
+    )
+    kw.update(over)
+    return TokenKnobs(**kw)
+
+
+def _instance(knobs, slots=4, svc="svc", resilience=True):
+    return InstanceModel(
+        0, svc, 1, slots=slots, knobs=knobs,
+        step_time_s=lambda b: 0.01, now=0.0, resilience=resilience,
+    )
+
+
+def _req(rid, priority, prompt=4, decode=2, arrival=0.0, deadline=math.inf):
+    r = TokenRequest(rid, "svc", arrival, prompt, decode)
+    r.priority = priority
+    r.deadline_s = deadline
+    return r
+
+
+def test_admission_is_class_major_fifo_within_class():
+    """A critical request enqueued *after* two batch requests is still
+    admitted first; within a class the order stays FIFO."""
+    knobs = _small_knobs(hbm_gb_per_unit=1.0)
+    inst = _instance(knobs, slots=1)
+    metrics = TokenMetrics(["svc"])
+    b0, b1 = _req(0, 2), _req(1, 2)
+    crit = _req(2, 0)
+    for r in (b0, b1, crit):
+        inst.enqueue(r)
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at["svc"]) == 3
+    assert crit.admit_s < b0.admit_s < b1.admit_s
+
+
+def test_legacy_queue_view_is_the_standard_class_fifo():
+    inst = _instance(_small_knobs(), resilience=False)
+    r = TokenRequest(0, "svc", 0.0, 4, 2)
+    inst.queue.append(r)  # historical tests drive the model this way
+    assert inst.queues[STANDARD_CLASS] == [r]
+    assert inst.in_system == 1
+
+
+def test_expired_deadline_is_dropped_not_served():
+    knobs = _small_knobs(hbm_gb_per_unit=1.0)
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    dead = _req(0, 1, deadline=-1.0)  # already past its SLO at admission
+    ok = _req(1, 1)
+    inst.enqueue(dead)
+    inst.enqueue(ok)
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at["svc"]) == 1  # only `ok` ran
+    assert dead.finish_s < 0.0
+    assert metrics.deadline_dropped["svc"] == 1
+    assert metrics.class_deadline_dropped[1] == 1
+    assert metrics.class_goodput[1] == 1
+
+
+def test_refusal_backs_off_with_capped_exponential_delay():
+    knobs = _small_knobs()
+    assert knobs.retry_backoff_s(1) == knobs.retry_base_s
+    assert knobs.retry_backoff_s(2) == knobs.retry_base_s * knobs.retry_mult
+    assert knobs.retry_backoff_s(50) == knobs.retry_cap_s  # capped
+    # one-request pool: the second long prompt is refused and parks in the
+    # backoff heap instead of spinning at the queue head
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    hog = _req(0, 1, prompt=10, decode=5)
+    late = _req(1, 1, prompt=10, decode=2)
+    inst.enqueue(hog)
+    inst.enqueue(late)
+    inst.run_until(0.05, metrics)
+    assert len(inst.live) == 1 and late.retries >= 1
+    assert inst.backoff and inst.backoff[0][2] is late
+    assert late.next_try_s > inst.clock - 0.05  # scheduled in the future
+    inst.run_until(1e9, metrics)  # backoff expires, retry succeeds
+    assert len(metrics.completed_at["svc"]) == 2
+    assert metrics.retry_dropped["svc"] == 0
+
+
+def test_retry_budget_exhaustion_drops_the_request():
+    knobs = _small_knobs(retry_budget=0)  # first refusal already exceeds it
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    inst.enqueue(_req(0, 2, prompt=10, decode=5))
+    doomed = _req(1, 2, prompt=10, decode=2)
+    inst.enqueue(doomed)
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at["svc"]) == 1
+    assert metrics.retry_dropped["svc"] == 1
+    assert metrics.class_retry_dropped[2] == 1
+    assert doomed.finish_s < 0.0 and inst.in_system == 0
+
+
+def test_eviction_prefers_lowest_class_victim():
+    """When a critical request must grow its KV pages, the batch-class
+    neighbor is evicted — the critical request itself keeps running."""
+    knobs = _small_knobs()  # 5-page pool
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    crit = _req(0, 0, prompt=10, decode=4)  # 3 pages, grows past 12 tokens
+    batch = _req(1, 2, prompt=6, decode=8)  # 2 pages
+    inst.enqueue(crit)
+    inst.enqueue(batch)
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at["svc"]) == 2  # batch resumed and finished
+    assert crit.preemptions == 0
+    assert batch.preemptions >= 1
+    assert metrics.preemptions["svc"] == crit.preemptions + batch.preemptions
+
+
+def test_eviction_never_sacrifices_a_higher_class():
+    """The mirror image: when the *batch* request needs pages, it preempts
+    itself rather than evicting the critical neighbor."""
+    knobs = _small_knobs()
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    batch = _req(0, 2, prompt=10, decode=4)
+    crit = _req(1, 0, prompt=6, decode=8)
+    inst.enqueue(batch)
+    inst.enqueue(crit)
+    inst.run_until(1e9, metrics)
+    assert len(metrics.completed_at["svc"]) == 2
+    assert crit.preemptions == 0
+    assert batch.preemptions >= 1
+
+
+def test_crash_loses_kv_and_generated_tokens():
+    """A crash is harsher than a drain: in-flight requests restart from the
+    prompt (their sampled tokens lived in the dead process) and the
+    replacement pool is cold."""
+    knobs = _small_knobs(hbm_gb_per_unit=1.0)
+    inst = _instance(knobs, slots=2)
+    metrics = TokenMetrics(["svc"])
+    a = _req(0, 1, prompt=4, decode=8)
+    b = _req(1, 1, prompt=4, decode=8, arrival=50.0)  # not yet arrived
+    inst.enqueue(a)
+    inst.enqueue(b)
+    inst.run_until(0.05, metrics)  # mid-decode: ~4 of 8 tokens sampled
+    assert a.generated > 0 and len(inst.live) == 1
+    inflight, queued = inst.crash(inst.clock, metrics)
+    assert inflight == [a] and queued == [b]
+    assert a.generated == 0 and a.preemptions == 1  # restart from prompt
+    assert b.generated == 0 and b.preemptions == 0  # queued spill intact
+    assert inst.in_system == 0
+    assert len(inst.pool._free) == knobs.num_pages(1)  # cold pool
+    assert metrics.preemptions["svc"] == 1
+    # the spilled request re-admits elsewhere and still completes fully
+    inst2 = _instance(knobs, slots=2)
+    inst2.enqueue(a)
+    inst2.run_until(1e9, metrics)
+    assert a.finish_s > 0.0 and a.generated == 8
+
+
+def test_crash_instance_charges_the_retry_budget():
+    prof = SyntheticPaperProfiles(n_models=2, seed=2)
+    svc = sorted(prof.services())[0]
+    mix = PriorityMix(per_service={svc: "standard"})
+    state = TokenServingState(
+        [svc], prof, lambda s: 100.0,
+        _small_knobs(hbm_gb_per_unit=1.0, retry_budget=0), mix=mix,
+    )
+    state.sync_instances({7: (svc, 1, 50.0)}, lambda uid: 1.0, 0.0)
+    inst = state.instances[7]
+    # pin the twin's shape so exactly one request is mid-decode at crash
+    # time (the profile-derived slots/step-time vary across services)
+    inst.slots = 1
+    inst.step_time_s = lambda b: 0.01
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        r = state.make_request(svc, 0.0, rng)  # charges class_arrivals
+        r.prompt_tokens, r.decode_tokens = 4, 8
+        inst.enqueue(r)
+    inst.run_until(0.05, state.metrics)
+    assert len(inst.live) == 1
+    spilled = state.crash_instance(7, inst.clock)
+    assert spilled == 1
+    # retry_budget=0: the in-flight spill is dropped, the queued one survives
+    assert state.metrics.class_retry_dropped[STANDARD_CLASS] == 1
+    assert len(state.spill[svc]) == 1
+    counts = state.priority_summary()["standard"]
+    assert counts["arrivals"] == counts["completed"] + counts[
+        "deadline_dropped"] + counts["retry_dropped"] + counts[
+        "shed"] + counts["in_system"]
+
+
+# -- fail-fast config validation ---------------------------------------------------
+
+
+class TestConfigValidation:
+    def test_unknown_axis_values_raise_with_valid_names(self):
+        with pytest.raises(ValueError, match="poisson"):
+            SimConfig(arrivals="bogus")
+        with pytest.raises(ValueError, match="gpu_loss"):
+            SimConfig(fault_profile="bogus")
+        with pytest.raises(ValueError, match="token"):
+            SimConfig(serving_model="bogus")
+        with pytest.raises(ValueError, match="poisson"):
+            SimConfig(serving_model="token", arrivals="fluid")
+
+    def test_priority_mix_requires_the_token_model(self):
+        with pytest.raises(ValueError, match="token"):
+            SimConfig(priority_mix=PriorityMix())
+        SimConfig(serving_model="token", priority_mix=PriorityMix())  # ok
+
+    def test_build_cell_rejects_unknown_axes(self):
+        for bad in (
+            ScenarioCell("nope", "greedy", "micro", "uniform"),
+            ScenarioCell("flash", "nope", "micro", "uniform"),
+            ScenarioCell("flash", "greedy", "nope", "uniform"),
+            ScenarioCell("flash", "greedy", "micro", "nope"),
+            ScenarioCell("flash", "greedy", "micro", "uniform", "nope"),
+            ScenarioCell(
+                "flash", "greedy", "micro", "uniform", serving="nope"
+            ),
+            ScenarioCell(
+                "flash", "greedy", "micro", "uniform", priority="nope"
+            ),
+        ):
+            with pytest.raises(ValueError, match="valid"):
+                build_cell(bad, seed=0)
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        data = compute_golden()
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print("run under pytest, or with --regen to rewrite the golden file")
