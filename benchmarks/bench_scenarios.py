@@ -124,9 +124,14 @@ def main() -> int:
     ap.add_argument("--list", action="store_true", dest="list_cells",
                     help="enumerate the default matrix's cells and exit")
     ap.add_argument("--cell", default=None, metavar="SPEC",
-                    help="run one cell (trace:sched:scale:slo[:fault]) "
-                         "instead of the full matrix; writes to --out when "
-                         "given, else a temp file")
+                    help="run one cell instead of the full matrix; SPEC is "
+                         "trace:sched:scale:slo[:fault[:serving[:priority]]] "
+                         "with the last three segments optional (defaults "
+                         "none:fluid:none), e.g. "
+                         "flash:greedy:micro:uniform:instance_crash:token:mixed"
+                         "; an unknown axis value errors with that axis's "
+                         "registered names; writes to --out when given, else "
+                         "a temp file")
     args = ap.parse_args()
 
     if args.list_cells:

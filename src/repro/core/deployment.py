@@ -254,12 +254,16 @@ class ConfigSpace:
         self._ib: List[int] = []  # service index b (may equal a)
         self._ua: List[float] = []  # utility toward a
         self._ub: List[float] = []  # utility toward b
+        self._ta: List[float] = []  # raw throughput toward a (for rebind)
+        self._tb: List[float] = []  # raw throughput toward b
         self._index_of: Dict[Tuple, int] = {}  # canonical form -> config index
         self._build()
         self.ia = np.array(self._ia, dtype=np.int64)
         self.ib = np.array(self._ib, dtype=np.int64)
         self.ua = np.array(self._ua, dtype=np.float64)
         self.ub = np.array(self._ub, dtype=np.float64)
+        self.ta = np.array(self._ta, dtype=np.float64)
+        self.tb = np.array(self._tb, dtype=np.float64)
         # per-service boolean masks over the config space: row i is True at
         # configs touching service i (MCTS edge generation unions these
         # instead of scanning every config in Python).
@@ -318,13 +322,16 @@ class ConfigSpace:
                     self._ia.append(i)
                     self._ib.append(j)
                     self._ua.append(ta / req[i])
+                    self._ta.append(ta)
                     if j != i:
                         tb = sum(
                             x.throughput for x in cfg.assignments if x.service == b
                         )
                         self._ub.append(tb / req[j])
+                        self._tb.append(tb)
                     else:
                         self._ub.append(0.0)
+                        self._tb.append(0.0)
 
     # -- scoring (§5.3) ----------------------------------------------------------
     def score_all(self, completion: np.ndarray) -> np.ndarray:
@@ -399,6 +406,66 @@ class ConfigSpace:
         if self._packed_tables is None:
             self._packed_tables = _PackedTables(self)
         return self._packed_tables
+
+    # -- warm-start rebinding ----------------------------------------------------
+    def compatible(self, workload: Workload) -> bool:
+        """True when ``workload`` differs from this space's only in required
+        throughputs: same service names in the same order, same latency SLOs.
+        Enumeration (configs, assignments, batch sizes) depends only on names
+        and latency bounds, so a compatible workload can :meth:`rebind`."""
+        if workload.names != self.workload.names:
+            return False
+        return all(
+            a.slo.latency_ms == b.slo.latency_ms
+            for a, b in zip(workload.services, self.workload.services)
+        )
+
+    def rebind(self, workload: Workload) -> "ConfigSpace":
+        """A ConfigSpace over ``workload`` sharing this one's enumeration.
+
+        The reoptimize loop's workloads differ only in required rates (traffic
+        drift), which enter the space solely through the ``t / req`` utility
+        normalization.  Rebinding recomputes those divisions from the stored
+        raw throughputs — the identical IEEE operations a cold build performs,
+        so a rebound space is bit-identical to a fresh ``ConfigSpace`` (pinned
+        by tests) at a fraction of the cost.  Config indices carry over
+        one-for-one, so incumbent count vectors need no remapping.
+        """
+        if not self.compatible(workload):
+            raise ValueError(
+                "rebind requires identical service names and latency SLOs; "
+                "build a fresh ConfigSpace instead"
+            )
+        new = object.__new__(ConfigSpace)
+        new.rules = self.rules
+        new.profile = self.profile
+        new.workload = workload
+        new.req = workload.required()
+        new.partitions = self.partitions
+        new._tput = self._tput
+        new._batch = self._batch
+        new._assign = self._assign
+        new.configs = self.configs
+        new._ia = self._ia
+        new._ib = self._ib
+        new._ua = self._ua
+        new._ub = self._ub
+        new._ta = self._ta
+        new._tb = self._tb
+        new._index_of = self._index_of
+        new.ia = self.ia
+        new.ib = self.ib
+        new.ta = self.ta
+        new.tb = self.tb
+        # the only req-dependent arrays: same element-wise divisions _build
+        # performs (ta / req[i]), so results match a cold build bit-for-bit
+        new.ua = self.ta / new.req[self.ia] if len(self.ia) else self.ua
+        new.ub = self.tb / new.req[self.ib] if len(self.ib) else self.ub
+        new.service_masks = self.service_masks
+        new.service_configs = self.service_configs
+        new._util_matrix = None  # req-dependent lazies rebuild on demand
+        new._packed_tables = None
+        return new
 
     def __len__(self) -> int:
         return len(self.configs)

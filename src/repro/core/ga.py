@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import Counter
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -65,6 +66,23 @@ def fitness_batch(
             row += space.utility_cached(cfg)
     slack = np.sum(np.clip(comp - 1.0, 0.0, None), axis=1)
     return [(dep.num_gpus, float(s)) for dep, s in zip(deps, slack)]
+
+
+def _canonical_counter(dep: Deployment) -> Counter:
+    return Counter(cfg.canonical() for cfg in dep.configs)
+
+
+def deployment_edit_distance(a: Deployment, b: Deployment) -> int:
+    """Devices to add plus devices to remove to turn ``a`` into ``b``.
+
+    Configs compare by canonical form — instances of equal size are
+    interchangeable (§5.2), so reordering is free.  The §6 controller's
+    transition cost is roughly proportional to this count (each differing
+    device is a destroy and/or create), which is why the warm-start path
+    bounds it.
+    """
+    ca, cb = _canonical_counter(a), _canonical_counter(b)
+    return sum((ca - cb).values()) + sum((cb - ca).values())
 
 
 def mutate_swap(dep: Deployment, rng: np.random.Generator, swaps: int = 4) -> Deployment:
@@ -170,7 +188,19 @@ class GeneticOptimizer:
         self.rng = np.random.default_rng(seed)
         self.time_budget_s = time_budget_s
 
-    def run(self, seed_deployment: Deployment) -> GAResult:
+    def run(
+        self,
+        seed_deployment: Deployment,
+        incumbent: Optional[Deployment] = None,
+        edit_budget: Optional[int] = None,
+    ) -> GAResult:
+        # Warm start: with an incumbent and an edit budget, children whose
+        # edit distance from the incumbent exceeds the budget are discarded
+        # *after* the rng has been consumed for them — the random stream is
+        # identical with and without the bound, only selection changes.
+        inc_counter: Optional[Counter] = None
+        if incumbent is not None and edit_budget is not None:
+            inc_counter = _canonical_counter(incumbent)
         space = self.space
         pop: List[Deployment] = [seed_deployment]
         # diversify the initial population with mutated copies
@@ -189,6 +219,16 @@ class GeneticOptimizer:
             for parent in pop:
                 child = crossover(parent, space, self.slow, self.rng, self.erase_frac)
                 children.append(mutate_swap(child, self.rng))
+            if inc_counter is not None:
+                kept = []
+                for ch in children:
+                    cc = _canonical_counter(ch)
+                    dist = sum((cc - inc_counter).values()) + sum(
+                        (inc_counter - cc).values()
+                    )
+                    if dist <= edit_budget:
+                        kept.append(ch)
+                children = kept
             # elitism: originals compete with children (§5.2); the whole
             # merged population is scored in one batched call, then
             # decorate-sort-undecorate keeps the stable ordering

@@ -25,6 +25,7 @@ the paper's O(n²m).
 
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -208,3 +209,85 @@ class GreedyFast(OptimizerProcedure):
             )
             scores[upd] = need[ia[upd]] * ua[upd] + need[ib[upd]] * ub[upd]
         return out, counts, extras
+
+
+# ---------------------------------------------------------------------------
+# Warm-start repair (incremental reoptimization)
+# ---------------------------------------------------------------------------
+
+
+def warm_repair(
+    space: ConfigSpace,
+    fast: OptimizerProcedure,
+    incumbent: IndexedDeployment,
+    edit_budget: Optional[int] = None,
+    deadline: Optional[float] = None,
+) -> Optional[Tuple[IndexedDeployment, int]]:
+    """Repair ``incumbent`` against ``space``'s (drifted) workload.
+
+    Instead of packing a deployment from empty, start from the incumbent's
+    completion under the new required rates and edit it: an *add* phase runs
+    the fast algorithm from the incumbent's completion (covering only the
+    deficit), then a *trim* phase drops devices the (possibly lower) demand
+    no longer needs.  One edit = one device added or removed, the same count
+    :func:`repro.core.ga.deployment_edit_distance` measures — the §6
+    controller pays per device changed, so bounding edits bounds transition
+    cost.
+
+    Returns ``(repaired, edits)``; ``None`` when the mandatory adds alone
+    exceed ``edit_budget`` (callers fall back to a cold solve).  Trims are
+    the anytime part: they stop at ``edit_budget`` or ``deadline`` (a
+    ``time.monotonic()`` instant), never at the cost of validity.
+    Deterministic for a fixed (space, incumbent, budget): ties break toward
+    the lowest config index, enumerated configs before extras.
+    """
+    counts = incumbent.counts.copy()
+    extras = list(incumbent.extras)
+    c = space.completion_of_counts(counts)
+    for cfg in extras:
+        c = c + space.utility_cached(cfg)
+    edits = 0
+    # -- add phase (mandatory): cover the deficit left by upward drift ------
+    if bool(np.any(c < 1.0 - 1e-9)):
+        added = fast.produce(c.copy())
+        edits += len(added)
+        if edit_budget is not None and edits > edit_budget:
+            return None
+        for cfg in added:
+            i = space.index_of(cfg)
+            if i >= 0:
+                counts[i] += 1
+                c = c + space.utility_of(i)
+            else:
+                extras.append(cfg)
+                c = c + space.utility_cached(cfg)
+    # -- trim phase (anytime): shed devices over-provisioned by downward
+    # drift, largest normalized utility first; every intermediate state is a
+    # valid deployment, so stopping early is always safe
+    ia, ib, ua, ub = space.ia, space.ib, space.ua, space.ub
+    while edit_budget is None or edits < edit_budget:
+        if deadline is not None and time.monotonic() >= deadline:
+            break
+        gi, g_best = -1, 0.0
+        if len(counts):
+            removable = (counts > 0) & (c[ia] - ua >= 1.0) & (c[ib] - ub >= 1.0)
+            if bool(removable.any()):
+                gain = np.where(removable, ua + ub, -1.0)
+                gi = int(np.argmax(gain))
+                g_best = float(gain[gi])
+        ei, e_best = -1, 0.0
+        for k, cfg in enumerate(extras):
+            u = space.utility_cached(cfg)
+            if bool(np.all(c - u >= 1.0)):
+                s = float(u.sum())
+                if s > e_best:
+                    ei, e_best = k, s
+        if gi < 0 and ei < 0:
+            break
+        if gi >= 0 and g_best >= e_best:
+            counts[gi] -= 1
+            c = c - space.utility_of(gi)
+        else:
+            c = c - space.utility_cached(extras.pop(ei))
+        edits += 1
+    return IndexedDeployment(space, counts, extras), edits

@@ -11,6 +11,7 @@ switch algorithms easily") — the registry also exposes the beyond-paper
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -24,7 +25,7 @@ from repro.core.deployment import (
     OptimizerProcedure,
 )
 from repro.core.ga import GAResult, GeneticOptimizer
-from repro.core.greedy import GreedyFast
+from repro.core.greedy import GreedyFast, warm_repair
 from repro.core.mcts import MCTSSlow
 from repro.core.profiles import PerfProfile
 from repro.core.rms import ReconfigRules
@@ -97,6 +98,13 @@ class OptimizeReport:
     ga_history: List[int]
     fast_seconds: float
     total_seconds: float
+    # warm-start telemetry: ``warm`` is True when phase 1 repaired the
+    # incumbent instead of solving cold; ``warm_edits`` counts devices
+    # added + removed against it; ``warm_fallback`` names why the warm path
+    # bailed to a cold solve ("divergence" | "edit_budget"), None otherwise
+    warm: bool = False
+    warm_edits: Optional[int] = None
+    warm_fallback: Optional[str] = None
 
     def best_indexed(self, space: ConfigSpace) -> IndexedDeployment:
         """The winning deployment in the array-native representation."""
@@ -117,6 +125,10 @@ class TwoPhaseOptimizer:
         seed: int = 0,
         time_budget_s: Optional[float] = None,
         space: Optional[ConfigSpace] = None,
+        incumbent: Optional[IndexedDeployment] = None,
+        incumbent_workload: Optional[Workload] = None,
+        warm_divergence: float = 0.5,
+        warm_edit_frac: float = 0.5,
     ):
         # enumeration dominates setup cost — callers that already hold the
         # ConfigSpace for this exact problem can pass it in
@@ -132,6 +144,21 @@ class TwoPhaseOptimizer:
             self.space = space
         else:
             self.space = ConfigSpace(rules, profile, workload)
+        # Warm start (incremental reoptimization): phase 1 repairs the
+        # incumbent against the new workload instead of packing from empty.
+        # ``incumbent_workload`` (what the incumbent was sized for) gates the
+        # cold-solve fallback on required-rate divergence; without it the
+        # caller has already decided the incumbent is usable.
+        if incumbent is not None and incumbent.space is not self.space:
+            raise ValueError(
+                "incumbent must be indexed over this optimizer's space — "
+                "rebind the old ConfigSpace to the new workload first"
+            )
+        self.incumbent = incumbent
+        self.incumbent_workload = incumbent_workload
+        self.warm_divergence = warm_divergence
+        self.warm_edit_frac = warm_edit_frac
+        self.time_budget_s = time_budget_s
         self.fast = FAST_ALGORITHMS[fast](self.space)
         if slow == "mcts":
             self.slow: OptimizerProcedure = MCTSSlow(
@@ -148,14 +175,58 @@ class TwoPhaseOptimizer:
             time_budget_s=time_budget_s,
         )
 
+    def _warm_fast(
+        self, deadline: Optional[float]
+    ) -> "tuple[Optional[Deployment], Optional[int], Optional[str], Optional[int]]":
+        """Phase-1 warm path: (deployment, edits, fallback reason, budget)."""
+        inc = self.incumbent
+        if self.incumbent_workload is not None and self.space.workload.n:
+            old = self.incumbent_workload.required()
+            new = self.space.req
+            div = float(np.max(np.abs(new - old) / np.maximum(old, 1e-12)))
+            if div > self.warm_divergence:
+                return None, None, "divergence", None
+        budget = max(2, int(math.ceil(self.warm_edit_frac * max(inc.num_gpus, 1))))
+        repaired = warm_repair(
+            self.space, self.fast, inc, edit_budget=budget, deadline=deadline
+        )
+        if repaired is None:
+            return None, None, "edit_budget", None
+        idx, edits = repaired
+        return idx.to_deployment(), edits, None, budget
+
     def run(self, skip_phase2: bool = False) -> OptimizeReport:
         t0 = time.monotonic()
-        fast_dep = self.fast.solve()
+        fast_dep: Optional[Deployment] = None
+        warm_edits: Optional[int] = None
+        warm_fallback: Optional[str] = None
+        edit_budget: Optional[int] = None
+        if self.incumbent is not None:
+            deadline = (
+                t0 + self.time_budget_s if self.time_budget_s is not None else None
+            )
+            fast_dep, warm_edits, warm_fallback, edit_budget = self._warm_fast(deadline)
+        warm = fast_dep is not None
+        if fast_dep is None:
+            fast_dep = self.fast.solve()
         t1 = time.monotonic()
         assert fast_dep.is_valid(self.space.workload)
         if skip_phase2:
-            return OptimizeReport(fast_dep, fast_dep, [fast_dep.num_gpus], t1 - t0, t1 - t0)
-        result: GAResult = self.ga.run(fast_dep)
+            return OptimizeReport(
+                fast_dep,
+                fast_dep,
+                [fast_dep.num_gpus],
+                t1 - t0,
+                t1 - t0,
+                warm=warm,
+                warm_edits=warm_edits,
+                warm_fallback=warm_fallback,
+            )
+        result: GAResult = self.ga.run(
+            fast_dep,
+            incumbent=self.incumbent.to_deployment() if warm else None,
+            edit_budget=edit_budget,
+        )
         t2 = time.monotonic()
         return OptimizeReport(
             fast_deployment=fast_dep,
@@ -163,4 +234,7 @@ class TwoPhaseOptimizer:
             ga_history=result.history,
             fast_seconds=t1 - t0,
             total_seconds=t2 - t0,
+            warm=warm,
+            warm_edits=warm_edits,
+            warm_fallback=warm_fallback,
         )

@@ -26,6 +26,7 @@ from repro.sim.report import (
     TransitionRecord,
 )
 from repro.sim.scenarios import (
+    FLUID_SCHEDULERS,
     PRIORITY_MIXES,
     SCALES,
     SCHEDULERS,
@@ -63,7 +64,8 @@ __all__ = [
     "PendingTransition", "ReoptimizeDriver", "ServiceTimeline", "SimConfig",
     "SimReport", "Trace", "TransitionRecord", "correlated_surge_trace",
     "diurnal_trace", "flash_crowd_trace", "poisson_burst_trace",
-    "replay_trace", "FAULT_PROFILES", "SCALES", "SCHEDULERS", "SLO_POLICIES",
+    "replay_trace", "FAULT_PROFILES", "FLUID_SCHEDULERS", "SCALES",
+    "SCHEDULERS", "SLO_POLICIES",
     "TRACE_SHAPES", "CellResult", "ScaleSpec", "ScenarioCell", "build_cell",
     "default_matrix", "run_cell", "run_matrix", "smoke_matrix",
     "InstanceModel", "TokenKnobs", "TokenRequest", "TokenServingState",

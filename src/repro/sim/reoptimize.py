@@ -74,6 +74,10 @@ class ReoptimizeDriver:
         optimizer_kwargs: Optional[Dict] = None,
         latency_targets: Optional[Mapping[str, float]] = None,
         control_plane: Optional[ControlPlane] = None,
+        warm_start: bool = False,
+        warm_divergence: float = 0.5,
+        warm_edit_frac: float = 0.5,
+        time_budget_s: Optional[float] = None,
     ):
         self.rules = rules
         self.profile = profile
@@ -95,6 +99,23 @@ class ReoptimizeDriver:
         self.use_phase2 = use_phase2
         self.seed = seed
         self.optimizer_kwargs = dict(optimizer_kwargs or {})
+        # Driver-level knobs may also arrive through optimizer_kwargs — the
+        # scenario matrix's SCHEDULERS registry reaches the driver only that
+        # way — so pop them before the dict is forwarded to the optimizer.
+        self.warm_start = bool(self.optimizer_kwargs.pop("warm_start", warm_start))
+        self.warm_divergence = float(
+            self.optimizer_kwargs.pop("warm_divergence", warm_divergence)
+        )
+        self.warm_edit_frac = float(
+            self.optimizer_kwargs.pop("warm_edit_frac", warm_edit_frac)
+        )
+        self.time_budget_s = self.optimizer_kwargs.pop("time_budget_s", time_budget_s)
+        # warm-start state: the last solve's ConfigSpace and winning indexed
+        # deployment, carried cycle to cycle.  Populated only when warm_start
+        # is on, so the cold path's behavior (and bytes) cannot shift.
+        self._warm_space = None
+        self._incumbent: Optional[IndexedDeployment] = None
+        self._incumbent_workload: Optional[Workload] = None
         self.workload: Optional[Workload] = None  # currently deployed target
         # wall-clock of the most recent optimizer pipeline run; optimizer
         # latency sits on the serving hot path (every reoptimize fires the
@@ -131,16 +152,42 @@ class ReoptimizeDriver:
 
     # -- optimization -------------------------------------------------------------
     def optimize(self, workload: Workload) -> Deployment:
+        kwargs = dict(self.optimizer_kwargs)
+        if self.time_budget_s is not None:
+            kwargs["time_budget_s"] = self.time_budget_s
+        if (
+            self.warm_start
+            and self._warm_space is not None
+            and self._incumbent is not None
+            and self._warm_space.compatible(workload)
+        ):
+            # warm start: rebind last cycle's ConfigSpace to the drifted
+            # rates (shared enumeration, so incumbent counts carry over
+            # index-for-index) and seed the optimizer with the incumbent
+            space = self._warm_space.rebind(workload)
+            kwargs.update(
+                space=space,
+                incumbent=IndexedDeployment(
+                    space, self._incumbent.counts.copy(), list(self._incumbent.extras)
+                ),
+                incumbent_workload=self._incumbent_workload,
+                warm_divergence=self.warm_divergence,
+                warm_edit_frac=self.warm_edit_frac,
+            )
         opt = TwoPhaseOptimizer(
             self.rules,
             self.profile,
             workload,
             seed=self.seed,
-            **self.optimizer_kwargs,
+            **kwargs,
         )
         report = opt.run(skip_phase2=not self.use_phase2)
         self.last_optimize_report = report
         dep = report.best_deployment
+        if self.warm_start:
+            self._warm_space = opt.space
+            self._incumbent = report.best_indexed(opt.space)
+            self._incumbent_workload = workload
         if self.control_plane is not None:
             # refresh the reconciler's declarative target (§6's "desired
             # state"): the deployment, its array-native twin, and the
@@ -217,8 +264,20 @@ class ReoptimizeDriver:
         """Direct §6 transition, or the reconciler in control-plane mode.
 
         Reconcile stats surface only under a fault profile, so the ``none``
-        profile's reports keep their exact direct-path bytes."""
+        profile's reports keep their exact direct-path bytes.  When the warm
+        optimizer actually produced the target (``report.warm``), the edit
+        distance to the running deployment is bounded, so the delta-aware
+        :meth:`Controller.transition_incremental` applies O(edits) actions
+        instead of exchange-and-compact's O(cluster) scans; cold solves —
+        including warm-path divergence/edit-budget fallbacks — keep the full
+        §6 path, so every warm-off byte is untouched."""
         if self.control_plane is None:
+            if (
+                self.warm_start
+                and self.last_optimize_report is not None
+                and self.last_optimize_report.warm
+            ):
+                return self.controller.transition_incremental(cluster, new_dep), None
             return self.controller.transition(cluster, new_dep), None
         assert self.desired is not None, "optimize() must set the target"
         report, stats = self.control_plane.reconciler.reconcile(

@@ -1,15 +1,23 @@
-"""Declarative scenario matrix: trace x scheduler x scale x SLO x faults.
+"""Declarative scenario matrix over seven axes.
 
 The RMS framing (§3) makes the paper's pipeline one point in a family of
 scheduling algorithms; this module is the harness that compares the family
 under diverse workloads.  A :class:`ScenarioCell` names one coordinate of
-the cross-product
 
-    TRACE_SHAPES  x  SCHEDULERS  x  SCALES  x  SLO_POLICIES  x  FAULT_PROFILES
+    trace x scheduler x scale x SLO x fault x serving-model x priority-mix
 
-(plus two curated slices: the fault axis and the token-serving axis — see
-:func:`default_matrix`), and :func:`run_cell` runs that cell through the
-closed-loop simulator
+spelled ``trace:sched:scale:slo[:fault[:serving[:priority]]]`` on the
+``benchmarks/bench_scenarios.py --cell`` command line (trailing axes may be
+omitted and default to ``none``/``fluid``/``none``).  The axis registries —
+:data:`TRACE_SHAPES`, :data:`SCHEDULERS`, :data:`SCALES`,
+:data:`SLO_POLICIES`, :data:`repro.controlplane.faults.FAULT_PROFILES`, the
+serving models ``("fluid", "token")``, and :data:`PRIORITY_MIXES` — each map
+a name to that axis's knobs; ``docs/SCENARIOS.md`` documents every valid
+name.  The first four axes run as a full cross-product (pinned to the
+historical :data:`FLUID_TRACES` / :data:`FLUID_SCHEDULERS` /
+:data:`FLUID_SCALES` sets); faults, token serving, overload/priority, and
+warm-start run as curated slices — see :func:`default_matrix`.
+:func:`run_cell` runs one cell through the closed-loop simulator
 (:class:`repro.sim.simulator.ClusterSimulator`), returning a
 :class:`CellResult` with the comparable per-cell metrics:
 
@@ -50,7 +58,14 @@ Extending the matrix (ROADMAP "Scenario matrix" / "Control plane"):
   * serving model    -> ``ScenarioCell.serving`` selects
     ``SimConfig.serving_model`` ("fluid" | "token"); token cells also carry
     TTFT/TPOT/queue-delay percentiles and preemption/refusal counts in
-    ``CellResult.token_serving``.
+    ``CellResult.token_serving``;
+  * priority mix     -> a ``PRIORITY_MIXES`` entry naming a
+    :class:`repro.sim.traffic.PriorityMix` (per-class traffic weights +
+    deadlines; see its docstring) — non-"none" cells run the token model's
+    overload-resilience path and carry ``CellResult.priority``;
+  * scheduler *variants* (e.g. ``greedy_warm``) -> a ``SCHEDULERS`` entry
+    whose dict carries driver-level knobs (``warm_start`` & co.) alongside
+    the ``fast`` algorithm name.
 """
 
 from __future__ import annotations
@@ -138,13 +153,35 @@ TRACE_SHAPES: Dict[str, Callable[[Mapping[str, float], ScaleSpec, int], Trace]] 
 FLUID_TRACES = ("burst", "diurnal", "surge")
 FLUID_SCALES = ("medium", "small")
 
-# scheduler name -> optimizer_kwargs routed to TwoPhaseOptimizer's registry
-SCHEDULERS: Dict[str, Dict[str, str]] = {
+# scheduler name -> optimizer_kwargs routed through the ReoptimizeDriver:
+# "fast" selects a repro.core.optimizer.FAST_ALGORITHMS entry; driver-level
+# knobs (warm_start, warm_divergence, warm_edit_frac, time_budget_s) are
+# popped by the driver before the rest reaches TwoPhaseOptimizer
+SCHEDULERS: Dict[str, Dict] = {
     "greedy": {"fast": "greedy"},
     "beam": {"fast": "beam"},
     "frag": {"fast": "frag"},
     "energy": {"fast": "energy"},
+    # warm-start incremental reoptimization: the paper greedy seeded from
+    # the incumbent deployment (rebound ConfigSpace + delta repair + bounded
+    # edit distance).  Runs on the curated WARM_SLICE, not the fluid
+    # cross-product — FLUID_SCHEDULERS pins the historical product.  The
+    # thresholds are wider than the core defaults because the matrix's
+    # traces swing 3-4x between 1800 s reoptimize checks: divergence 4.0
+    # admits those swings, edit budget 1.0 x incumbent still bounds the
+    # transition to half a full rebuild's device churn.
+    "greedy_warm": {
+        "fast": "greedy",
+        "warm_start": True,
+        "warm_divergence": 4.0,
+        "warm_edit_frac": 1.0,
+    },
 }
+
+# the fluid cross-product is pinned to the historical scheduler set;
+# "greedy_warm" compares against its "greedy" twin on the curated warm
+# slice instead of quadrupling the product with near-duplicate cells
+FLUID_SCHEDULERS = ("beam", "energy", "frag", "greedy")
 
 # policy name -> (sorted service names -> (default latency ms, overrides))
 SLO_POLICIES: Dict[
@@ -232,6 +269,13 @@ OVERLOAD_SLICE = (
     ("flash", "gpu_loss"),
 )
 
+# the warm-start slice: greedy_warm against the two trace/scale points where
+# reoptimization fires most — a diurnal swing at medium scale (many gradual
+# drifts: the warm path's home turf) and a correlated surge at small scale
+# (sharp rate jumps probing the divergence fallback).  Each cell reads
+# against its "greedy" twin in the fluid product.
+WARM_SLICE = (("diurnal", "medium"), ("surge", "small"))
+
 
 def _validate_axis(value: str, registry, axis: str) -> None:
     """Fail fast with the registry's valid names — not a KeyError mid-run."""
@@ -249,7 +293,7 @@ def default_matrix() -> List[ScenarioCell]:
     cells = [
         ScenarioCell(trace, sched, scale, slo)
         for trace in sorted(FLUID_TRACES)
-        for sched in sorted(SCHEDULERS)
+        for sched in sorted(FLUID_SCHEDULERS)
         for scale in sorted(FLUID_SCALES)
         for slo in sorted(SLO_POLICIES)
     ]
@@ -270,6 +314,10 @@ def default_matrix() -> List[ScenarioCell]:
         )
         for trace, fault in OVERLOAD_SLICE
     ]
+    cells += [
+        ScenarioCell(trace, "greedy_warm", scale, "uniform")
+        for trace, scale in WARM_SLICE
+    ]
     return cells
 
 
@@ -287,6 +335,7 @@ def smoke_matrix() -> List[ScenarioCell]:
             "flash", "greedy", "micro", "uniform", "instance_crash",
             serving="token", priority="mixed",
         ),
+        ScenarioCell("surge", "greedy_warm", "small", "uniform"),
     ]
 
 

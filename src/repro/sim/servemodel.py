@@ -114,6 +114,30 @@ class TokenKnobs:
     instance of MIG size ``s`` gets ``s * hbm_gb_per_unit`` GB of page pool.
     Defaults are sized so a flash crowd actually produces KV pressure
     (refusals/preemptions) at the curated ``micro`` scenario scale.
+
+    Fields, by group:
+
+    * request shape — ``prompt_tokens`` / ``decode_tokens`` are *means*;
+      each request draws uniformly in ``[1, 2*mean)`` from the simulator's
+      seeded rng.  ``max_len`` caps context like ``Engine.max_len``;
+      ``prefill_chunk`` is prompt tokens prefilled per step-equivalent.
+    * ``profiled_decode_tokens`` — the single most consequential knob: the
+      decode budget the *profile's* latency numbers assumed.  Per-token
+      step time is ``latency_ms(svc, size, b) / 1000 /
+      profiled_decode_tokens``, so when drawn budgets exceed it, requests
+      outlive the profiled request latency and real capacity falls short
+      of the planner's rate math — the fidelity gap the token model exists
+      to show (the curated token slice sets drawn budgets to 4x the
+      profiled one).  ``None`` means "profile matches the workload".
+    * KV budget — ``page_size`` / ``kv_heads`` / ``head_dim`` /
+      ``n_layers`` / ``hbm_gb_per_unit`` determine ``num_pages(size)``.
+    * retry policy (``retry_*``) — capped exponential backoff for refused /
+      crash-spilled requests; consulted only when a
+      :class:`repro.sim.traffic.PriorityMix` is active.  A ``PriorityMix``
+      assigns each request a priority class (by traffic ``weights``) and an
+      absolute SLO deadline (``deadline_s`` per class, ``inf`` =
+      deadline-less batch); admission is class-major, expiries are dropped
+      for goodput, and KV-pressure eviction targets the lowest class first.
     """
 
     prompt_tokens: int = 24  # mean prompt length (uniform in [1, 2*mean))

@@ -91,6 +91,11 @@ class SimConfig:
     # gains the per-class priority block.  None keeps every historical code
     # path (and its goldens) byte-identical.
     priority_mix: Optional[PriorityMix] = None
+    # warm-start incremental reoptimization: seed each reoptimize from the
+    # incumbent deployment (rebound ConfigSpace + greedy delta repair +
+    # bounded edit distance) instead of re-solving from scratch.  Off by
+    # default — every historical report stays byte-identical.
+    warm_start: bool = False
 
     def __post_init__(self):
         # fail fast with the valid names — not a deep KeyError mid-run
@@ -148,6 +153,7 @@ class ClusterSimulator:
             seed=self.config.seed,
             optimizer_kwargs=optimizer_kwargs,
             latency_targets=self.config.latency_targets,
+            warm_start=self.config.warm_start,
         )
         self.cluster = SimulatedCluster(rules, self.config.initial_gpus)
         # the control plane (None in direct mode): reconciler + fault

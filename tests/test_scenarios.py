@@ -17,6 +17,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core import SyntheticPaperProfiles, a100_rules
 from repro.sim import (
     FAULT_PROFILES,
+    FLUID_SCHEDULERS,
     SCALES,
     SCHEDULERS,
     SLO_POLICIES,
@@ -40,10 +41,15 @@ def test_default_matrix_covers_the_required_axes():
     every registered fault profile and the curated token-serving slice."""
     cells = default_matrix()
     fluid_cells = [
-        c for c in cells if c.fault == "none" and c.serving == "fluid"
+        c
+        for c in cells
+        if c.fault == "none"
+        and c.serving == "fluid"
+        and c.scheduler in FLUID_SCHEDULERS
     ]
     fault_cells = [c for c in cells if c.fault != "none"]
     token_cells = [c for c in cells if c.serving == "token"]
+    warm_cells = [c for c in cells if c.scheduler == "greedy_warm"]
     traces = {c.trace for c in fluid_cells}
     scheds = {c.scheduler for c in fluid_cells}
     scales = {c.scale for c in fluid_cells}
@@ -52,6 +58,13 @@ def test_default_matrix_covers_the_required_axes():
     assert len(scales) >= 2
     assert len(fluid_cells) == (
         len(traces) * len(scheds) * len(scales) * len(SLO_POLICIES)
+    )
+    # the warm-start slice: greedy_warm cells exist and each has a "greedy"
+    # twin in the fluid product to read against
+    assert warm_cells
+    fluid_points = {(c.trace, c.scale, c.slo) for c in fluid_cells}
+    assert all(
+        (c.trace, c.scale, c.slo) in fluid_points for c in warm_cells
     )
     # the fifth axis: every non-none fault profile appears in the slice
     assert {c.fault for c in fault_cells} == set(FAULT_PROFILES) - {"none"}

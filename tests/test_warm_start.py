@@ -1,0 +1,314 @@
+"""Warm-start incremental reoptimization tests (ISSUE 8).
+
+Contracts pinned here:
+
+* **Rebind bit-identity** — ``ConfigSpace.rebind`` to a rate-drifted workload
+  produces exactly the arrays a cold ``ConfigSpace`` build would (same IEEE
+  divisions), so incumbent count vectors carry over index-for-index.
+* **Warm determinism** — same seed + same incumbent => byte-identical
+  deployment out of ``TwoPhaseOptimizer``.
+* **Cold-solve fallbacks** — workload divergence beyond the threshold, or an
+  add phase that blows the edit budget, falls back to a deployment equal to
+  the cold solve *exactly* (same configs, same order).
+* **Warm-start off is the default everywhere** and reproduces the recorded
+  ``tests/golden/optimizer_golden.json`` behavior bit-for-bit.
+* **warm_repair** trims over-provisioned capacity on downward drift while
+  keeping every service complete.
+* **transition_incremental** reaches the target content with creates
+  strictly before deletes (the §6 transparency order).
+* **Sim-level** — the ``greedy_warm`` scenario cell is seed-deterministic
+  and its transitions stay transparent.
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+import test_optimizer_golden as tg  # noqa: E402  (shared problem builders)
+
+from repro.core import (  # noqa: E402
+    ConfigSpace,
+    Deployment,
+    GeneticOptimizer,
+    GreedyFast,
+    SLO,
+    TwoPhaseOptimizer,
+    Workload,
+    a100_rules,
+)
+from repro.core.cluster import SimulatedCluster  # noqa: E402
+from repro.core.controller import (  # noqa: E402
+    _config_content,
+    _gpu_content,
+)
+from repro.core.deployment import IndexedDeployment  # noqa: E402
+from repro.core.greedy import warm_repair  # noqa: E402
+from repro.sim import ReoptimizeDriver, ScenarioCell, SimConfig, run_cell  # noqa: E402
+
+
+def _problem():
+    return tg._problem(6, 3, 7.4, a100_rules)
+
+
+def _drift(wl: Workload, mult: float) -> Workload:
+    return Workload.make(
+        {s.name: SLO(s.slo.throughput * mult, s.slo.latency_ms) for s in wl.services}
+    )
+
+
+def _dep_bytes(dep: Deployment) -> bytes:
+    return json.dumps([tg._canon(c) for c in dep.configs]).encode()
+
+
+def _incumbent(space: ConfigSpace) -> IndexedDeployment:
+    dep = Deployment(GreedyFast(space).produce(np.zeros(space.workload.n)))
+    return IndexedDeployment.from_deployment(space, dep)
+
+
+# -- rebind ---------------------------------------------------------------------
+
+
+class TestRebind:
+    def test_rebound_arrays_match_a_cold_build_bit_for_bit(self):
+        prof, wl, space = _problem()
+        wl2 = _drift(wl, 1.37)
+        warm = space.rebind(wl2)
+        cold = ConfigSpace(space.rules, prof, wl2)
+        assert np.array_equal(warm.ua, cold.ua)
+        assert np.array_equal(warm.ub, cold.ub)
+        assert np.array_equal(warm.req, cold.req)
+        assert warm.configs is space.configs  # enumeration is shared, not copied
+
+    def test_rebind_refuses_incompatible_workloads(self):
+        import pytest
+
+        _, wl, space = _problem()
+        changed_latency = Workload.make(
+            {s.name: SLO(s.slo.throughput, 55.0) for s in wl.services}
+        )
+        assert not space.compatible(changed_latency)
+        with pytest.raises(ValueError):
+            space.rebind(changed_latency)
+
+
+# -- optimizer warm path ---------------------------------------------------------
+
+
+class TestWarmOptimizer:
+    def test_same_seed_same_incumbent_byte_identical(self):
+        prof, wl, space = _problem()
+        inc = _incumbent(space)
+        wl2 = _drift(wl, 1.3)
+
+        def solve():
+            sp = space.rebind(wl2)
+            opt = TwoPhaseOptimizer(
+                space.rules, prof, wl2, slow="greedy", ga_rounds=3,
+                ga_population=4, seed=0, space=sp,
+                incumbent=IndexedDeployment(sp, inc.counts.copy(), list(inc.extras)),
+                incumbent_workload=wl,
+                warm_divergence=4.0, warm_edit_frac=1.0,
+            )
+            return opt.run()
+
+        r1, r2 = solve(), solve()
+        assert r1.warm and r2.warm
+        assert r1.warm_edits == r2.warm_edits
+        assert _dep_bytes(r1.best_deployment) == _dep_bytes(r2.best_deployment)
+
+    def test_large_divergence_falls_back_to_the_cold_solve_exactly(self):
+        prof, wl, space = _problem()
+        inc = _incumbent(space)
+        wl2 = _drift(wl, 3.0)  # 200% drift >> 0.5 threshold
+        sp = space.rebind(wl2)
+        warm = TwoPhaseOptimizer(
+            space.rules, prof, wl2, slow="greedy", ga_rounds=3, ga_population=4,
+            seed=0, space=sp,
+            incumbent=IndexedDeployment(sp, inc.counts.copy(), list(inc.extras)),
+            incumbent_workload=wl, warm_divergence=0.5,
+        ).run()
+        cold = TwoPhaseOptimizer(
+            space.rules, prof, wl2, slow="greedy", ga_rounds=3, ga_population=4,
+            seed=0,
+        ).run()
+        assert not warm.warm
+        assert warm.warm_fallback == "divergence"
+        assert _dep_bytes(warm.best_deployment) == _dep_bytes(cold.best_deployment)
+
+    def test_blown_edit_budget_falls_back_to_the_cold_solve_exactly(self):
+        prof, wl, space = _problem()
+        inc = _incumbent(space)
+        wl2 = _drift(wl, 1.4)  # needs many adds, budget floor is 2
+        sp = space.rebind(wl2)
+        warm = TwoPhaseOptimizer(
+            space.rules, prof, wl2, slow="greedy", ga_rounds=3, ga_population=4,
+            seed=0, space=sp,
+            incumbent=IndexedDeployment(sp, inc.counts.copy(), list(inc.extras)),
+            incumbent_workload=wl, warm_divergence=4.0, warm_edit_frac=0.0,
+        ).run()
+        cold = TwoPhaseOptimizer(
+            space.rules, prof, wl2, slow="greedy", ga_rounds=3, ga_population=4,
+            seed=0,
+        ).run()
+        assert not warm.warm
+        assert warm.warm_fallback == "edit_budget"
+        assert _dep_bytes(warm.best_deployment) == _dep_bytes(cold.best_deployment)
+
+    def test_warm_solution_is_valid_and_edit_bounded(self):
+        prof, wl, space = _problem()
+        inc = _incumbent(space)
+        wl2 = _drift(wl, 1.3)
+        sp = space.rebind(wl2)
+        rep = TwoPhaseOptimizer(
+            space.rules, prof, wl2, slow="greedy", ga_rounds=3, ga_population=4,
+            seed=0, space=sp,
+            incumbent=IndexedDeployment(sp, inc.counts.copy(), list(inc.extras)),
+            incumbent_workload=wl, warm_divergence=4.0, warm_edit_frac=1.0,
+        ).run()
+        assert rep.warm
+        assert rep.best_deployment.is_valid(wl2)
+        from repro.core.ga import deployment_edit_distance
+
+        budget = max(2, int(np.ceil(1.0 * inc.num_gpus)))
+        assert (
+            deployment_edit_distance(rep.best_deployment, inc.to_deployment())
+            <= budget
+        )
+
+
+# -- greedy warm repair ----------------------------------------------------------
+
+
+class TestWarmRepair:
+    def test_downward_drift_trims_capacity(self):
+        _, wl, space = _problem()
+        inc = _incumbent(space)
+        sp = space.rebind(_drift(wl, 0.6))
+        inc2 = IndexedDeployment(sp, inc.counts.copy(), list(inc.extras))
+        repaired, edits = warm_repair(sp, GreedyFast(sp), inc2)
+        assert edits > 0
+        assert repaired.num_gpus < inc.num_gpus
+        assert repaired.to_deployment().is_valid(sp.workload)
+
+    def test_repair_is_idempotent(self):
+        """With no drift, a second repair finds nothing left to do: the trim
+        phase is a fixpoint (it may trim greedy overshoot once, never twice).
+        """
+        _, wl, space = _problem()
+        inc = _incumbent(space)
+        once, edits1 = warm_repair(space, GreedyFast(space), inc)
+        assert once.num_gpus + edits1 >= inc.num_gpus  # only trims, no adds
+        twice, edits2 = warm_repair(space, GreedyFast(space), once)
+        assert edits2 == 0
+        assert np.array_equal(twice.counts, once.counts)
+
+
+# -- GA incumbent bounding -------------------------------------------------------
+
+
+class TestGABounding:
+    def test_unbounded_incumbent_leaves_the_rng_stream_untouched(self):
+        """Filtering happens after children are built, so a huge edit budget
+        must reproduce the incumbent-free run exactly."""
+        _, wl, space = _problem()
+        seed_dep = Deployment(GreedyFast(space).produce(np.zeros(wl.n)))
+
+        def run(**kw):
+            ga = GeneticOptimizer(
+                space, GreedyFast(space), population=4, rounds=3, seed=0
+            )
+            return ga.run(seed_dep, **kw)
+
+        plain = run()
+        bounded = run(incumbent=seed_dep, edit_budget=10**9)
+        assert _dep_bytes(plain.best) == _dep_bytes(bounded.best)
+        assert plain.history == bounded.history
+
+
+# -- incremental transition ------------------------------------------------------
+
+
+class TestTransitionIncremental:
+    def _driver_cycle(self, mult):
+        from repro.core import SyntheticPaperProfiles
+
+        prof = SyntheticPaperProfiles(n_models=6, seed=3)
+        rng = np.random.default_rng(3)
+        rates = {m: float(rng.lognormal(7.4, 0.7)) for m in prof.services()}
+        driver = ReoptimizeDriver(
+            a100_rules(), prof, seed=0, warm_start=True,
+            warm_divergence=4.0, warm_edit_frac=1.0,
+        )
+        cluster = SimulatedCluster(a100_rules(), 1)
+        driver.initial_deploy(cluster, rates)
+        n0 = len(cluster.actions_applied)
+        driver.reoptimize(
+            cluster, {s: r * mult for s, r in rates.items()}, now=0.0
+        )
+        return driver, cluster, cluster.actions_applied[n0:]
+
+    def test_reaches_target_content_with_creates_before_deletes(self):
+        driver, cluster, actions = self._driver_cycle(1.3)
+        assert driver.last_optimize_report.warm
+        kinds = [a.kind for a in actions]
+        if "create" in kinds and "delete" in kinds:
+            assert max(i for i, k in enumerate(kinds) if k == "create") < min(
+                i for i, k in enumerate(kinds) if k == "delete"
+            )
+        target = sum(
+            (_config_content(c) for c in driver._incumbent.to_deployment().configs),
+            start=__import__("collections").Counter(),
+        )
+        got = sum(
+            (_gpu_content(g) for g in cluster.gpus.values()),
+            start=__import__("collections").Counter(),
+        )
+        assert got == target
+        # surplus devices drained all the way to empty (reusable next cycle)
+        assert all(
+            not g.instances or g.busy() for g in cluster.gpus.values()
+        )
+
+
+# -- defaults and sim-level ------------------------------------------------------
+
+
+class TestWarmOffDefaults:
+    def test_warm_start_is_off_by_default_at_every_layer(self):
+        from repro.core import SyntheticPaperProfiles
+
+        assert SimConfig().warm_start is False
+        prof = SyntheticPaperProfiles(n_models=3, seed=0)
+        driver = ReoptimizeDriver(a100_rules(), prof)
+        assert driver.warm_start is False
+        _, wl, space = _problem()
+        assert TwoPhaseOptimizer(
+            space.rules, space.profile, wl, space=space
+        ).incumbent is None
+
+    def test_warm_off_reproduces_the_recorded_golden_greedy_entry(self):
+        """The optimizer entry point without an incumbent must still emit the
+        exact configs ``tests/golden/optimizer_golden.json`` records."""
+        with open(tg.GOLDEN_PATH) as f:
+            golden = json.load(f)
+        for name, n, seed, scale, rules_factory in tg.PROBLEMS:
+            prof, wl, space = tg._problem(n, seed, scale, rules_factory)
+            rep = TwoPhaseOptimizer(
+                space.rules, prof, wl, space=space, seed=0
+            ).run(skip_phase2=True)
+            assert not rep.warm
+            want = golden["problems"][name]["greedy"]["configs"]
+            assert [tg._canon(c) for c in rep.fast_deployment.configs] == want
+
+
+class TestWarmScenarioCell:
+    def test_cell_is_deterministic_and_transparent(self):
+        cell = ScenarioCell("surge", "greedy_warm", "small", "uniform")
+        r1, rep1 = run_cell(cell, seed=0)
+        r2, rep2 = run_cell(cell, seed=0)
+        assert rep1.to_json() == rep2.to_json()
+        assert r1.report_sha256 == r2.report_sha256
+        assert r1.transparent

@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Docs smoke: execute the README quickstart verbatim so it cannot rot.
+
+Extracts the fenced code block tagged ``bash quickstart`` from the
+top-level ``README.md`` and runs each command line (comments skipped) from
+the repo root, failing on the first non-zero exit.  CI runs this in both
+test jobs — if someone edits the quickstart into something that no longer
+works, or renames a flag the quickstart uses, the build breaks instead of
+the docs silently lying.
+
+Usage::
+
+    python tools/docs_smoke.py            # run the quickstart
+    python tools/docs_smoke.py --print    # show the extracted commands only
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+README = os.path.join(REPO_ROOT, "README.md")
+FENCE_TAG = "bash quickstart"
+
+
+def extract_quickstart(readme_path: str = README) -> list[str]:
+    """The command lines of the ``bash quickstart`` fenced block."""
+    commands: list[str] = []
+    in_block = False
+    with open(readme_path) as f:
+        for line in f:
+            stripped = line.strip()
+            if stripped == f"```{FENCE_TAG}":
+                in_block = True
+                continue
+            if in_block and stripped == "```":
+                break
+            if in_block and stripped and not stripped.startswith("#"):
+                commands.append(stripped)
+    if not commands:
+        raise SystemExit(
+            f"no ```{FENCE_TAG} block with commands found in {readme_path}"
+        )
+    return commands
+
+
+def main() -> int:
+    commands = extract_quickstart()
+    if "--print" in sys.argv:
+        print("\n".join(commands))
+        return 0
+    for cmd in commands:
+        print(f"[docs-smoke] $ {cmd}", flush=True)
+        proc = subprocess.run(cmd, shell=True, cwd=REPO_ROOT)
+        if proc.returncode != 0:
+            print(
+                f"[docs-smoke] FAILED (exit {proc.returncode}): {cmd}\n"
+                "the README quickstart no longer works — fix the docs or "
+                "the code",
+                file=sys.stderr,
+            )
+            return proc.returncode
+    print(f"[docs-smoke] all {len(commands)} quickstart commands passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
