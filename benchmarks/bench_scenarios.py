@@ -48,6 +48,7 @@ from repro.sim.scenarios import (  # noqa: E402
     default_matrix,
     matrix_doc,
     run_cell,
+    run_cell_obs,
     smoke_matrix,
 )
 
@@ -132,7 +133,24 @@ def main() -> int:
                          "; an unknown axis value errors with that axis's "
                          "registered names; writes to --out when given, else "
                          "a temp file")
+    ap.add_argument("--obs", action="store_true",
+                    help="run cells with the flight recorder on "
+                         "(SimConfig.observability): per-cell obs metrics in "
+                         "each SimReport and a Chrome trace-event export per "
+                         "cell via --trace-out.  Cell report SHAs then differ "
+                         "from the observability-off baseline by design, so "
+                         "never combine with the default BENCH_scenarios.json "
+                         "output path")
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="with --obs: write each cell's Chrome trace-event "
+                         "JSON (Perfetto-loadable) into DIR as "
+                         "<cell name with / -> _>.trace.json")
     args = ap.parse_args()
+    if args.trace_out is not None and not args.obs:
+        ap.error("--trace-out requires --obs")
+    if args.obs and args.out is None and args.cell is None and not args.smoke:
+        ap.error("--obs would overwrite BENCH_scenarios.json with "
+                 "obs-bearing SHAs; pass an explicit --out")
 
     if args.list_cells:
         try:
@@ -155,10 +173,23 @@ def main() -> int:
     else:
         out_path = DEFAULT_OUT
 
+    if args.trace_out:
+        os.makedirs(args.trace_out, exist_ok=True)
     results: Dict[str, Dict] = {}
     for cell in cells:
         t0 = time.perf_counter()
-        res, _rep = run_cell(cell, args.seed)
+        if args.obs:
+            res, _rep, trace_json = run_cell_obs(cell, args.seed)
+            if args.trace_out:
+                trace_path = os.path.join(
+                    args.trace_out,
+                    cell.name.replace("/", "_") + ".trace.json",
+                )
+                with open(trace_path, "w") as f:
+                    f.write(trace_json)
+                    f.write("\n")
+        else:
+            res, _rep = run_cell(cell, args.seed)
         wall = time.perf_counter() - t0
         results[cell.name] = res.to_dict()
         # wall-clock goes to stdout only; the JSON stays seed-deterministic

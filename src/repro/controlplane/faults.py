@@ -91,7 +91,10 @@ FAULT_PROFILES: Dict[str, FaultProfile] = {}
 
 
 def register_fault_profile(profile: FaultProfile) -> FaultProfile:
-    assert profile.name not in FAULT_PROFILES, profile.name
+    # a real exception, not an assert: registration clashes must surface
+    # even under ``python -O``, where asserts are compiled away
+    if profile.name in FAULT_PROFILES:
+        raise ValueError(f"fault profile {profile.name!r} already registered")
     FAULT_PROFILES[profile.name] = profile
     return profile
 

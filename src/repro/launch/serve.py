@@ -15,6 +15,7 @@ factor is printed.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -43,6 +44,10 @@ def main() -> None:
     ap.add_argument("--size", type=int, default=16,
                     help="slice size credited in the §8.3 profile feedback")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats-json", type=str, default=None, metavar="PATH",
+                    help="write engine TTFT/TPOT stats as JSON in the same "
+                         "metrics schema as the simulator's obs block "
+                         "(docs/OBSERVABILITY.md)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -84,6 +89,11 @@ def main() -> None:
         f"§8.3 feedback: measured correction for ({args.arch}, size={args.size}) "
         f"= {measured.correction(args.arch, args.size):.4f}"
     )
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump(stats.summary(args.arch), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"stats written to {args.stats_json}")
 
 
 if __name__ == "__main__":

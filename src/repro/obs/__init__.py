@@ -1,0 +1,71 @@
+"""Flight-recorder observability: sim-time tracing, metrics, lifecycles.
+
+numpy-only and jax-free (the same import contract as ``repro.core`` /
+``repro.sim`` — the jax-free pin test covers this package too), and
+strictly *sim-time*: nothing in here reads wall clock, so enabling
+observability can never perturb the deterministic report bytes it watches.
+
+Three layers, bundled by :class:`Observability`:
+
+* :mod:`repro.obs.trace` — :class:`SpanTracer`: sim-time spans on named
+  tracks, exported as Chrome trace-event JSON (open in Perfetto).
+* :mod:`repro.obs.metrics` — :class:`MetricsRegistry`: counters, gauges,
+  histograms, sampled per traffic bin into deterministic series.
+* :mod:`repro.obs.flight` — :class:`FlightRecorder`: bounded per-request
+  lifecycle records for the token serving model.
+
+Everything defaults to the null implementations (``Observability.off()``),
+so the instrumented code paths cost one attribute check when the
+``SimConfig.observability`` flag is off — and the historical report bytes
+stay identical, which the golden tests pin.  See ``docs/OBSERVABILITY.md``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    percentile_summary,
+)
+from repro.obs.trace import NullTracer, SpanTracer
+
+__all__ = [
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NullRegistry",
+    "NullTracer",
+    "Observability",
+    "SpanTracer",
+    "percentile_summary",
+]
+
+
+@dataclasses.dataclass
+class Observability:
+    """The bundle the simulator threads through its layers."""
+
+    enabled: bool
+    tracer: Union[SpanTracer, NullTracer]
+    metrics: Union[MetricsRegistry, NullRegistry]
+    flight: Optional[FlightRecorder]
+
+    @classmethod
+    def off(cls) -> "Observability":
+        """Null everything — the zero-cost default."""
+        return cls(False, NullTracer(), NullRegistry(), None)
+
+    @classmethod
+    def on(cls, record_limit: int = 256) -> "Observability":
+        return cls(
+            True, SpanTracer(), MetricsRegistry(), FlightRecorder(record_limit)
+        )

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -363,6 +363,7 @@ class ServeStats:
     served: int = 0
     tokens: int = 0
     preempted: int = 0
+    refused: int = 0  # OutOfPages admission refusals (request stays pending)
     wall_s: float = 0.0
     # per-request latency observations (wall clock): time-to-first-token and
     # mean time-per-output-token — the measured twins of the token-level
@@ -373,6 +374,30 @@ class ServeStats:
     @property
     def throughput(self) -> float:
         return self.served / self.wall_s if self.wall_s else 0.0
+
+    def summary(self, service: str = "engine") -> Dict[str, Any]:
+        """The engine-side stats in the simulator's ``obs`` metrics schema
+        (``launch/serve.py --stats-json`` writes exactly this), so real-run
+        and simulated TTFT/TPOT read side by side: counters under the
+        ``serving.*`` names the :class:`repro.obs.MetricsRegistry` uses,
+        latency percentiles via the shared ``percentile_summary`` keys."""
+        from repro.obs.metrics import percentile_summary
+
+        return {
+            "service": service,
+            "counters": {
+                "serving.completed": float(self.served),
+                "serving.preemptions": float(self.preempted),
+                "serving.refusals": float(self.refused),
+                "serving.tokens": float(self.tokens),
+            },
+            "latency": {
+                **percentile_summary(self.ttft_s, "ttft"),
+                **percentile_summary(self.tpot_s, "tpot"),
+            },
+            "throughput_rps": self.throughput,
+            "wall_s": self.wall_s,
+        }
 
 
 def run_closed_loop(
@@ -405,6 +430,7 @@ def run_closed_loop(
             try:
                 engine.admit(req, rng)
             except OutOfPages:
+                stats.refused += 1
                 continue
             pending.remove(req)
             admitted = True

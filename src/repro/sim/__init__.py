@@ -38,6 +38,7 @@ from repro.sim.scenarios import (
     build_cell,
     default_matrix,
     run_cell,
+    run_cell_obs,
     run_matrix,
     smoke_matrix,
 )
@@ -67,7 +68,8 @@ __all__ = [
     "replay_trace", "FAULT_PROFILES", "FLUID_SCHEDULERS", "SCALES",
     "SCHEDULERS", "SLO_POLICIES",
     "TRACE_SHAPES", "CellResult", "ScaleSpec", "ScenarioCell", "build_cell",
-    "default_matrix", "run_cell", "run_matrix", "smoke_matrix",
+    "default_matrix", "run_cell", "run_cell_obs", "run_matrix",
+    "smoke_matrix",
     "InstanceModel", "TokenKnobs", "TokenRequest", "TokenServingState",
     "PRIORITY_CLASSES", "PRIORITY_MIXES", "PriorityMix",
 ]

@@ -65,6 +65,9 @@ class Clock:
         self.now = t0
 
     def advance_to(self, t: float) -> float:
-        assert t >= self.now - 1e-9, f"clock moved backwards: {self.now} -> {t}"
+        # a real exception, not an assert: this invariant must hold even
+        # under ``python -O``, where asserts are compiled away
+        if t < self.now - 1e-9:
+            raise RuntimeError(f"clock moved backwards: {self.now} -> {t}")
         self.now = max(self.now, t)
         return self.now

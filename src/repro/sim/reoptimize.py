@@ -122,6 +122,10 @@ class ReoptimizeDriver:
         # full greedy/GA/MCTS stack), so the closed loop exposes it for
         # benchmarks without touching the deterministic SimReport bytes
         self.last_optimize_report: Optional[OptimizeReport] = None
+        # flight-recorder observability (repro.obs.Observability): installed
+        # by ClusterSimulator only when SimConfig.observability is on, so the
+        # default path pays one None check per cycle and nothing else
+        self.obs = None
 
     # -- observation --------------------------------------------------------------
     def workload_for(self, observed_rates: Mapping[str, float]) -> Workload:
@@ -243,9 +247,25 @@ class ReoptimizeDriver:
         }
 
         new_dep = self.optimize(new_workload)
+        if self.obs is not None:
+            rep = self.last_optimize_report
+            # zero sim-time: the solve is instantaneous in simulation time
+            # (its real wall clock lives in OptimizeReport, off the report
+            # bytes); warm/cold tells which solver path produced the target
+            self.obs.tracer.span(
+                "reoptimize",
+                "optimize",
+                now,
+                now,
+                args={
+                    "warm": bool(getattr(rep, "warm", False)),
+                    "phase2": self.use_phase2,
+                },
+            )
         pre_instances = cluster.busy_instances()
         gpus_before = cluster.gpus_in_use()
         n0 = len(cluster.instance_trace)
+        na0 = len(cluster.actions_applied)
         clock0 = cluster.clock
         report, stats = self._execute_transition(cluster, new_dep)
         self.workload = new_workload
@@ -253,7 +273,7 @@ class ReoptimizeDriver:
         pending = self._build_pending(
             now, pre_instances, cluster, n0, clock0, report,
             old_required, new_required, gpus_before,
-            trigger="demand", stats=stats,
+            trigger="demand", stats=stats, na0=na0,
         )
         cluster.instance_trace.clear()  # consumed; see initial_deploy
         return pending
@@ -304,6 +324,7 @@ class ReoptimizeDriver:
         pre_instances = cluster.busy_instances()
         gpus_before = cluster.gpus_in_use()
         n0 = len(cluster.instance_trace)
+        na0 = len(cluster.actions_applied)
         clock0 = cluster.clock
         report, stats = self.control_plane.reconciler.reconcile(
             cluster, self.desired
@@ -316,6 +337,7 @@ class ReoptimizeDriver:
             required, required, gpus_before,
             trigger="fault",
             stats=stats if self.control_plane.fault_mode else None,
+            na0=na0,
         )
         cluster.instance_trace.clear()
         return pending
@@ -333,6 +355,7 @@ class ReoptimizeDriver:
         gpus_before: int,
         trigger: str = "demand",
         stats: Optional[ReconcileStats] = None,
+        na0: int = 0,
     ) -> PendingTransition:
         # The cluster trace advances serially (one action at a time); real
         # wall clock is the dependency-aware parallel makespan.  Compress
@@ -375,4 +398,78 @@ class ReoptimizeDriver:
             trigger=trigger,
             reconcile=stats.to_dict() if stats is not None else None,
         )
+        if self.obs is not None:
+            self._trace_transition(now, cluster, n0, na0, clock0, scale, record, stats)
         return PendingTransition(now, end, timeline, record)
+
+    def _trace_transition(
+        self,
+        now: float,
+        cluster: SimulatedCluster,
+        n0: int,
+        na0: int,
+        clock0: float,
+        scale: float,
+        record: TransitionRecord,
+        stats: Optional[ReconcileStats],
+    ) -> None:
+        """Emit the plan/execute spans for one transition, one span per
+        applied §6 action, and the reconcile counters.  Called only when the
+        simulator installed an :class:`repro.obs.Observability` on the
+        driver, so the default path never reaches this."""
+        tracer = self.obs.tracer
+        tracer.span(
+            "reoptimize",
+            "plan",
+            now,
+            now,
+            args={
+                "trigger": record.trigger,
+                "actions": {
+                    k: v for k, v in sorted(record.action_counts.items())
+                },
+            },
+        )
+        tracer.span(
+            "reoptimize",
+            "execute",
+            now,
+            record.end_s,
+            args={
+                "serial_s": round(record.serial_seconds, 6),
+                "parallel_s": round(record.parallel_seconds, 6),
+                "gpus_before": record.gpus_before,
+                "gpus_after": record.gpus_after,
+            },
+        )
+        # each applied action's serial window, compressed by the same factor
+        # as the instance-set timeline.  instance_trace entries pair 1:1 with
+        # actions_applied while record_instance_trace is on (apply() appends
+        # both), so the action's completion clock comes from the trace entry
+        # — robust to fault hooks stretching or wasting wall clock between
+        # attempts — and its start backs off by the charged seconds.
+        trace_tail = cluster.instance_trace[n0:]
+        actions = cluster.actions_applied[na0:]
+        seconds = cluster.applied_seconds[na0:]
+        for (clock, _snap), action, dur in zip(trace_tail, actions, seconds):
+            t1 = now + (clock - clock0) * scale
+            t0 = now + (clock - dur - clock0) * scale
+            args = {"gpu": action.gpu}
+            if action.service:
+                args["service"] = action.service
+            if action.size:
+                args["size"] = action.size
+            if action.kind == "migrate":
+                args["dst_gpu"] = action.dst_gpu
+            tracer.span("actions", action.kind, t0, t1, args=args)
+        m = self.obs.metrics
+        m.counter("transitions").inc(1.0)
+        m.histogram("transition.parallel_s").observe(record.parallel_seconds)
+        if stats is not None:
+            m.counter("reconcile.iterations").inc(float(stats.iterations))
+            m.counter("reconcile.retried").inc(float(stats.retried))
+            m.counter("reconcile.abandoned").inc(float(stats.abandoned))
+            for name in stats.faults:
+                tracer.instant(
+                    "reconcile", f"fault:{name}", now, args={"trigger": record.trigger}
+                )

@@ -122,6 +122,12 @@ class SimReport:
     # priority mix is active (the serializer omits the key otherwise so
     # no-priority reports keep their exact bytes)
     priority: Optional[Dict] = None
+    # flight-recorder observability (SimConfig.observability=True only): the
+    # metrics-registry snapshot, span counts, and — token mode — the
+    # per-request flight-recorder block, all sim-time.  None by default, and
+    # the serializer omits the key, so every historical report (and all 67
+    # BENCH cell SHAs) keeps its exact bytes.
+    obs: Optional[Dict] = None
 
     # -- derived -----------------------------------------------------------------
     def slo_satisfaction(self, svc: str) -> float:
@@ -288,6 +294,9 @@ class SimReport:
                 if self.priority is not None
                 else {}
             ),
+            # observability only: absent unless SimConfig.observability was
+            # on, so default-mode reports keep their exact bytes
+            **({"obs": self.obs} if self.obs is not None else {}),
         }
 
     def to_json(self) -> str:

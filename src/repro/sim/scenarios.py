@@ -380,7 +380,7 @@ class CellResult:
 
 
 def build_cell(
-    cell: ScenarioCell, seed: int = 0
+    cell: ScenarioCell, seed: int = 0, observability: bool = False
 ) -> Tuple[ClusterSimulator, Trace]:
     """Materialize one cell: profiles, trace, config, wired simulator.
 
@@ -412,6 +412,7 @@ def build_cell(
             TOKEN_SLICE_KNOBS if cell.serving == "token" else None
         ),
         priority_mix=PRIORITY_MIXES[cell.priority],
+        observability=observability,
     )
     sim = ClusterSimulator(
         a100_rules(), prof, trace, cfg,
@@ -420,10 +421,34 @@ def build_cell(
     return sim, trace
 
 
-def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
-    sim, trace = build_cell(cell, seed)
+def run_cell(
+    cell: ScenarioCell, seed: int = 0, observability: bool = False
+) -> Tuple[CellResult, SimReport]:
+    sim, trace = build_cell(cell, seed, observability=observability)
     rep = sim.run()
+    return _cell_result(cell, sim, trace, rep), rep
 
+
+def run_cell_obs(
+    cell: ScenarioCell, seed: int = 0, record_limit: int = 256
+) -> Tuple[CellResult, SimReport, str]:
+    """Run one cell with the flight recorder on; additionally returns the
+    tracer's Chrome trace-event JSON (Perfetto-loadable, deterministic —
+    same seed, byte-identical export).  Note ``report_sha256`` hashes the
+    obs-bearing report, so it differs from the cell's observability-off SHA
+    by design (the byte-identity contract covers observability *off*)."""
+    sim, trace = build_cell(cell, seed, observability=True)
+    sim.config.obs_record_limit = record_limit
+    if record_limit != 256:
+        # the recorder was sized at construction; re-limit before running
+        sim.obs.flight.record_limit = record_limit
+    rep = sim.run()
+    return _cell_result(cell, sim, trace, rep), rep, sim.obs.tracer.export_json()
+
+
+def _cell_result(
+    cell: ScenarioCell, sim: ClusterSimulator, trace: Trace, rep: SimReport
+) -> CellResult:
     gpus_peak = max(
         [rep.final_gpus]
         + [t.gpus_before for t in rep.transitions]
@@ -440,7 +465,7 @@ def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
         sim.cluster.busy_instances().values(), sim.cluster.gpus_in_use()
     )
     reconciles = [t.reconcile for t in rep.transitions if t.reconcile]
-    result = CellResult(
+    return CellResult(
         cell=cell,
         slo_satisfaction={s: rep.slo_satisfaction(s) for s in rep.services},
         mean_attainment=float(
@@ -467,7 +492,6 @@ def run_cell(cell: ScenarioCell, seed: int = 0) -> Tuple[CellResult, SimReport]:
         token_serving=rep.latency,
         priority=rep.priority,
     )
-    return result, rep
 
 
 def matrix_doc(

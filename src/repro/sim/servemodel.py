@@ -61,6 +61,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import percentile_summary
 from repro.serving.paged_cache import OutOfPages, PagePool, page_bytes
 from repro.sim.traffic import PRIORITY_CLASSES, STANDARD_CLASS, PriorityMix
 
@@ -256,7 +258,18 @@ class InstanceModel:
         except OutOfPages:
             self.pool.release(req.rid)
             metrics.refusals[req.service] += 1
+            if metrics.recorder is not None:
+                metrics.recorder.note(
+                    req.rid, "refused", self.clock, uid=self.uid
+                )
             return False
+        if metrics.recorder is not None:
+            metrics.recorder.note(
+                req.rid,
+                "resumed" if req.admit_s >= 0.0 else "admitted",
+                self.clock,
+                uid=self.uid,
+            )
         if req.admit_s < 0.0:
             req.admit_s = self.clock
             metrics.queue_delay_s[req.service].append(
@@ -269,6 +282,8 @@ class InstanceModel:
         if req.first_token_s < 0.0:
             req.first_token_s = self.clock
             metrics.ttft_s[req.service].append(self.clock - req.arrival_s)
+            if metrics.recorder is not None:
+                metrics.recorder.note(req.rid, "first_token", self.clock)
         if req.done or req.context_len >= self.knobs.max_len:
             self._finish(req, metrics)
         else:
@@ -325,6 +340,13 @@ class InstanceModel:
                     q.pop(i)
                     metrics.deadline_dropped[req.service] += 1
                     metrics.class_deadline_dropped[req.priority] += 1
+                    if metrics.recorder is not None:
+                        metrics.recorder.close(
+                            req.rid,
+                            "deadline_dropped",
+                            self.clock,
+                            cause="deadline expired while queued",
+                        )
                     continue
                 if self._try_admit(req, metrics):
                     q.pop(i)
@@ -337,6 +359,13 @@ class InstanceModel:
                 if req.retries > self.knobs.retry_budget:
                     metrics.retry_dropped[req.service] += 1
                     metrics.class_retry_dropped[req.priority] += 1
+                    if metrics.recorder is not None:
+                        metrics.recorder.close(
+                            req.rid,
+                            "retry_dropped",
+                            self.clock,
+                            cause="retry budget exhausted after refusals",
+                        )
                 else:
                     req.next_try_s = self.clock + self.knobs.retry_backoff_s(
                         req.retries
@@ -345,6 +374,13 @@ class InstanceModel:
                         self.backoff, (req.next_try_s, self._seq, req)
                     )
                     self._seq += 1
+                    if metrics.recorder is not None:
+                        metrics.recorder.note(
+                            req.rid,
+                            "backoff",
+                            self.clock,
+                            next_try_s=req.next_try_s,
+                        )
             if len(self.live) >= self.slots or scanned >= ADMIT_SCAN:
                 break
 
@@ -431,6 +467,14 @@ class InstanceModel:
                     self.pool.release(req.rid)
                     req.preemptions += 1
                     metrics.preemptions[req.service] += 1
+                    if metrics.recorder is not None:
+                        metrics.recorder.note(
+                            req.rid,
+                            "preempted",
+                            self.clock,
+                            uid=self.uid,
+                            cause="kv_pressure",
+                        )
                     resumed.append(req)
                     # mark it out of the live batch: a later request's
                     # victim search this same step must not pick it again
@@ -448,6 +492,14 @@ class InstanceModel:
                 self.pool.release(victim.rid)
                 victim.preemptions += 1
                 metrics.preemptions[victim.service] += 1
+                if metrics.recorder is not None:
+                    metrics.recorder.note(
+                        victim.rid,
+                        "preempted",
+                        self.clock,
+                        uid=self.uid,
+                        cause="evicted_for_higher_class",
+                    )
                 resumed.append(victim)
 
     def _finish(self, req: TokenRequest, metrics: "TokenMetrics") -> None:
@@ -461,6 +513,15 @@ class InstanceModel:
         metrics.class_completed[req.priority] += 1
         if req.finish_s <= req.deadline_s:
             metrics.class_goodput[req.priority] += 1
+        if metrics.recorder is not None:
+            # a request that hit the context cap before its decode budget
+            # finished truncated, like the engine's max_len path
+            metrics.recorder.close(
+                req.rid,
+                "completed" if req.done else "truncated",
+                self.clock,
+                cause="" if req.done else "context cap",
+            )
 
     # -- one traffic bin --------------------------------------------------------
     def run_until(self, t_end: float, metrics: "TokenMetrics") -> None:
@@ -522,6 +583,14 @@ class InstanceModel:
             req.preemptions += 1
             metrics.preemptions[req.service] += 1
             req.generated = 0  # KV and sampled tokens are gone
+            if metrics.recorder is not None:
+                metrics.recorder.note(
+                    req.rid,
+                    "crashed",
+                    self.clock,
+                    uid=self.uid,
+                    cause="instance process died mid-decode",
+                )
             inflight.append(req)
         queued: List[TokenRequest] = []
         for q in self.queues:
@@ -591,6 +660,10 @@ class TokenMetrics:
     class_retries: List[int] = dataclasses.field(
         default_factory=lambda: [0] * len(PRIORITY_CLASSES)
     )
+    # flight-recorder observability (SimConfig.observability=True only):
+    # every lifecycle site guards on ``recorder is not None``, so the None
+    # default keeps the hot path — and all token goldens — byte-identical
+    recorder: Optional[FlightRecorder] = None
 
     def __post_init__(self):
         for svc in self.services:
@@ -605,12 +678,9 @@ class TokenMetrics:
 
 
 def _summary(vals: List[float], prefix: str) -> Dict[str, float]:
-    if not vals:
-        return {f"{prefix}_p{int(p)}_s": 0.0 for p in _PCTS}
-    a = np.asarray(vals, dtype=np.float64)
-    return {
-        f"{prefix}_p{int(p)}_s": float(np.percentile(a, p)) for p in _PCTS
-    }
+    # the shared repro.obs helper computes the exact same bytes; the serve
+    # CLI's --stats-json reuses it so the real engine emits this schema too
+    return percentile_summary(vals, prefix, _PCTS)
 
 
 class TokenServingState:
@@ -631,12 +701,13 @@ class TokenServingState:
         latency_slo_for: Callable[[str], float],
         knobs: Optional[TokenKnobs] = None,
         mix: Optional[PriorityMix] = None,
+        recorder: Optional[FlightRecorder] = None,
     ):
         self.knobs = knobs or TokenKnobs()
         self.profile = profile
         self.latency_slo_for = latency_slo_for
         self.mix = mix
-        self.metrics = TokenMetrics(list(services))
+        self.metrics = TokenMetrics(list(services), recorder=recorder)
         self.instances: Dict[int, InstanceModel] = {}
         self.spill: Dict[str, List[TokenRequest]] = {s: [] for s in services}
         self._next_rid = 0
@@ -690,12 +761,24 @@ class TokenServingState:
             req.priority = cls
             req.deadline_s = arrival_s + self.mix.deadline_s[cls]
         self.metrics.class_arrivals[req.priority] += 1
+        if self.metrics.recorder is not None:
+            self.metrics.recorder.arrival(
+                rid, svc, arrival_s,
+                priority=req.priority, deadline_s=req.deadline_s,
+            )
         return req
 
     def record_shed(self, req: TokenRequest) -> None:
         """Charge one admission-control shed against the request's class
         (the per-service shed series is charged by the simulator)."""
         self.metrics.class_shed[req.priority] += 1
+        if self.metrics.recorder is not None:
+            self.metrics.recorder.close(
+                req.rid,
+                "shed",
+                req.arrival_s,
+                cause="degraded-mode admission control",
+            )
 
     def retry_or_drop(self, req: TokenRequest, now: float) -> bool:
         """Charge one backoff retry for a spilled in-flight request; False
@@ -707,8 +790,17 @@ class TokenServingState:
         if req.retries > self.knobs.retry_budget:
             m.retry_dropped[req.service] += 1
             m.class_retry_dropped[req.priority] += 1
+            if m.recorder is not None:
+                m.recorder.close(
+                    req.rid,
+                    "retry_dropped",
+                    now,
+                    cause="retry budget exhausted after spill",
+                )
             return False
         req.next_try_s = now + self.knobs.retry_backoff_s(req.retries)
+        if m.recorder is not None:
+            m.recorder.note(req.rid, "backoff", now, next_try_s=req.next_try_s)
         return True
 
     # -- instance-set sync -------------------------------------------------------
@@ -724,6 +816,11 @@ class TokenServingState:
             for req in inst.live:
                 self.metrics.preemptions[req.service] += 1
             for req in inst.drain():
+                if self.metrics.recorder is not None and id(req) in inflight:
+                    # a migration is a preemption from the request's view
+                    self.metrics.recorder.note(
+                        req.rid, "migrated", now, uid=uid
+                    )
                 if (
                     self.resilience
                     and id(req) in inflight
@@ -780,7 +877,12 @@ class TokenServingState:
             self.spill[svc] = pending
             return
         for req in pending:
-            self.instances[pick()].enqueue(req)
+            uid = pick()
+            self.instances[uid].enqueue(req)
+            if self.metrics.recorder is not None:
+                self.metrics.recorder.note(
+                    req.rid, "queued", req.arrival_s, uid=uid
+                )
 
     def serve_bin(self, t_end: float) -> None:
         for uid in sorted(self.instances):

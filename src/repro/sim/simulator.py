@@ -32,6 +32,7 @@ from repro.controlplane.spec import ClusterSpec
 from repro.core.cluster import SimulatedCluster
 from repro.core.profiles import PerfProfile
 from repro.core.rms import ReconfigRules
+from repro.obs import Observability
 from repro.serving.router import InstanceHandle, WeightedRouter
 
 from repro.sim.events import (
@@ -96,6 +97,13 @@ class SimConfig:
     # bounded edit distance) instead of re-solving from scratch.  Off by
     # default — every historical report stays byte-identical.
     warm_start: bool = False
+    # flight-recorder observability (repro.obs): sim-time span tracing, a
+    # per-bin-sampled metrics registry, and (token mode) the per-request
+    # flight recorder, all surfaced through SimReport.obs and the tracer's
+    # Chrome trace-event export.  Off by default — every historical report
+    # (and all 67 BENCH cell SHAs) stays byte-identical.
+    observability: bool = False
+    obs_record_limit: int = 256  # flight-recorder request cap (token mode)
 
     def __post_init__(self):
         # fail fast with the valid names — not a deep KeyError mid-run
@@ -123,6 +131,10 @@ class SimConfig:
             raise ValueError(
                 "priority_mix requires serving_model='token' (the fluid "
                 "model has no per-request priority semantics)"
+            )
+        if self.obs_record_limit < 0:
+            raise ValueError(
+                f"obs_record_limit must be >= 0, got {self.obs_record_limit}"
             )
         if self.fault_profile != "none":
             self.control_plane = True
@@ -156,6 +168,16 @@ class ClusterSimulator:
             warm_start=self.config.warm_start,
         )
         self.cluster = SimulatedCluster(rules, self.config.initial_gpus)
+        # flight-recorder observability: null implementations when off, so
+        # every instrumentation site costs one attribute check and the
+        # historical report bytes cannot shift
+        self.obs = (
+            Observability.on(self.config.obs_record_limit)
+            if self.config.observability
+            else Observability.off()
+        )
+        if self.obs.enabled:
+            self.driver.obs = self.obs
         # the control plane (None in direct mode): reconciler + fault
         # injector + degraded-mode admission control under one profile
         self.control_plane: Optional[ControlPlane] = None
@@ -188,6 +210,7 @@ class ClusterSimulator:
                 lambda svc: targets.get(svc, default_slo),
                 self.config.token_knobs,
                 mix=self.config.priority_mix,
+                recorder=self.obs.flight,  # None when observability is off
             )
             # per-service [preemptions, refusals, deadline_dropped,
             # retry_dropped] seen through the prior bin, for the per-bin
@@ -304,6 +327,8 @@ class ClusterSimulator:
             )
         )
 
+        tot_backlog = 0.0  # observability gauges (cost: two adds per svc)
+        tot_shed = 0.0
         for svc in self.trace.services:
             rate = float(self.trace.rates[svc][k])
             if self.config.arrivals == "poisson":
@@ -366,6 +391,15 @@ class ClusterSimulator:
             )
             if self._fault_mode:
                 series["shed"].append(shed)
+            tot_backlog += backlog
+            tot_shed += shed
+
+        if self.obs.enabled:
+            m = self.obs.metrics
+            m.gauge("queue.depth").set(tot_backlog)
+            if self._fault_mode:
+                m.counter("admission.shed").inc(tot_shed)
+            m.sample(t + dt)
 
     def _process_bin_token(
         self,
@@ -495,6 +529,7 @@ class ClusterSimulator:
         # accounting pass; the last bin's window is open-ended so step
         # overrun past the trace end still counts its completions
         t1 = float("inf") if k == self.trace.num_bins - 1 else t + dt
+        tot_completed = 0.0
         for svc in self.trace.services:
             members = by_svc.get(svc, [])
             capacity_rate = sum(m[2] for m in members)
@@ -504,9 +539,11 @@ class ClusterSimulator:
             ref = tok.metrics.refusals[svc]
             dd = tok.metrics.deadline_dropped[svc]
             rd = tok.metrics.retry_dropped[svc]
+            done = float(tok.completed_in(svc, t, t1))
+            tot_completed += done
             series = out[svc]
             series["arrivals"].append(float(arrived[svc]))
-            series["served"].append(float(tok.completed_in(svc, t, t1)))
+            series["served"].append(done)
             series["capacity"].append(capacity_rate * dt)
             series["backlog"].append(float(tok.in_system(svc)))
             series["required"].append(req_rate * dt)
@@ -521,6 +558,59 @@ class ClusterSimulator:
             self._tok_prev[svc] = [pre, ref, dd, rd]
             if self._fault_mode:
                 series["shed"].append(shed_by_svc[svc])
+
+        if self.obs.enabled:
+            m = self.obs.metrics
+            tm = tok.metrics
+            used = total_pages = backoff_n = 0
+            depth = [0] * len(PRIORITY_CLASSES)
+            for inst in tok.instances.values():
+                used += inst.pool.num_pages - inst.pool.free_pages
+                total_pages += inst.pool.num_pages
+                backoff_n += len(inst.backoff)
+                for cls, q in enumerate(inst.queues):
+                    depth[cls] += len(q)
+            spilled = sum(len(v) for v in tok.spill.values())
+            m.gauge("pages.used").set(float(used))
+            m.gauge("pages.total").set(float(total_pages))
+            m.gauge("queue.depth").set(float(sum(depth) + spilled))
+            if tok.mix is not None:
+                for cls, name in enumerate(PRIORITY_CLASSES):
+                    m.gauge(f"queue.depth.{name}").set(float(depth[cls]))
+                m.gauge("backoff.heap").set(float(backoff_n))
+                m.counter("serving.deadline_dropped").inc_to(
+                    float(sum(tm.deadline_dropped.values()))
+                )
+                m.counter("serving.retry_dropped").inc_to(
+                    float(sum(tm.retry_dropped.values()))
+                )
+                m.counter("serving.retries").inc_to(
+                    float(sum(tm.class_retries))
+                )
+            # counters advance to the model's running totals, so per-bin
+            # deltas fall out of the sampled series without shadow state
+            m.counter("serving.preemptions").inc_to(
+                float(sum(tm.preemptions.values()))
+            )
+            m.counter("serving.refusals").inc_to(
+                float(sum(tm.refusals.values()))
+            )
+            m.counter("serving.completed").inc_to(
+                float(sum(len(v) for v in tm.completed_at.values()))
+            )
+            if self._fault_mode:
+                m.counter("admission.shed").inc(sum(shed_by_svc.values()))
+            m.sample(t + dt)
+            self.obs.tracer.span(
+                "serving",
+                f"bin{k}",
+                t,
+                t + dt,
+                args={
+                    "arrivals": int(sum(arrived.values())),
+                    "completed": int(tot_completed),
+                },
+            )
 
     # -- main loop ---------------------------------------------------------------
     def run(self) -> SimReport:
@@ -573,6 +663,23 @@ class ClusterSimulator:
                 observed = trace.mean_rates(
                     ev.time - cfg.reoptimize_every_s, ev.time
                 )
+                if self.obs.enabled:
+                    # the observe leg of observe->optimize->plan->execute:
+                    # zero-duration (rates are read instantaneously in sim
+                    # time), carrying the windowed per-service rates
+                    self.obs.tracer.span(
+                        "reoptimize",
+                        "observe",
+                        ev.time,
+                        ev.time,
+                        args={
+                            "window_s": cfg.reoptimize_every_s,
+                            "rates": {
+                                s: round(float(r), 6)
+                                for s, r in sorted(observed.items())
+                            },
+                        },
+                    )
                 pending = self.driver.reoptimize(self.cluster, observed, ev.time)
                 if pending is not None:
                     self._pending = pending
@@ -586,15 +693,33 @@ class ClusterSimulator:
                 rec = self._apply_device_fault(ev.payload, ev.time)
                 if rec is not None:
                     self._faults.append(rec)
+                    if self.obs.enabled:
+                        self.obs.tracer.instant(
+                            "faults",
+                            f"inject:{rec.kind}",
+                            ev.time,
+                            args={
+                                "target": rec.target,
+                                "fault_domain": rec.fault_domain,
+                                "killed_instances": rec.killed_instances,
+                            },
+                        )
+                        self.obs.metrics.counter("faults.injected").inc(1.0)
                     if rec.kind != "instance_crash":
                         self._routers.clear()
                         # the control plane notices after its detection delay
-                        queue.push(
-                            ev.time
-                            + self.control_plane.profile.detection_delay_s,
-                            RECONCILE,
-                            None,
-                        )
+                        delay = self.control_plane.profile.detection_delay_s
+                        if self.obs.enabled:
+                            # the inject->detect arc: the window where the
+                            # cluster is degraded but the plane is blind
+                            self.obs.tracer.span(
+                                "faults",
+                                f"detect:{rec.kind}",
+                                ev.time,
+                                ev.time + delay,
+                                args={"target": rec.target},
+                            )
+                        queue.push(ev.time + delay, RECONCILE, None)
                     # an instance crash restarts in place: the device is
                     # healthy and the instance set unchanged, so there is
                     # nothing for the reconciler to repair — the cost is
@@ -609,6 +734,21 @@ class ClusterSimulator:
                     self._pending = pending
                     transitions.append(pending.record)
                     queue.push(pending.end_s, TRANSITION_DONE, None)
+                    if self.obs.enabled:
+                        # the detect->recover arc closes when the repair
+                        # transition finishes paying its action latencies
+                        self.obs.tracer.span(
+                            "faults",
+                            "recover",
+                            ev.time,
+                            pending.end_s,
+                            args={
+                                "actions": sum(
+                                    pending.record.action_counts.values()
+                                ),
+                                "gpus_after": pending.record.gpus_after,
+                            },
+                        )
             elif ev.kind == END:
                 break
 
@@ -647,6 +787,15 @@ class ClusterSimulator:
             )
             for svc, series in out.items()
         }
+        obs_block: Optional[Dict] = None
+        if self.obs.enabled:
+            self.obs.tracer.assert_well_formed()
+            obs_block = {
+                "metrics": self.obs.metrics.snapshot(),
+                "spans": self.obs.tracer.span_summary(),
+            }
+            if self.obs.flight is not None and self._token is not None:
+                obs_block["flight"] = self.obs.flight.snapshot()
         return SimReport(
             seed=cfg.seed,
             bin_s=trace.bin_s,
@@ -668,6 +817,7 @@ class ClusterSimulator:
                 if self._token is not None and self._token.mix is not None
                 else None
             ),
+            obs=obs_block,
         )
 
     # -- device faults -----------------------------------------------------------

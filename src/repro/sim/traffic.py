@@ -111,10 +111,17 @@ class Trace:
     rates: Dict[str, np.ndarray]
 
     def __post_init__(self):
-        assert self.bin_s > 0, "bin width must be positive"
-        assert self.rates, "trace needs at least one service"
+        # input validation as real exceptions, not asserts: these must fire
+        # even under ``python -O``, where asserts are compiled away
+        if self.bin_s <= 0:
+            raise ValueError(f"bin width must be positive, got {self.bin_s}")
+        if not self.rates:
+            raise ValueError("trace needs at least one service")
         n = {len(r) for r in self.rates.values()}
-        assert len(n) == 1, "all services must cover the same bins"
+        if len(n) != 1:
+            raise ValueError(
+                f"all services must cover the same bins, got lengths {sorted(n)}"
+            )
 
     @property
     def services(self) -> list:
@@ -169,7 +176,11 @@ class Trace:
 
 def _bins(duration_s: float, bin_s: float) -> int:
     n = int(round(duration_s / bin_s))
-    assert n >= 1, "trace must span at least one bin"
+    if n < 1:
+        raise ValueError(
+            f"trace must span at least one bin "
+            f"(duration_s={duration_s}, bin_s={bin_s})"
+        )
     return n
 
 
@@ -185,7 +196,8 @@ def diurnal_trace(
 ) -> Trace:
     """Day/night cycle: a raised cosine between ``night_frac * peak`` at the
     trough and ``peak`` at midday, with optional multiplicative jitter."""
-    assert 0.0 <= night_frac <= 1.0
+    if not 0.0 <= night_frac <= 1.0:
+        raise ValueError(f"night_frac must be in [0, 1], got {night_frac}")
     n = _bins(duration_s, bin_s)
     period = period_s if period_s is not None else duration_s
     t = (np.arange(n) + 0.5) * bin_s + phase_s
@@ -269,8 +281,13 @@ def correlated_surge_trace(
     the aggregate demand spike is what stresses a scheduler: every service
     needs capacity in the same bins, so there is no slack to steal.
     """
-    assert 0.0 <= correlation <= 1.0
-    assert surge_len_bins >= 1 and n_surges >= 1
+    if not 0.0 <= correlation <= 1.0:
+        raise ValueError(f"correlation must be in [0, 1], got {correlation}")
+    if surge_len_bins < 1 or n_surges < 1:
+        raise ValueError(
+            f"surge_len_bins and n_surges must be >= 1, got "
+            f"{surge_len_bins} and {n_surges}"
+        )
     n = _bins(duration_s, bin_s)
     rng = np.random.default_rng(seed)
     envelope = np.zeros(n)

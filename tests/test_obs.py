@@ -1,0 +1,638 @@
+"""Flight-recorder observability tests (repro.obs + the instrumented sim).
+
+The contracts ISSUE 9 pins:
+
+* byte identity — observability is strictly additive: for every curated
+  cell class (fluid pin, token, fault, overload/priority, warm-start), a
+  run with ``SimConfig.observability=True`` whose ``obs`` block is stripped
+  re-serializes to *exactly* the pinned observability-off SHA from the
+  existing golden files.  This is stronger than re-running with the flag
+  off: it proves the instrumentation perturbs nothing it watches.
+* golden pin — the curated obs cell's seeded report SHA, Perfetto trace
+  SHA, span summary, flight-recorder accounting, and final counters live in
+  ``tests/golden/obs_golden.json`` (plus the warm cell's baseline SHA,
+  which no other golden records).  Regenerate intentionally with::
+
+      PYTHONPATH=src python tests/test_obs.py --regen
+
+* determinism — same seed, byte-identical obs-bearing report *and*
+  byte-identical Chrome trace-event export.
+* trace validity — the export is well-formed trace-event JSON (phases,
+  non-negative durations, thread-name metadata per track), and the
+  tracer's nesting discipline holds under arbitrary well-formed call
+  sequences (property test) while malformed sequences raise.
+* no wall clock — nothing under ``src/repro/obs/`` imports :mod:`time` or
+  :mod:`datetime` (grep-proof over the sources), so the obs block cannot
+  smuggle nondeterminism into the report bytes.
+* the leaderboard report (``tools/report_scenarios.py``) renders the repo
+  benchmark document byte-identically across runs.
+* the real engine's ``ServeStats.summary()`` speaks the same metrics
+  schema as the simulator's obs block (``serving.*`` counters, shared
+  percentile keys), so ``launch/serve.py --stats-json`` output reads side
+  by side with simulated cells.
+"""
+
+import hashlib
+import json
+import os
+import re
+import sys
+
+import pytest
+
+if __name__ == "__main__":  # regen mode runs without pytest/conftest
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_compat import given, settings, st
+
+from repro.obs import FlightRecorder, MetricsRegistry, NullRegistry, Observability
+from repro.obs.metrics import Histogram, percentile_summary
+from repro.obs.trace import NullTracer, SpanTracer
+from repro.sim import ScenarioCell, SimConfig, run_cell, run_cell_obs
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "obs_golden.json")
+
+# the curated obs cell: token serving, so all three layers (tracer, metrics,
+# flight recorder) are exercised — also the smoke/CI token cell
+OBS_CELL = ScenarioCell("flash", "greedy", "micro", "uniform", serving="token")
+# the warm-start cell has no golden of its own; obs_golden pins its
+# observability-off baseline SHA so the byte-identity sweep covers it
+WARM_CELL = ScenarioCell("surge", "greedy_warm", "small", "uniform")
+# a fault cell: transitions with real §6 actions plus an inject->detect arc
+FAULT_CELL = ScenarioCell("surge", "greedy", "small", "uniform", fault="gpu_loss")
+
+# the byte-identity sweep: one cell per curated class, each mapped to the
+# golden file + key path holding its pinned observability-off report SHA
+IDENTITY_CELLS = [
+    (
+        ScenarioCell("diurnal", "greedy", "small", "uniform"),
+        "servemodel_golden.json",
+        ("fluid_pin", "report_sha256"),
+    ),
+    (
+        OBS_CELL,
+        "servemodel_golden.json",
+        ("token_cells", "flash/greedy/micro/uniform/none/token@seed0",
+         "report_sha256"),
+    ),
+    (
+        FAULT_CELL,
+        "controlplane_golden.json",
+        ("cells", "surge/greedy/small/uniform/gpu_loss", "report_sha256"),
+    ),
+    (
+        ScenarioCell("flash", "greedy", "micro", "uniform",
+                     fault="instance_crash", serving="token",
+                     priority="mixed"),
+        "resilience_golden.json",
+        ("overload_cells",
+         "flash/greedy/micro/uniform/instance_crash/token/mixed@seed0",
+         "report_sha256"),
+    ),
+    (
+        WARM_CELL,
+        "obs_golden.json",
+        ("baseline_pins", "surge/greedy_warm/small/uniform/none@seed0",
+         "report_sha256"),
+    ),
+]
+
+
+def _sha(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def _stripped_sha(rep) -> str:
+    """SHA of the report with its ``obs`` key removed — must equal the
+    observability-off SHA if the instrumentation is strictly additive."""
+    d = rep.to_dict()
+    assert "obs" in d, "observability was on; the obs block must serialize"
+    d.pop("obs")
+    return _sha(json.dumps(d, sort_keys=True, separators=(",", ":")))
+
+
+def _pinned_sha(golden_file, key_path) -> str:
+    with open(os.path.join(GOLDEN_DIR, golden_file)) as f:
+        node = json.load(f)
+    for k in key_path:
+        node = node[k]
+    return node
+
+
+# one obs run of the curated cell is shared by several tests (sim runs are
+# the expensive part; everything below reads the same artifacts)
+_RUNS = {}
+
+
+def _obs_run(cell, seed=0):
+    key = (cell.name, seed)
+    if key not in _RUNS:
+        _RUNS[key] = run_cell_obs(cell, seed)
+    return _RUNS[key]
+
+
+def compute_golden():
+    res, rep, trace_json = run_cell_obs(OBS_CELL, seed=0)
+    obs = rep.obs
+    warm_res, _ = run_cell(WARM_CELL, seed=0)  # observability OFF: the baseline
+    return {
+        "schema": 1,
+        "obs_cell": {
+            "cell": OBS_CELL.name,
+            "seed": 0,
+            "report_sha256": res.report_sha256,
+            "trace_sha256": _sha(trace_json),
+            "span_summary": obs["spans"],
+            "flight": {
+                k: obs["flight"][k]
+                for k in ("record_limit", "tracked", "truncated")
+            },
+            "counters": obs["metrics"]["counters"],
+        },
+        "baseline_pins": {
+            f"{WARM_CELL.name}@seed0": {
+                "cell": WARM_CELL.name,
+                "seed": 0,
+                "report_sha256": warm_res.report_sha256,
+            },
+        },
+    }
+
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+# -- golden pin ------------------------------------------------------------------
+
+
+def test_obs_golden_file_exists():
+    assert os.path.exists(GOLDEN_PATH), (
+        "golden file missing — regenerate with "
+        "`PYTHONPATH=src python tests/test_obs.py --regen`"
+    )
+
+
+def test_obs_cell_matches_golden():
+    res, rep, trace_json = _obs_run(OBS_CELL)
+    want = _load_golden()["obs_cell"]
+    obs = rep.obs
+    got = {
+        "cell": OBS_CELL.name,
+        "seed": 0,
+        "report_sha256": res.report_sha256,
+        "trace_sha256": _sha(trace_json),
+        "span_summary": obs["spans"],
+        "flight": {
+            k: obs["flight"][k] for k in ("record_limit", "tracked", "truncated")
+        },
+        "counters": obs["metrics"]["counters"],
+    }
+    assert got == want, (
+        "seeded obs output diverged from the recorded behavior — if the "
+        "drift is intentional, regen with "
+        "`PYTHONPATH=src python tests/test_obs.py --regen`"
+    )
+
+
+# -- byte identity: obs is strictly additive -------------------------------------
+
+
+@pytest.mark.parametrize(
+    "cell,golden_file,key_path",
+    IDENTITY_CELLS,
+    ids=[c.name for c, _f, _k in IDENTITY_CELLS],
+)
+def test_stripping_obs_recovers_pinned_bytes(cell, golden_file, key_path):
+    """obs-on report minus its obs key == the pinned observability-off SHA.
+
+    Stronger than re-running with the flag off: proves the instrumented
+    code paths (simulator bins, reoptimize driver, token serving model,
+    fault arcs) compute exactly what they computed before the flag existed.
+    """
+    _res, rep, _trace = _obs_run(cell)
+    assert _stripped_sha(rep) == _pinned_sha(golden_file, key_path), (
+        f"{cell.name}: enabling observability changed the underlying "
+        "report bytes — the flag must be strictly additive"
+    )
+
+
+# -- determinism -----------------------------------------------------------------
+
+
+def test_same_seed_byte_identical_report_and_trace():
+    _res1, rep1, trace1 = _obs_run(OBS_CELL)
+    _res2, rep2, trace2 = run_cell_obs(OBS_CELL, seed=0)
+    assert rep1.to_json() == rep2.to_json()
+    assert trace1 == trace2
+
+
+# -- Chrome trace-event validity -------------------------------------------------
+
+
+def test_trace_export_is_valid_chrome_trace_json():
+    _res, _rep, trace_json = _obs_run(OBS_CELL)
+    doc = json.loads(trace_json)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert events, "the obs cell must record spans"
+    meta_tids, used_tids = set(), set()
+    for ev in events:
+        assert ev["ph"] in ("M", "X", "i"), ev
+        assert ev["pid"] == 0
+        if ev["ph"] == "M":
+            assert ev["name"] == "thread_name" and ev["args"]["name"]
+            meta_tids.add(ev["tid"])
+            continue
+        used_tids.add(ev["tid"])
+        assert ev["ts"] >= 0.0
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+        else:  # instants are thread-scoped markers
+            assert ev["s"] == "t"
+    # every track used by an event is named by thread metadata (Perfetto
+    # renders the row labels from these)
+    assert used_tids <= meta_tids
+    # the token cell puts serving bins and the reoptimize cycle on the
+    # timeline (its one transition is a no-op plan, so no actions track)
+    names = {ev["args"]["name"] for ev in events if ev["ph"] == "M"}
+    assert {"reoptimize", "serving"} <= names
+
+
+def test_fault_cell_traces_actions_and_fault_arc():
+    """The gpu_loss cell exercises the §6 action spans and the fault
+    inject->detect instrumentation the token cell's no-op transition
+    cannot."""
+    _res, rep, trace_json = _obs_run(FAULT_CELL)
+    doc = json.loads(trace_json)
+    by_track = {}
+    for ev in doc["traceEvents"]:
+        if ev["ph"] != "M":
+            by_track.setdefault(ev["cat"], []).append(ev)
+    assert {"reoptimize", "actions", "faults"} <= set(by_track)
+    # per-action spans carry the action kind and land inside some
+    # transition's execute window
+    executes = [
+        (e["ts"], e["ts"] + e["dur"])
+        for e in by_track["reoptimize"]
+        if e["name"] == "execute"
+    ]
+    assert executes
+    for ev in by_track["actions"]:
+        assert ev["name"] in ("create", "destroy", "migrate", "repartition")
+        assert any(
+            t0 - 1e-3 <= ev["ts"] and ev["ts"] + ev["dur"] <= t1 + 1e-3
+            for t0, t1 in executes
+        ), f"action span outside every execute window: {ev}"
+    fault_names = {e["name"] for e in by_track["faults"]}
+    assert any(n.startswith("inject:") for n in fault_names)
+    assert any(n.startswith("detect:") for n in fault_names)
+    counters = rep.obs["metrics"]["counters"]
+    assert counters["faults.injected"] >= 1.0
+    assert counters["transitions"] >= 1.0
+    assert counters["admission.shed"] > 0.0  # degraded-mode shedding fired
+
+
+def test_span_summary_counts_match_trace_export():
+    _res, rep, trace_json = _obs_run(OBS_CELL)
+    doc = json.loads(trace_json)
+    non_meta = [ev for ev in doc["traceEvents"] if ev["ph"] != "M"]
+    assert rep.obs["spans"]["events"] == len(non_meta)
+    assert sum(rep.obs["spans"]["tracks"].values()) == len(non_meta)
+
+
+# -- tracer unit + property coverage ---------------------------------------------
+
+
+class TestSpanTracer:
+    def test_span_rejects_negative_duration(self):
+        tr = SpanTracer()
+        with pytest.raises(ValueError, match="ends before it starts"):
+            tr.span("t", "bad", 5.0, 4.0)
+        tr.span("t", "tick", 5.0, 5.0)  # zero-duration is fine
+
+    def test_end_without_begin_raises(self):
+        tr = SpanTracer()
+        with pytest.raises(RuntimeError, match="without begin"):
+            tr.end("t", 1.0)
+
+    def test_leaked_begin_fails_well_formedness_and_export(self):
+        tr = SpanTracer()
+        tr.begin("t", "open", 0.0)
+        with pytest.raises(RuntimeError, match="left open"):
+            tr.assert_well_formed()
+        with pytest.raises(RuntimeError, match="left open"):
+            tr.export_json()
+
+    def test_child_cannot_begin_before_parent(self):
+        tr = SpanTracer()
+        tr.begin("t", "parent", 10.0)
+        with pytest.raises(ValueError, match="before its"):
+            tr.begin("t", "child", 9.0)
+
+    def test_begin_end_merges_args_and_emits_complete_event(self):
+        tr = SpanTracer()
+        tr.begin("t", "s", 1.0, args={"a": 1})
+        tr.end("t", 3.0, args={"b": 2})
+        doc = tr.chrome_trace()
+        (ev,) = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        assert ev["name"] == "s"
+        assert ev["ts"] == 1.0e6 and ev["dur"] == 2.0e6  # sim s -> trace us
+        assert ev["args"] == {"a": 1, "b": 2}
+
+    def test_null_tracer_is_inert(self):
+        tr = NullTracer()
+        tr.begin("t", "x", 0.0)
+        tr.span("t", "y", 0.0, 1.0)
+        tr.instant("t", "z", 0.5)
+        tr.end("t", 1.0)  # no begin-tracking, no raise
+        tr.assert_well_formed()
+        assert tr.span_summary() == {}
+        assert json.loads(tr.export_json()) == {
+            "displayTimeUnit": "ms",
+            "traceEvents": [],
+        }
+
+    @given(
+        durs=st.lists(
+            st.floats(min_value=0.0, max_value=10.0, allow_nan=False),
+            min_size=1,
+            max_size=8,
+        )
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_any_nested_begin_end_sequence_exports_cleanly(self, durs):
+        """Strictly nested opens at nondecreasing times always close into a
+        well-formed export with one X event per begin."""
+        tr = SpanTracer()
+        t = 0.0
+        for i, d in enumerate(durs):
+            tr.begin("trk", f"s{i}", t)
+            t += d
+        for _ in durs:
+            tr.end("trk", t)
+        tr.assert_well_formed()
+        doc = json.loads(tr.export_json())
+        xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        assert len(xs) == len(durs)
+        assert all(e["dur"] >= 0.0 for e in xs)
+
+
+# -- metrics registry ------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter_rejects_negative_and_backwards(self):
+        m = MetricsRegistry()
+        c = m.counter("x")
+        c.inc(2.0)
+        with pytest.raises(ValueError, match=">= 0"):
+            c.inc(-1.0)
+        with pytest.raises(ValueError, match="backwards"):
+            c.inc_to(1.0)
+        c.inc_to(5.0)
+        assert c.value == 5.0
+
+    def test_cross_kind_name_collision_raises(self):
+        m = MetricsRegistry()
+        m.counter("queue.depth")
+        with pytest.raises(ValueError, match="already registered"):
+            m.gauge("queue.depth")
+        with pytest.raises(ValueError, match="already registered"):
+            m.histogram("queue.depth")
+        assert m.counter("queue.depth") is m.counter("queue.depth")
+
+    def test_late_metric_series_backfilled_with_zeros(self):
+        m = MetricsRegistry()
+        m.counter("early").inc(1.0)
+        m.sample(0.0)
+        m.sample(1.0)
+        m.gauge("late").set(7.0)
+        m.sample(2.0)
+        s = m.snapshot()["series"]
+        assert s["t_s"] == [0.0, 1.0, 2.0]
+        assert s["counters"]["early"] == [1.0, 1.0, 1.0]
+        assert s["gauges"]["late"] == [0.0, 0.0, 7.0]
+
+    def test_histogram_buckets_by_upper_bound(self):
+        h = Histogram(bounds=(1.0, 10.0))
+        for v in (0.5, 1.0, 2.0, 10.0, 11.0, 1e9):
+            h.observe(v)
+        # side="left": a value equal to a bound lands at that bound's bucket
+        assert h.buckets == [2, 2, 2]  # (<=1.0], (1.0, 10.0], (10.0, +inf)
+        assert h.count == 6
+        assert h.total == pytest.approx(0.5 + 1.0 + 2.0 + 10.0 + 11.0 + 1e9)
+
+    def test_percentile_summary_schema(self):
+        empty = percentile_summary([], "ttft")
+        assert empty == {"ttft_p50_s": 0.0, "ttft_p95_s": 0.0, "ttft_p99_s": 0.0}
+        full = percentile_summary([1.0, 2.0, 3.0], "tpot")
+        assert set(full) == {"tpot_p50_s", "tpot_p95_s", "tpot_p99_s"}
+        assert full["tpot_p50_s"] == 2.0
+
+    def test_null_registry_is_inert(self):
+        m = NullRegistry()
+        m.counter("x").inc(5.0)
+        m.gauge("y").set(1.0)
+        m.histogram("z").observe(2.0)
+        m.sample(0.0)
+        assert m.snapshot() == {}
+        assert not m.enabled
+
+
+# -- flight recorder -------------------------------------------------------------
+
+
+class TestFlightRecorder:
+    def test_negative_record_limit_raises(self):
+        with pytest.raises(ValueError, match=">= 0"):
+            FlightRecorder(record_limit=-1)
+        with pytest.raises(ValueError, match="obs_record_limit"):
+            SimConfig(obs_record_limit=-1)
+
+    def test_truncation_past_the_limit(self):
+        fr = FlightRecorder(record_limit=2)
+        for rid in range(4):
+            fr.arrival(rid, "svc", float(rid))
+        snap = fr.snapshot()
+        assert snap["tracked"] == 2 and snap["truncated"] == 2
+        assert [r["rid"] for r in snap["requests"]] == [0, 1]
+        # events on untracked requests are silent no-ops, not errors
+        fr.note(3, "admitted", 4.0)
+        fr.close(3, "completed", 5.0)
+        assert fr.snapshot()["tracked"] == 2
+
+    def test_duplicate_arrival_ignored(self):
+        fr = FlightRecorder()
+        fr.arrival(0, "svc", 0.0)
+        fr.arrival(0, "svc", 9.0)
+        (rec,) = fr.snapshot()["requests"]
+        assert rec["arrival_s"] == 0.0 and len(rec["events"]) == 1
+
+    def test_lifecycle_counters_and_terminal_cause(self):
+        fr = FlightRecorder()
+        fr.arrival(7, "svc", 0.0, priority=0, deadline_s=5.0)
+        fr.note(7, "admitted", 0.1, instance=3)
+        fr.note(7, "preempted", 0.5, cause="kv_pressure")
+        fr.note(7, "backoff", 0.6)
+        fr.note(7, "migrated", 0.9)
+        fr.close(7, "deadline_dropped", 5.0, cause="deadline")
+        (rec,) = fr.snapshot()["requests"]
+        assert rec["preemptions"] == 2  # preempted + migrated
+        assert rec["retries"] == 1
+        assert rec["outcome"] == "deadline_dropped" and rec["cause"] == "deadline"
+        assert rec["deadline_s"] == 5.0
+        assert [e["event"] for e in rec["events"]] == [
+            "arrival", "admitted", "preempted", "backoff", "migrated",
+            "deadline_dropped",
+        ]
+
+    def test_record_limit_flows_through_the_bundle(self):
+        obs = Observability.on(record_limit=3)
+        assert obs.flight.record_limit == 3
+        off = Observability.off()
+        assert not off.enabled and off.flight is None
+        assert off.tracer.span_summary() == {} and off.metrics.snapshot() == {}
+
+
+def test_obs_cell_flight_block_is_bounded_and_attributed():
+    _res, rep, _trace = _obs_run(OBS_CELL)
+    flight = rep.obs["flight"]
+    assert flight["tracked"] <= flight["record_limit"] == 256
+    assert flight["truncated"] > 0  # the micro flash crowd overflows 256
+    outcomes = {r["outcome"] for r in flight["requests"]}
+    assert "completed" in outcomes
+    for rec in flight["requests"]:
+        assert rec["events"][0]["event"] == "arrival"
+        ts = [e["t_s"] for e in rec["events"]]
+        assert ts == sorted(ts)  # lifecycle events in sim-time order
+
+
+# -- no wall clock in the obs sources --------------------------------------------
+
+
+def test_obs_sources_never_import_wall_clock():
+    """Grep-proof: the obs package is sim-time only.  A wall-clock read
+    anywhere under src/repro/obs would leak nondeterminism into the obs
+    block (and the trace export), breaking the byte-determinism contract."""
+    obs_dir = os.path.join(REPO_ROOT, "src", "repro", "obs")
+    forbidden_import = re.compile(
+        r"^\s*(import time\b|from time\b|import datetime\b|from datetime\b)",
+        re.MULTILINE,
+    )
+    checked = 0
+    for fn in sorted(os.listdir(obs_dir)):
+        if not fn.endswith(".py"):
+            continue
+        with open(os.path.join(obs_dir, fn)) as f:
+            src = f.read()
+        assert not forbidden_import.search(src), f"{fn} imports wall clock"
+        for needle in ("time.time(", "perf_counter", "monotonic("):
+            assert needle not in src, f"{fn} reads wall clock via {needle}"
+        checked += 1
+    assert checked >= 4  # __init__, trace, metrics, flight
+
+
+# -- the leaderboard report ------------------------------------------------------
+
+
+def _report_tool():
+    import importlib.util
+
+    path = os.path.join(REPO_ROOT, "tools", "report_scenarios.py")
+    spec = importlib.util.spec_from_file_location("report_scenarios", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_report_renders_repo_bench_deterministically(tmp_path):
+    mod = _report_tool()
+    bench = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
+    out1 = str(tmp_path / "a.html")
+    out2 = str(tmp_path / "b.html")
+    assert mod.main(["--bench", bench, "--out", out1, "--no-git"]) == 0
+    assert mod.main(["--bench", bench, "--out", out2, "--no-git"]) == 0
+    with open(out1, "rb") as f1, open(out2, "rb") as f2:
+        a, b = f1.read(), f2.read()
+    assert a == b, "the report must be byte-deterministic"
+    assert a.startswith(b"<!DOCTYPE html>")
+    assert b"<svg" in a  # the per-axis charts rendered
+    with open(bench) as f:
+        n_cells = len(json.load(f)["cells"])
+    assert f"{n_cells} cells".encode() in a
+
+
+def test_report_rejects_cell_free_documents(tmp_path):
+    mod = _report_tool()
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"schema": 1, "cells": {}}')
+    with pytest.raises(SystemExit, match="no cells"):
+        mod.main(["--bench", str(bad), "--no-git"])
+
+
+# -- engine stats speak the obs schema -------------------------------------------
+
+
+def test_serve_stats_summary_matches_obs_metrics_schema():
+    pytest.importorskip("jax")
+    from repro.serving.engine import ServeStats
+
+    stats = ServeStats(
+        served=3, tokens=12, preempted=1, refused=2, wall_s=2.0,
+        ttft_s=[0.1, 0.2, 0.3], tpot_s=[0.01, 0.02],
+    )
+    s = stats.summary("modelA")
+    assert s["service"] == "modelA"
+    # counter names follow the MetricsRegistry convention the sim emits
+    assert set(s["counters"]) == {
+        "serving.completed", "serving.preemptions", "serving.refusals",
+        "serving.tokens",
+    }
+    assert s["counters"]["serving.completed"] == 3.0
+    assert set(s["latency"]) == {
+        "ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+        "tpot_p50_s", "tpot_p95_s", "tpot_p99_s",
+    }
+    assert s["latency"]["ttft_p50_s"] == pytest.approx(0.2)
+    assert s["throughput_rps"] == pytest.approx(1.5)
+    # the schema is JSON-clean (what --stats-json writes)
+    json.dumps(s, sort_keys=True)
+
+
+# -- the obs block itself --------------------------------------------------------
+
+
+def test_obs_block_structure_and_metric_coverage():
+    _res, rep, _trace = _obs_run(OBS_CELL)
+    obs = rep.obs
+    assert set(obs) == {"flight", "metrics", "spans"}
+    counters = obs["metrics"]["counters"]
+    assert {"serving.completed", "serving.preemptions", "serving.refusals",
+            "transitions"} <= set(counters)
+    series = obs["metrics"]["series"]
+    n = len(series["t_s"])
+    assert n > 0
+    for kind in ("counters", "gauges"):
+        for name, vals in series[kind].items():
+            assert len(vals) == n, f"series {kind}:{name} misaligned"
+    # the pages gauges only exist in token mode; this is a token cell
+    assert "pages.used" in obs["metrics"]["gauges"]
+    hist = obs["metrics"]["histograms"]["transition.parallel_s"]
+    assert hist["count"] == counters["transitions"] > 0
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        data = compute_golden()
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+    else:
+        print("run under pytest, or with --regen to rewrite the golden file")

@@ -270,8 +270,9 @@ def test_mcts_edges_only_touch_sampled_or_scored_configs():
 
 
 def test_core_and_sim_stay_jax_free():
-    """The performance contract: repro.core, repro.sim and the control
-    plane (repro.controlplane) import no jax."""
+    """The performance contract: repro.core, repro.sim, the control plane
+    (repro.controlplane) and the flight recorder (repro.obs) import no
+    jax."""
     import subprocess
     import sys
 
@@ -280,6 +281,7 @@ def test_core_and_sim_stay_jax_free():
         "import repro.core.zoo, repro.sim.scenarios; "  # the scheduler zoo + matrix
         "import repro.sim.servemodel; "  # the token-level serving model
         "import repro.controlplane.reconciler, repro.controlplane.faults; "
+        "import repro.obs, repro.obs.trace, repro.obs.metrics, repro.obs.flight; "
         "bad = [m for m in sys.modules if m == 'jax' or m.startswith('jax.')]; "
         "assert not bad, f'jax leaked into the numpy-only core: {bad}'; "
         "print('clean')"

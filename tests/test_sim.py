@@ -141,6 +141,72 @@ class TestEventQueue:
         assert kinds == ["z", "a1", "a2", "b"]
 
 
+# -- input validation: real exceptions, not asserts ------------------------------
+
+
+class TestInputValidation:
+    """The guards converted from ``assert`` must raise even under
+    ``python -O`` (where asserts compile away) — pin each one."""
+
+    def test_clock_rejects_backwards_time(self):
+        from repro.sim.events import Clock
+
+        clk = Clock(t0=10.0)
+        with pytest.raises(RuntimeError, match="clock moved backwards"):
+            clk.advance_to(9.0)
+        assert clk.advance_to(10.0 - 1e-12) == 10.0  # tolerance, not a trap
+        assert clk.advance_to(11.0) == 11.0
+
+    def test_trace_rejects_degenerate_shapes(self):
+        from repro.sim import Trace
+
+        with pytest.raises(ValueError, match="bin width"):
+            Trace(bin_s=0.0, rates={"a": np.ones(3)})
+        with pytest.raises(ValueError, match="at least one service"):
+            Trace(bin_s=60.0, rates={})
+        with pytest.raises(ValueError):
+            Trace(bin_s=60.0, rates={"a": np.ones(3), "b": np.ones(4)})
+
+    def test_generators_reject_sub_bin_durations(self):
+        with pytest.raises(ValueError):
+            diurnal_trace({"a": 10.0}, duration_s=10.0, bin_s=60.0)
+
+    def test_diurnal_rejects_night_frac_out_of_range(self):
+        for bad in (-0.1, 1.5):
+            with pytest.raises(ValueError, match="night_frac"):
+                diurnal_trace(
+                    {"a": 10.0}, duration_s=3600.0, bin_s=60.0, night_frac=bad
+                )
+
+    def test_correlated_surge_rejects_bad_knobs(self):
+        from repro.sim import correlated_surge_trace
+
+        peaks = {"a": 10.0, "b": 10.0}
+        with pytest.raises(ValueError, match="correlation"):
+            correlated_surge_trace(
+                peaks, duration_s=3600.0, bin_s=60.0, correlation=1.5
+            )
+        with pytest.raises(ValueError):
+            correlated_surge_trace(
+                peaks, duration_s=3600.0, bin_s=60.0, surge_len_bins=0
+            )
+        with pytest.raises(ValueError):
+            correlated_surge_trace(
+                peaks, duration_s=3600.0, bin_s=60.0, n_surges=0
+            )
+
+    def test_duplicate_fault_profile_registration_raises(self):
+        from repro.controlplane.faults import (
+            FAULT_PROFILES,
+            FaultProfile,
+            register_fault_profile,
+        )
+
+        assert "gpu_loss" in FAULT_PROFILES
+        with pytest.raises(ValueError, match="already registered"):
+            register_fault_profile(FaultProfile("gpu_loss", gpu_failures=1))
+
+
 # -- (b) determinism ------------------------------------------------------------
 
 

@@ -1,16 +1,17 @@
 #!/usr/bin/env python
-"""Docs smoke: execute the README quickstart verbatim so it cannot rot.
+"""Docs smoke: execute documented quickstart blocks verbatim so they cannot rot.
 
-Extracts the fenced code block tagged ``bash quickstart`` from the
-top-level ``README.md`` and runs each command line (comments skipped) from
-the repo root, failing on the first non-zero exit.  CI runs this in both
-test jobs — if someone edits the quickstart into something that no longer
-works, or renames a flag the quickstart uses, the build breaks instead of
-the docs silently lying.
+Extracts tagged fenced code blocks from the docs — the ``bash quickstart``
+block in the top-level ``README.md`` and the ``bash obs-quickstart`` block
+in ``docs/OBSERVABILITY.md`` — and runs each command line (comments
+skipped) from the repo root, failing on the first non-zero exit.  CI runs
+this in both test jobs — if someone edits a quickstart into something that
+no longer works, or renames a flag a quickstart uses, the build breaks
+instead of the docs silently lying.
 
 Usage::
 
-    python tools/docs_smoke.py            # run the quickstart
+    python tools/docs_smoke.py            # run every quickstart block
     python tools/docs_smoke.py --print    # show the extracted commands only
 """
 
@@ -24,15 +25,24 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 README = os.path.join(REPO_ROOT, "README.md")
 FENCE_TAG = "bash quickstart"
 
+# every doc-embedded block CI executes: (path, fence tag).  Add a pair when
+# a new doc grows a runnable quickstart.
+SOURCES: list[tuple[str, str]] = [
+    (README, FENCE_TAG),
+    (os.path.join(REPO_ROOT, "docs", "OBSERVABILITY.md"), "bash obs-quickstart"),
+]
 
-def extract_quickstart(readme_path: str = README) -> list[str]:
-    """The command lines of the ``bash quickstart`` fenced block."""
+
+def extract_quickstart(
+    readme_path: str = README, fence_tag: str = FENCE_TAG
+) -> list[str]:
+    """The command lines of the ``fence_tag`` fenced block in one doc."""
     commands: list[str] = []
     in_block = False
     with open(readme_path) as f:
         for line in f:
             stripped = line.strip()
-            if stripped == f"```{FENCE_TAG}":
+            if stripped == f"```{fence_tag}":
                 in_block = True
                 continue
             if in_block and stripped == "```":
@@ -41,28 +51,35 @@ def extract_quickstart(readme_path: str = README) -> list[str]:
                 commands.append(stripped)
     if not commands:
         raise SystemExit(
-            f"no ```{FENCE_TAG} block with commands found in {readme_path}"
+            f"no ```{fence_tag} block with commands found in {readme_path}"
         )
     return commands
 
 
 def main() -> int:
-    commands = extract_quickstart()
+    blocks = [
+        (path, tag, extract_quickstart(path, tag)) for path, tag, in SOURCES
+    ]
     if "--print" in sys.argv:
-        print("\n".join(commands))
+        for _path, _tag, commands in blocks:
+            print("\n".join(commands))
         return 0
-    for cmd in commands:
-        print(f"[docs-smoke] $ {cmd}", flush=True)
-        proc = subprocess.run(cmd, shell=True, cwd=REPO_ROOT)
-        if proc.returncode != 0:
-            print(
-                f"[docs-smoke] FAILED (exit {proc.returncode}): {cmd}\n"
-                "the README quickstart no longer works — fix the docs or "
-                "the code",
-                file=sys.stderr,
-            )
-            return proc.returncode
-    print(f"[docs-smoke] all {len(commands)} quickstart commands passed")
+    total = 0
+    for path, tag, commands in blocks:
+        rel = os.path.relpath(path, REPO_ROOT)
+        for cmd in commands:
+            print(f"[docs-smoke:{rel}] $ {cmd}", flush=True)
+            proc = subprocess.run(cmd, shell=True, cwd=REPO_ROOT)
+            if proc.returncode != 0:
+                print(
+                    f"[docs-smoke] FAILED (exit {proc.returncode}): {cmd}\n"
+                    f"the ```{tag} block in {rel} no longer works — fix the "
+                    "docs or the code",
+                    file=sys.stderr,
+                )
+                return proc.returncode
+            total += 1
+    print(f"[docs-smoke] all {total} quickstart commands passed")
     return 0
 
 

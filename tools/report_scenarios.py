@@ -1,0 +1,362 @@
+#!/usr/bin/env python
+"""Scenario leaderboard report: BENCH_scenarios.json -> one HTML file.
+
+Renders the scenario-matrix benchmark document
+(``benchmarks/bench_scenarios.py``) as a self-contained HTML/SVG page:
+
+* the **leaderboard** — per cell group (trace/scale/slo/fault[/serving
+  [/priority]]), schedulers ranked exactly as the benchmark's stdout
+  leaderboard (peak GPUs ascending, ties by mean attainment descending,
+  then modeled power ascending), winner first;
+* **per-axis breakdowns** — for each of the seven matrix axes, the mean
+  attainment, mean GPUs saved, worst served fraction, and mean availability
+  over every cell carrying each axis value;
+* **cross-PR trend lines** — mean attainment, total GPUs saved, and cell
+  count over the git history of ``BENCH_scenarios.json`` (each prior
+  committed revision is read via ``git show``), so a regression in the
+  headline numbers is visible at a glance.  ``--no-git`` (or a missing git
+  history) skips this section — the rest of the report never depends on it.
+
+The output is deterministic: same input document + same git history =>
+byte-identical HTML.  No wall clock, no hostnames, no external assets.
+
+Usage::
+
+    PYTHONPATH=src python tools/report_scenarios.py                # repo doc
+    PYTHONPATH=src python tools/report_scenarios.py \\
+        --bench /tmp/BENCH_scenarios_smoke.json --out /tmp/report.html --no-git
+"""
+
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DEFAULT_BENCH = os.path.join(REPO_ROOT, "BENCH_scenarios.json")
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_report.html")
+
+AXES = (
+    ("trace", "Trace shape"),
+    ("scheduler", "Scheduler"),
+    ("scale", "Scale"),
+    ("slo", "SLO policy"),
+    ("fault", "Fault profile"),
+    ("serving", "Serving model"),
+    ("priority", "Priority mix"),
+)
+
+_CSS = """
+body { font-family: system-ui, sans-serif; margin: 2em auto; max-width: 70em;
+       color: #222; }
+h1 { border-bottom: 2px solid #444; padding-bottom: .2em; }
+h2 { margin-top: 2em; }
+table { border-collapse: collapse; margin: 1em 0; font-size: .9em; }
+th, td { border: 1px solid #bbb; padding: .25em .6em; text-align: right; }
+th { background: #eee; }
+td.name, th.name { text-align: left; font-family: monospace; }
+td.win { font-weight: bold; background: #e8f4e8; }
+.small { color: #666; font-size: .85em; }
+svg { background: #fafafa; border: 1px solid #ddd; }
+"""
+
+
+def cell_group(cell: Dict) -> str:
+    """The leaderboard grouping key — same shape as the benchmark's stdout
+    leaderboard: scheduler is the ranked-within dimension, every other axis
+    names the group."""
+    key = "{trace}/{scale}/{slo}/{fault}".format(**cell)
+    if cell.get("serving", "fluid") != "fluid":
+        key += "/" + cell["serving"]
+    if cell.get("priority", "none") != "none":
+        key += "/" + cell["priority"]
+    return key
+
+
+def rank_key(c: Dict) -> Tuple:
+    return (c["gpus_peak"], -c["mean_attainment"], c["power_w"])
+
+
+def fmt(v: float, nd: int = 3) -> str:
+    return f"{v:.{nd}f}"
+
+
+# -- SVG helpers (hand-rolled: no plotting dependency, deterministic) --------
+def svg_bars(
+    labels: List[str], values: List[float], title: str, width: int = 640
+) -> str:
+    """A labeled horizontal bar chart as one inline SVG string."""
+    if not labels:
+        return ""
+    bar_h, gap, left = 18, 6, 170
+    height = 30 + len(labels) * (bar_h + gap)
+    vmax = max(max(values), 1e-9)
+    rows = [
+        f'<svg width="{width}" height="{height}" role="img">',
+        f'<text x="4" y="16" font-size="13" font-weight="bold">'
+        f"{html.escape(title)}</text>",
+    ]
+    for i, (lab, val) in enumerate(zip(labels, values)):
+        y = 26 + i * (bar_h + gap)
+        w = max(1.0, (width - left - 90) * val / vmax)
+        rows.append(
+            f'<text x="{left - 6}" y="{y + 13}" font-size="11" '
+            f'text-anchor="end" font-family="monospace">{html.escape(lab)}</text>'
+        )
+        rows.append(
+            f'<rect x="{left}" y="{y}" width="{fmt(w, 1)}" height="{bar_h}" '
+            f'fill="#4a7fb5"/>'
+        )
+        rows.append(
+            f'<text x="{fmt(left + w + 4, 1)}" y="{y + 13}" '
+            f'font-size="11">{fmt(val)}</text>'
+        )
+    rows.append("</svg>")
+    return "\n".join(rows)
+
+
+def svg_trend(
+    points: List[Tuple[str, float]], title: str, width: int = 640, nd: int = 3
+) -> str:
+    """A labeled line chart over ordered (label, value) revision points."""
+    if len(points) < 2:
+        return '<p class="small">(fewer than two revisions — no trend)</p>'
+    height, pad_l, pad_r, pad_t, pad_b = 180, 60, 20, 28, 38
+    vals = [v for _, v in points]
+    vmin, vmax = min(vals), max(vals)
+    if vmax - vmin < 1e-12:
+        vmin, vmax = vmin - 0.5, vmax + 0.5
+    span_x = width - pad_l - pad_r
+    span_y = height - pad_t - pad_b
+    xs = [pad_l + span_x * i / (len(points) - 1) for i in range(len(points))]
+    ys = [pad_t + span_y * (1.0 - (v - vmin) / (vmax - vmin)) for v in vals]
+    poly = " ".join(f"{fmt(x, 1)},{fmt(y, 1)}" for x, y in zip(xs, ys))
+    rows = [
+        f'<svg width="{width}" height="{height}" role="img">',
+        f'<text x="4" y="16" font-size="13" font-weight="bold">'
+        f"{html.escape(title)}</text>",
+        f'<text x="{pad_l - 6}" y="{pad_t + 4}" font-size="10" '
+        f'text-anchor="end">{fmt(vmax, nd)}</text>',
+        f'<text x="{pad_l - 6}" y="{pad_t + span_y + 4}" font-size="10" '
+        f'text-anchor="end">{fmt(vmin, nd)}</text>',
+        f'<polyline points="{poly}" fill="none" stroke="#b5574a" '
+        f'stroke-width="2"/>',
+    ]
+    for (lab, v), x, y in zip(points, xs, ys):
+        rows.append(f'<circle cx="{fmt(x, 1)}" cy="{fmt(y, 1)}" r="3" fill="#b5574a"/>')
+        rows.append(
+            f'<text x="{fmt(x, 1)}" y="{height - 20}" font-size="10" '
+            f'text-anchor="middle" font-family="monospace">{html.escape(lab)}</text>'
+        )
+    rows.append("</svg>")
+    return "\n".join(rows)
+
+
+# -- git history --------------------------------------------------------------
+def bench_history(
+    bench_path: str, limit: int = 12
+) -> List[Tuple[str, Dict]]:
+    """Prior committed revisions of the benchmark doc, oldest first, as
+    (short sha, parsed doc).  Empty on any git failure — the report must
+    render identically with ``--no-git`` and without a history."""
+    repo = os.path.dirname(os.path.abspath(bench_path)) or "."
+    rel = os.path.basename(bench_path)
+    try:
+        out = subprocess.run(
+            ["git", "-C", repo, "log", "--format=%H", "--", rel],
+            capture_output=True, text=True, check=True,
+        ).stdout.split()
+    except (OSError, subprocess.CalledProcessError):
+        return []
+    revs = list(reversed(out))[-limit:]  # oldest first, bounded
+    history: List[Tuple[str, Dict]] = []
+    for rev in revs:
+        try:
+            blob = subprocess.run(
+                ["git", "-C", repo, "show", f"{rev}:{rel}"],
+                capture_output=True, text=True, check=True,
+            ).stdout
+            history.append((rev[:8], json.loads(blob)))
+        except (OSError, subprocess.CalledProcessError, ValueError):
+            continue  # a revision predating the doc, or unparsable
+    return history
+
+
+def doc_summary(doc: Dict) -> Dict[str, float]:
+    cells = list(doc.get("cells", {}).values())
+    n = max(len(cells), 1)
+    return {
+        "cells": float(len(cells)),
+        "mean_attainment": sum(c["mean_attainment"] for c in cells) / n,
+        "gpus_saved": float(sum(c["gpus_saved"] for c in cells)),
+        "availability": sum(c.get("availability", 1.0) for c in cells) / n,
+    }
+
+
+# -- report body --------------------------------------------------------------
+def leaderboard_section(cells: Dict[str, Dict]) -> List[str]:
+    groups: Dict[str, List[Dict]] = {}
+    for c in cells.values():
+        groups.setdefault(cell_group(c["cell"]), []).append(c)
+    parts = [
+        "<h2>Leaderboard</h2>",
+        '<p class="small">Schedulers ranked per cell group: peak GPUs '
+        "ascending, ties by mean attainment (higher better), then modeled "
+        "power (lower better).  Winner highlighted.</p>",
+        "<table><tr><th class='name'>group</th><th>rank</th>"
+        "<th class='name'>scheduler</th><th>gpus_peak</th><th>saved</th>"
+        "<th>attainment</th><th>power_w</th><th>avail</th>"
+        "<th>transparent</th></tr>",
+    ]
+    for key in sorted(groups):
+        ranked = sorted(groups[key], key=rank_key)
+        for i, c in enumerate(ranked):
+            win = " class='win'" if i == 0 else ""
+            parts.append(
+                "<tr>"
+                + (
+                    f"<td class='name' rowspan='{len(ranked)}'>"
+                    f"{html.escape(key)}</td>"
+                    if i == 0
+                    else ""
+                )
+                + f"<td{win}>{i + 1}</td>"
+                f"<td class='name'>{html.escape(c['cell']['scheduler'])}</td>"
+                f"<td>{c['gpus_peak']}</td><td>{c['gpus_saved']}</td>"
+                f"<td>{fmt(c['mean_attainment'])}</td>"
+                f"<td>{fmt(c['power_w'], 0)}</td>"
+                f"<td>{fmt(c.get('availability', 1.0))}</td>"
+                f"<td>{'yes' if c['transparent'] else 'NO'}</td></tr>"
+            )
+    parts.append("</table>")
+    return parts
+
+
+def axis_sections(cells: Dict[str, Dict]) -> List[str]:
+    parts = ["<h2>Per-axis breakdowns</h2>"]
+    for axis, label in AXES:
+        by_value: Dict[str, List[Dict]] = {}
+        for c in cells.values():
+            by_value.setdefault(
+                c["cell"].get(axis, "none"), []
+            ).append(c)
+        if len(by_value) < 2 and axis not in ("trace", "scheduler"):
+            continue  # a degenerate axis (e.g. one-cell doc) adds no signal
+        parts.append(f"<h3>{html.escape(label)}</h3>")
+        parts.append(
+            "<table><tr><th class='name'>value</th><th>cells</th>"
+            "<th>mean attainment</th><th>mean saved</th>"
+            "<th>worst served frac</th><th>mean avail</th></tr>"
+        )
+        for value in sorted(by_value):
+            grp = by_value[value]
+            parts.append(
+                f"<tr><td class='name'>{html.escape(value)}</td>"
+                f"<td>{len(grp)}</td>"
+                f"<td>{fmt(sum(c['mean_attainment'] for c in grp) / len(grp))}</td>"
+                f"<td>{fmt(sum(c['gpus_saved'] for c in grp) / len(grp), 1)}</td>"
+                f"<td>{fmt(min(c['served_fraction'] for c in grp))}</td>"
+                f"<td>{fmt(sum(c.get('availability', 1.0) for c in grp) / len(grp))}</td>"
+                "</tr>"
+            )
+        parts.append("</table>")
+        if axis == "scheduler":
+            labels = sorted(by_value)
+            parts.append(
+                svg_bars(
+                    labels,
+                    [
+                        sum(c["mean_attainment"] for c in by_value[v])
+                        / len(by_value[v])
+                        for v in labels
+                    ],
+                    "mean attainment by scheduler",
+                )
+            )
+    return parts
+
+
+def trend_section(
+    history: List[Tuple[str, Dict]], current: Dict
+) -> List[str]:
+    points = [(sha, doc_summary(doc)) for sha, doc in history]
+    cur = doc_summary(current)
+    if not points or points[-1][1] != cur:
+        points.append(("work", cur))
+    parts = [
+        "<h2>Cross-PR trends</h2>",
+        '<p class="small">One point per committed revision of the benchmark '
+        "document (oldest left; <code>work</code> = the file on disk when it "
+        "differs from the newest commit).</p>",
+    ]
+    for metric, title, nd in (
+        ("mean_attainment", "mean attainment over all cells", 3),
+        ("gpus_saved", "total GPUs saved vs A100-as-is", 0),
+        ("cells", "matrix size (cells)", 0),
+    ):
+        parts.append(
+            svg_trend([(sha, s[metric]) for sha, s in points], title, nd=nd)
+        )
+    return parts
+
+
+def render(doc: Dict, history: List[Tuple[str, Dict]]) -> str:
+    cells = doc["cells"]
+    parts = [
+        "<!DOCTYPE html>",
+        '<html lang="en"><head><meta charset="utf-8">',
+        "<title>MIG-serving scenario leaderboard</title>",
+        f"<style>{_CSS}</style></head><body>",
+        "<h1>MIG-serving scenario leaderboard</h1>",
+        f'<p class="small">schema {doc.get("schema")} &middot; '
+        f'seed {doc.get("seed")} &middot; {len(cells)} cells</p>',
+    ]
+    parts += leaderboard_section(cells)
+    parts += axis_sections(cells)
+    parts += trend_section(history, doc)
+    parts.append("</body></html>")
+    return "\n".join(parts) + "\n"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default=DEFAULT_BENCH,
+                    help="scenario benchmark JSON (default: repo "
+                         "BENCH_scenarios.json)")
+    ap.add_argument("--out", default=None,
+                    help="output HTML path (default: BENCH_report.html next "
+                         "to --bench when that is the repo doc, else "
+                         "<bench>.html)")
+    ap.add_argument("--no-git", action="store_true",
+                    help="skip the cross-PR trend section (hermetic runs)")
+    ap.add_argument("--history", type=int, default=12, metavar="N",
+                    help="max prior revisions in the trend (default 12)")
+    args = ap.parse_args(argv)
+
+    with open(args.bench) as f:
+        doc = json.load(f)
+    if "cells" not in doc or not doc["cells"]:
+        raise SystemExit(f"{args.bench}: no cells — not a scenario benchmark doc")
+    out_path = args.out or (
+        DEFAULT_OUT
+        if os.path.abspath(args.bench) == DEFAULT_BENCH
+        else os.path.splitext(args.bench)[0] + ".html"
+    )
+    history = [] if args.no_git else bench_history(args.bench, args.history)
+    html_text = render(doc, history)
+    with open(out_path, "w") as f:
+        f.write(html_text)
+    print(
+        f"wrote {out_path} ({len(doc['cells'])} cells, "
+        f"{len(history)} historical revisions)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
