@@ -111,7 +111,11 @@ class Reconciler:
                     f"{fault.action.kind}@gpu{fault.action.gpu}: {fault.reason}"
                 )
                 stats.wasted_s += fault.wasted_s
-                assert self.injector is not None  # hooks only exist with one
+                if self.injector is None:  # hooks only exist with one
+                    raise RuntimeError(
+                        "ActionFault raised without an injector — only the "
+                        "fault injector's hooks may raise ActionFault"
+                    )
                 stats.backoff_s += self.injector.backoff_s(attempt)
                 peak = max(peak, cluster.gpus_in_use())
                 inner = None

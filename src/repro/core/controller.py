@@ -298,7 +298,10 @@ class Controller:
         for gid, g in cluster.gpus.items():
             if gid in taken:
                 continue
-            assert not g.busy(), "compact left a running instance unplaced"
+            if g.busy():
+                raise RuntimeError(
+                    f"compact left a running instance unplaced on gpu{gid}"
+                )
             if not cluster.schedulable(gid):
                 continue
             idle = tuple(g.instances)

@@ -82,9 +82,12 @@ class GPUConfig:
     assignments: Tuple[InstanceAssignment, ...]
 
     def __post_init__(self):
-        assert tuple(sorted(a.size for a in self.assignments)) == tuple(
-            sorted(self.partition)
-        ), "assignments must cover the partition"
+        sizes = tuple(sorted(a.size for a in self.assignments))
+        if sizes != tuple(sorted(self.partition)):
+            raise ValueError(
+                f"assignments must cover the partition: assignment sizes "
+                f"{sizes} != partition {tuple(sorted(self.partition))}"
+            )
 
     def services_used(self) -> Tuple[str, ...]:
         return tuple(sorted({a.service for a in self.assignments if a.service}))

@@ -19,7 +19,7 @@ improving for ``patience`` rounds (paper: ten).
 from __future__ import annotations
 
 import dataclasses
-import time
+import time  # contract-ok: wall-clock anytime-budget deadline only; sim time stays logical
 from collections import Counter
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -249,5 +249,9 @@ class GeneticOptimizer:
         comp = np.zeros(space.workload.n)
         for cfg in best.configs:
             comp += space.utility_cached(cfg)
-        assert bool(np.all(comp >= 1.0 - 1e-9))
+        if not bool(np.all(comp >= 1.0 - 1e-9)):
+            raise RuntimeError(
+                "GA best individual fails SLO completion — repair should have "
+                f"kept every service >= 1.0, got min {float(comp.min()):.6f}"
+            )
         return GAResult(best=best, history=history)

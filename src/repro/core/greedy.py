@@ -25,7 +25,7 @@ the paper's O(n²m).
 
 from __future__ import annotations
 
-import time
+import time  # contract-ok: wall-clock anytime-budget deadline only; sim time stays logical
 from typing import List, Optional, Tuple
 
 import numpy as np

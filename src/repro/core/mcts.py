@@ -268,7 +268,11 @@ class MCTSSlow(OptimizerProcedure):
 
     # -- UCT for minimization -----------------------------------------------------
     def _select_child(self, node: _Node) -> Tuple[int, _Node]:
-        assert node.edges
+        if not node.edges:
+            raise RuntimeError(
+                "_select_child on a node without edges — expansion must "
+                "populate edges before UCT selection"
+            )
         best, best_val = None, math.inf
         log_visits = math.log(node.visits) if node.visits else 0.0
         for e in node.edges:

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
+import time  # contract-ok: wall-clock anytime-budget deadline only; sim time stays logical
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -210,7 +210,11 @@ class TwoPhaseOptimizer:
         if fast_dep is None:
             fast_dep = self.fast.solve()
         t1 = time.monotonic()
-        assert fast_dep.is_valid(self.space.workload)
+        if not fast_dep.is_valid(self.space.workload):
+            raise RuntimeError(
+                "phase-1 deployment does not satisfy the workload — the fast "
+                "algorithm or warm-start edits produced an invalid placement"
+            )
         if skip_phase2:
             return OptimizeReport(
                 fast_dep,

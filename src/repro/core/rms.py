@@ -124,11 +124,28 @@ class ReconfigRules(abc.ABC):
 
 
 def validate_partition_universe(rules: ReconfigRules) -> None:
-    """Sanity checks shared by all rule-sets (used by tests)."""
+    """Sanity checks shared by all rule-sets (used by tests and by new
+    rule-set authors).  Raises :class:`ValueError` naming the offending
+    partition — typed exceptions, not asserts, so the checks survive
+    ``python -O`` (contract: no-bare-assert)."""
     legal = rules.legal_partitions()
-    assert legal, "no legal partitions"
+    if not legal:
+        raise ValueError(f"{type(rules).__name__}: no legal partitions")
     for p in legal:
-        assert p == tuple(sorted(p)), f"partition not sorted: {p}"
-        assert sum(p) <= rules.device_size, f"oversubscribed partition: {p}"
-        assert all(s in rules.instance_sizes for s in p), f"bad size in {p}"
-        assert rules.is_legal_partition(p)
+        if p != tuple(sorted(p)):
+            raise ValueError(f"partition not sorted: {p}")
+        if sum(p) > rules.device_size:
+            raise ValueError(
+                f"oversubscribed partition {p}: sums to {sum(p)} on a "
+                f"size-{rules.device_size} device"
+            )
+        if not all(s in rules.instance_sizes for s in p):
+            raise ValueError(
+                f"partition {p} uses a size outside "
+                f"{tuple(rules.instance_sizes)}"
+            )
+        if not rules.is_legal_partition(p):
+            raise ValueError(
+                f"legal_partitions() returned {p} but is_legal_partition "
+                "rejects it — the rule-set's oracles disagree"
+            )

@@ -132,7 +132,11 @@ class PodSliceRules(TpuSliceRules):
         return (16, 32, 64, 128, 256)
 
     def _to_units(self, partition: Partition) -> Partition:
-        assert all(s % self.UNIT == 0 for s in partition), partition
+        if not all(s % self.UNIT == 0 for s in partition):
+            raise ValueError(
+                f"partition {partition} has a size not divisible by the "
+                f"{self.UNIT}-chip allocation unit"
+            )
         return tuple(s // self.UNIT for s in partition)
 
     def is_legal_partition(self, partition: Partition) -> bool:

@@ -72,8 +72,13 @@ class WeightedScoreGreedy(OptimizerProcedure):
         if weights is None:
             weights = np.ones(len(space))
         weights = np.asarray(weights, dtype=np.float64)
-        assert weights.shape == (len(space),), "one weight per config"
-        assert np.all(weights > 0.0), "weights must be positive"
+        if weights.shape != (len(space),):
+            raise ValueError(
+                f"one weight per config: got shape {weights.shape}, "
+                f"expected ({len(space)},)"
+            )
+        if not np.all(weights > 0.0):
+            raise ValueError("weights must be positive")
         self.weights = weights
         self.seed = seed  # deterministic policy; kept for registry symmetry
 

@@ -86,6 +86,7 @@ def decode_attention_bhd(
     G = H // KV
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     block_k = min(block_k, S)
+    # contract-ok: no-bare-assert trace-time shape precondition inside jit
     assert S % block_k == 0, (S, block_k)
     grid = (B, S // block_k)
     kernel = functools.partial(_decode_kernel, scale=scale, groups=G)

@@ -97,6 +97,7 @@ def flash_attention_bhsd(
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     block_q = min(block_q, S)
     block_k = min(block_k, S)
+    # contract-ok: no-bare-assert trace-time shape precondition inside jit
     assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
     grid = (B, H, S // block_q, S // block_k)
 

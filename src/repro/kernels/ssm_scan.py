@@ -90,6 +90,7 @@ def ssm_scan_bshp(
     Bb, S, H, P = x.shape
     N = B_.shape[-1]
     chunk = min(chunk, S)
+    # contract-ok: no-bare-assert trace-time shape precondition inside jit
     assert S % chunk == 0, (S, chunk)
     nc = S // chunk
     grid = (Bb, nc)

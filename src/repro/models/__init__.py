@@ -1,6 +1,26 @@
-"""JAX model zoo for the assigned architectures."""
+"""JAX model zoo for the assigned architectures.
+
+:class:`ModelConfig` is a plain dataclass schema (stdlib only) and is
+exported eagerly — the config registry (:mod:`repro.configs`) and the
+scheduler-side arch bridge (:mod:`repro.core.arch_bridge`) consume it
+without needing jax.  :class:`Model` pulls in the whole jax stack, so it is
+exported lazily (PEP 562, same pattern as :mod:`repro.serving`): the
+import-boundary contract (``tools/check_contracts.py``) holds because
+``import repro.models`` alone no longer reaches jax.
+"""
 
 from repro.models.config import ModelConfig
-from repro.models.transformer import Model
 
 __all__ = ["Model", "ModelConfig"]
+
+
+def __getattr__(name):
+    if name == "Model":
+        from repro.models.transformer import Model
+
+        return Model
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

@@ -114,6 +114,7 @@ def gqa_prefill(
     out = o.reshape(B, S, H * hd) @ p["wo"]
     if cfg.sliding_window and cfg.sliding_window < S:
         W = cfg.sliding_window
+        # contract-ok: no-bare-assert trace-time shape precondition inside jit
         assert S % W == 0, "prefill length must align with the ring window"
         cache = {
             "k": k[:, S - W :],
@@ -374,6 +375,7 @@ def mla_prefill(
     out = o.reshape(B, S, H * vd) @ p["wo"]
     if cfg.sliding_window and cfg.sliding_window < S:
         W = cfg.sliding_window
+        # contract-ok: no-bare-assert trace-time shape precondition inside jit
         assert S % W == 0
         cache = {
             "ckv": ckv[:, S - W :],

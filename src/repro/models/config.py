@@ -77,11 +77,21 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim == 0 and self.num_heads > 0:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
-        assert self.arch_type in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
-        if self.arch_type == "ssm":
-            assert self.attention_kind == "none"
-        if self.attention_kind == "mla":
-            assert self.kv_lora_rank > 0
+        if self.arch_type not in ("dense", "moe", "ssm", "hybrid", "vlm", "audio"):
+            raise ValueError(
+                f"{self.name}: unknown arch_type {self.arch_type!r} "
+                "(expected dense|moe|ssm|hybrid|vlm|audio)"
+            )
+        if self.arch_type == "ssm" and self.attention_kind != "none":
+            raise ValueError(
+                f"{self.name}: pure-SSM configs take attention_kind='none', "
+                f"got {self.attention_kind!r}"
+            )
+        if self.attention_kind == "mla" and self.kv_lora_rank <= 0:
+            raise ValueError(
+                f"{self.name}: MLA attention needs kv_lora_rank > 0, "
+                f"got {self.kv_lora_rank}"
+            )
 
     # -- derived quantities used by profiles / roofline ------------------------------
     @property

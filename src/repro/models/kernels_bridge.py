@@ -72,6 +72,7 @@ def causal_attention(
         return _naive_attention(q, k, v, window, scale)
     # blocked over query tiles: score tile is (B,KV,G,q_block,S), never S×S
     n_blk = S // q_block
+    # contract-ok: no-bare-assert trace-time shape precondition inside jit
     assert S % q_block == 0, f"seq {S} not divisible by q_block {q_block}"
     q_tiles = q.reshape(B, n_blk, q_block, H, hd).transpose(1, 0, 2, 3, 4)
     offsets = jnp.arange(n_blk) * q_block

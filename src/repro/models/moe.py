@@ -138,6 +138,7 @@ def moe_forward_shard_map(
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     ep = mesh.shape[ep_axis]
+    # contract-ok: no-bare-assert trace-time shape precondition inside jit
     assert E % ep == 0, (E, ep)
     e_loc = E // ep
     dp_size = 1

@@ -125,6 +125,7 @@ class Model:
             ssm_mod.ssm_init(lf, cfg)
         elif cfg.arch_type == "hybrid":
             k = cfg.shared_attn_every
+            # contract-ok: no-bare-assert trace-time shape precondition inside jit
             assert cfg.num_layers % k == 0, "hybrid depth must divide superblock"
             sf = f.subfactory("shared_attn")
             sf.add("ln", (cfg.d_model,), (None,), init="ones")

@@ -58,7 +58,8 @@ class PagePool:
 
     # -- lifecycle ---------------------------------------------------------------
     def admit(self, rid: int) -> RequestPages:
-        assert rid not in self._requests
+        if rid in self._requests:
+            raise ValueError(f"request {rid} is already admitted to the pool")
         r = RequestPages(rid, [])
         self._requests[rid] = r
         return r

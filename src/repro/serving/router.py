@@ -32,7 +32,8 @@ class WeightedRouter:
     throughputs."""
 
     def __init__(self, instances: Sequence[InstanceHandle]):
-        assert instances, "router needs at least one instance"
+        if not instances:
+            raise ValueError("router needs at least one instance")
         self.instances = list(instances)
         self._current = [0.0] * len(self.instances)
         total = sum(i.throughput for i in self.instances)

@@ -237,7 +237,11 @@ class ReoptimizeDriver:
             if self.control_plane is not None:
                 return self.reconcile_divergence(cluster, now)
             return None
-        assert self.workload is not None, "initial_deploy must run first"
+        if self.workload is None:
+            raise RuntimeError(
+                "reoptimize() before initial_deploy(): the driver has no "
+                "deployed workload to transition from"
+            )
         cluster.record_instance_trace = True
         old_required = {
             s.name: s.slo.throughput for s in self.workload.services
@@ -299,7 +303,11 @@ class ReoptimizeDriver:
             ):
                 return self.controller.transition_incremental(cluster, new_dep), None
             return self.controller.transition(cluster, new_dep), None
-        assert self.desired is not None, "optimize() must set the target"
+        if self.desired is None:
+            raise RuntimeError(
+                "control-plane transition without a desired state: "
+                "optimize() must set the reconciler target first"
+            )
         report, stats = self.control_plane.reconciler.reconcile(
             cluster, self.desired
         )
@@ -312,7 +320,10 @@ class ReoptimizeDriver:
         standing desired state (a device failed, a node is draining), run a
         reconcile pass toward the unchanged target.  Returns ``None`` when
         already converged."""
-        assert self.control_plane is not None
+        if self.control_plane is None:
+            raise RuntimeError(
+                "reconcile_divergence() requires control_plane= mode"
+            )
         if (
             self.desired is None
             or self.workload is None
@@ -365,7 +376,12 @@ class ReoptimizeDriver:
         serial = max(report.serial_seconds, 1e-9)
         scale = report.parallel_seconds / serial
         timeline: List[Tuple[float, InstanceSet]] = [(now, dict(pre_instances))]
-        margin = {svc: float("inf") for svc in set(old_required) | set(new_required)}
+        # sorted: the margin dict feeds TransitionRecord serialization, so
+        # its construction must never depend on set hash order
+        margin = {
+            svc: float("inf")
+            for svc in sorted(set(old_required) | set(new_required))
+        }
 
         def note_margin(instances: InstanceSet) -> None:
             provided: Dict[str, float] = {}

@@ -829,7 +829,11 @@ class ClusterSimulator:
         no eligible target exists (nothing busy to break)."""
         cluster = self.cluster
         injector = self.control_plane.injector
-        assert injector is not None
+        if injector is None:
+            raise RuntimeError(
+                "device fault fired without a fault injector — scheduled "
+                "faults require control_plane.injector to be configured"
+            )
         spec = ClusterSpec.from_cluster(cluster)
         if fault.kind == "gpu_failure":
             busy = [

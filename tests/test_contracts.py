@@ -1,0 +1,417 @@
+"""Tests for the static contract checker (``tools/contracts``).
+
+Three layers:
+
+* **rule unit tests** on fixture snippets — tiny synthetic ``src/repro``
+  trees in tmp dirs, one per scenario, so each rule's positive *and*
+  negative space is pinned;
+* **framework tests** — waiver grammar (reason mandatory), baseline
+  round-trip and staleness;
+* **end-to-end** — the shipped tree passes (exit 0), and seeding a
+  violation into a copy makes the CLI exit non-zero naming the rule and
+  the ``file:line`` anchor.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+TOOLS_DIR = REPO_ROOT / "tools"
+sys.path.insert(0, str(TOOLS_DIR))
+
+from contracts import (  # noqa: E402
+    Finding,
+    WAIVER_SYNTAX_RULE,
+    load_baseline,
+    load_project,
+    parse_waivers,
+    run_checks,
+    save_baseline,
+)
+from contracts.rules import RULES  # noqa: E402
+
+CLI = TOOLS_DIR / "check_contracts.py"
+
+
+# -- fixture tree builder ----------------------------------------------------------
+
+
+def make_tree(tmp_path: Path, files: dict) -> Path:
+    """Write ``files`` (rel-path -> source) under ``tmp_path/src`` with
+    ``__init__.py`` auto-created for every package directory."""
+    root = tmp_path / "src"
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text)
+        d = p.parent
+        while d != root:
+            init = d / "__init__.py"
+            if not init.exists():
+                init.write_text("")
+            d = d.parent
+    return root
+
+
+def active(tmp_path: Path, files: dict, rule: str):
+    root = make_tree(tmp_path, files)
+    return run_checks(root, baseline_path=None, rule_ids=[rule]).active
+
+
+# -- import-boundary ---------------------------------------------------------------
+
+
+class TestImportBoundary:
+    def test_direct_jax_import_flagged(self, tmp_path):
+        found = active(
+            tmp_path, {"repro/core/bad.py": "import jax\n"}, "import-boundary"
+        )
+        assert len(found) == 1
+        f = found[0]
+        assert f.rule == "import-boundary"
+        assert f.file == "src/repro/core/bad.py"
+        assert f.line == 1
+        assert "jax" in f.message
+
+    def test_lazy_import_inside_deterministic_package_still_flagged(self, tmp_path):
+        src = "def f():\n    import jax\n    return jax\n"
+        found = active(
+            tmp_path, {"repro/sim/lazy.py": src}, "import-boundary"
+        )
+        assert len(found) == 1
+        assert found[0].line == 2
+
+    def test_transitive_chain_flagged_at_direct_site(self, tmp_path):
+        files = {
+            "repro/core/user.py": "from repro.helpers import util\n",
+            "repro/helpers/util.py": "import numpy\nimport jax.numpy\n",
+        }
+        found = active(tmp_path, files, "import-boundary")
+        assert len(found) == 1
+        f = found[0]
+        # anchored at the import statement that pulls jax in...
+        assert f.file == "src/repro/helpers/util.py"
+        assert f.line == 2
+        # ...with the chain naming the deterministic module it poisons
+        assert "repro.core.user" in f.message
+
+    def test_pep562_lazy_boundary_outside_scope_is_sanctioned(self, tmp_path):
+        files = {
+            "repro/core/user.py": "from repro.helpers import PLAIN\n",
+            "repro/helpers/__init__.py": (
+                "PLAIN = 1\n"
+                "def __getattr__(name):\n"
+                "    from repro.helpers.engine import Engine\n"
+                "    return Engine\n"
+            ),
+            "repro/helpers/engine.py": "import jax\nclass Engine: pass\n",
+        }
+        assert active(tmp_path, files, "import-boundary") == []
+
+    def test_ancestor_package_inits_are_in_closure(self, tmp_path):
+        # importing repro.helpers.leaf executes repro/helpers/__init__.py
+        files = {
+            "repro/core/user.py": "import repro.helpers.leaf\n",
+            "repro/helpers/__init__.py": "import jax\n",
+            "repro/helpers/leaf.py": "x = 1\n",
+        }
+        found = active(tmp_path, files, "import-boundary")
+        assert len(found) == 1
+        assert found[0].file == "src/repro/helpers/__init__.py"
+
+    def test_relative_import_resolution(self, tmp_path):
+        files = {
+            "repro/obs/a.py": "from . import b\n",
+            "repro/obs/b.py": "import jaxlib\n",
+        }
+        found = active(tmp_path, files, "import-boundary")
+        assert len(found) == 1
+        assert "jaxlib" in found[0].message
+
+
+# -- wall-clock --------------------------------------------------------------------
+
+
+class TestWallClock:
+    def test_time_in_deterministic_package(self, tmp_path):
+        found = active(
+            tmp_path, {"repro/controlplane/x.py": "import time\n"}, "wall-clock"
+        )
+        assert [f.line for f in found] == [1]
+        assert "time" in found[0].message
+
+    def test_datetime_function_local(self, tmp_path):
+        src = "def now():\n    from datetime import datetime\n    return datetime\n"
+        found = active(tmp_path, {"repro/sim/x.py": src}, "wall-clock")
+        assert [f.line for f in found] == [2]
+
+    def test_outside_scope_untouched(self, tmp_path):
+        assert (
+            active(tmp_path, {"repro/models/x.py": "import time\n"}, "wall-clock")
+            == []
+        )
+
+
+# -- seeded-rng --------------------------------------------------------------------
+
+
+class TestSeededRng:
+    def test_argless_default_rng(self, tmp_path):
+        src = "import numpy as np\nrng = np.random.default_rng()\n"
+        found = active(tmp_path, {"repro/core/x.py": src}, "seeded-rng")
+        assert [f.line for f in found] == [2]
+
+    def test_seeded_default_rng_ok(self, tmp_path):
+        src = "import numpy as np\nrng = np.random.default_rng(42)\n"
+        assert active(tmp_path, {"repro/core/x.py": src}, "seeded-rng") == []
+
+    def test_legacy_module_call(self, tmp_path):
+        src = "import numpy as np\nx = np.random.rand(3)\nnp.random.seed(0)\n"
+        found = active(tmp_path, {"repro/core/x.py": src}, "seeded-rng")
+        assert [f.line for f in found] == [2, 3]
+
+    def test_bare_default_rng_import(self, tmp_path):
+        src = "from numpy.random import default_rng\nrng = default_rng()\n"
+        found = active(tmp_path, {"repro/core/x.py": src}, "seeded-rng")
+        assert [f.line for f in found] == [2]
+
+    def test_generator_methods_ok(self, tmp_path):
+        src = (
+            "import numpy as np\n"
+            "rng = np.random.default_rng(7)\n"
+            "x = rng.integers(10)\n"
+        )
+        assert active(tmp_path, {"repro/core/x.py": src}, "seeded-rng") == []
+
+
+# -- no-bare-assert ----------------------------------------------------------------
+
+
+class TestNoBareAssert:
+    def test_assert_flagged(self, tmp_path):
+        src = "def f(x):\n    assert x > 0\n    return x\n"
+        found = active(tmp_path, {"repro/core/x.py": src}, "no-bare-assert")
+        assert [f.line for f in found] == [2]
+        assert "python -O" in found[0].message
+
+    def test_raise_not_flagged(self, tmp_path):
+        src = "def f(x):\n    if x <= 0:\n        raise ValueError(x)\n    return x\n"
+        assert active(tmp_path, {"repro/core/x.py": src}, "no-bare-assert") == []
+
+
+# -- unordered-iteration -----------------------------------------------------------
+
+
+class TestUnorderedIteration:
+    def test_set_literal_for_loop(self, tmp_path):
+        src = "for x in {1, 2, 3}:\n    print(x)\n"
+        found = active(tmp_path, {"repro/sim/report.py": src}, "unordered-iteration")
+        assert [f.line for f in found] == [1]
+
+    def test_set_union_comprehension(self, tmp_path):
+        src = "a, b = {1}, {2}\nout = [x for x in set(a) | set(b)]\n"
+        found = active(
+            tmp_path, {"repro/sim/reoptimize.py": src}, "unordered-iteration"
+        )
+        assert [f.line for f in found] == [2]
+
+    def test_sorted_wrap_ok(self, tmp_path):
+        src = "a, b = {1}, {2}\nout = [x for x in sorted(set(a) | set(b))]\n"
+        assert (
+            active(tmp_path, {"repro/sim/reoptimize.py": src}, "unordered-iteration")
+            == []
+        )
+
+    def test_obs_package_in_scope(self, tmp_path):
+        src = "for x in frozenset((1, 2)):\n    pass\n"
+        found = active(tmp_path, {"repro/obs/spans.py": src}, "unordered-iteration")
+        assert [f.line for f in found] == [1]
+
+    def test_out_of_scope_module_untouched(self, tmp_path):
+        src = "for x in {1, 2}:\n    pass\n"
+        assert (
+            active(tmp_path, {"repro/core/x.py": src}, "unordered-iteration") == []
+        )
+
+    def test_set_method_result(self, tmp_path):
+        src = "a, b = {1}, {2}\nfor x in a.union(b):\n    pass\n"
+        found = active(
+            tmp_path, {"repro/sim/scenarios.py": src}, "unordered-iteration"
+        )
+        assert [f.line for f in found] == [2]
+
+
+# -- waivers -----------------------------------------------------------------------
+
+
+class TestWaivers:
+    def test_inline_waiver_same_line(self, tmp_path):
+        src = "import time  # contract-ok: wall-clock deadline bound only\n"
+        root = make_tree(tmp_path, {"repro/core/x.py": src})
+        res = run_checks(root, rule_ids=["wall-clock"])
+        assert res.active == []
+        assert len(res.waived) == 1
+
+    def test_waiver_on_line_above(self, tmp_path):
+        src = (
+            "# contract-ok: wall-clock deadline bound only\n"
+            "import time\n"
+        )
+        root = make_tree(tmp_path, {"repro/core/x.py": src})
+        res = run_checks(root, rule_ids=["wall-clock"])
+        assert res.active == []
+        assert len(res.waived) == 1
+
+    def test_waiver_wrong_rule_does_not_cover(self, tmp_path):
+        src = "import time  # contract-ok: no-bare-assert misdirected waiver\n"
+        root = make_tree(tmp_path, {"repro/core/x.py": src})
+        res = run_checks(root, rule_ids=["wall-clock"])
+        assert [f.rule for f in res.active] == ["wall-clock"]
+
+    def test_reason_is_mandatory(self, tmp_path):
+        src = "import time  # contract-ok: wall-clock\n"
+        root = make_tree(tmp_path, {"repro/core/x.py": src})
+        res = run_checks(root, rule_ids=["wall-clock"])
+        rules_hit = sorted(f.rule for f in res.active)
+        # the reason-free waiver does NOT waive, and is itself a violation
+        assert rules_hit == [WAIVER_SYNTAX_RULE, "wall-clock"]
+
+    def test_waiver_syntax_finding_cannot_be_waived(self, tmp_path):
+        src = (
+            "# contract-ok: waiver-syntax trying to waive the meta-rule\n"
+            "import time  # contract-ok: wall-clock\n"
+        )
+        root = make_tree(tmp_path, {"repro/core/x.py": src})
+        res = run_checks(root, rule_ids=["wall-clock"])
+        assert WAIVER_SYNTAX_RULE in {f.rule for f in res.active}
+
+    def test_parse_waivers_extracts_reason(self, tmp_path):
+        root = make_tree(
+            tmp_path,
+            {"repro/core/x.py": "import time  # contract-ok: wall-clock why not\n"},
+        )
+        sf = load_project(root).modules["repro.core.x"]
+        waivers, malformed = parse_waivers(sf)
+        assert malformed == []
+        assert len(waivers) == 1
+        assert waivers[0].rule == "wall-clock"
+        assert waivers[0].reason == "why not"
+
+
+# -- baseline ----------------------------------------------------------------------
+
+
+class TestBaseline:
+    def test_round_trip_and_suppression(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/core/x.py": "import time\n"})
+        res = run_checks(root, rule_ids=["wall-clock"])
+        assert len(res.active) == 1
+        bl = tmp_path / "baseline.json"
+        save_baseline(bl, res.active)
+        entries = load_baseline(bl)
+        assert [(e["rule"], e["file"], e["line"]) for e in entries] == [
+            ("wall-clock", "src/repro/core/x.py", 1)
+        ]
+        res2 = run_checks(root, baseline_path=bl, rule_ids=["wall-clock"])
+        assert res2.ok
+        assert len(res2.baselined) == 1
+
+    def test_stale_entry_reported_not_fatal(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/core/x.py": "x = 1\n"})
+        bl = tmp_path / "baseline.json"
+        save_baseline(
+            bl, [Finding("wall-clock", "src/repro/core/x.py", 1, "gone")]
+        )
+        res = run_checks(root, baseline_path=bl, rule_ids=["wall-clock"])
+        assert res.ok
+        assert len(res.stale_baseline) == 1
+
+    def test_missing_baseline_is_empty(self, tmp_path):
+        assert load_baseline(tmp_path / "nope.json") == []
+
+
+# -- registry ----------------------------------------------------------------------
+
+
+def test_rule_registry_complete():
+    assert sorted(RULES) == [
+        "import-boundary",
+        "no-bare-assert",
+        "seeded-rng",
+        "unordered-iteration",
+        "wall-clock",
+    ]
+    for rid, cls in RULES.items():
+        assert cls.id == rid
+        assert cls.description
+
+
+# -- end-to-end over the shipped tree ----------------------------------------------
+
+
+def _run_cli(*args: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, str(CLI), *args],
+        capture_output=True,
+        text=True,
+        cwd=str(REPO_ROOT),
+        env={**os.environ, "PYTHONPATH": ""},  # stdlib-only: no src on path
+    )
+
+
+class TestEndToEnd:
+    def test_shipped_tree_is_clean(self):
+        proc = _run_cli()
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "0 violations" in proc.stdout
+
+    def test_shipped_baseline_small_and_waivers_present(self):
+        doc = json.loads((TOOLS_DIR / "contracts" / "baseline.json").read_text())
+        assert len(doc["entries"]) <= 5
+        res = run_checks(REPO_ROOT / "src",
+                         baseline_path=TOOLS_DIR / "contracts" / "baseline.json")
+        assert res.ok
+        assert len(res.waived) >= 3
+        # every shipped waiver carries a reason by construction (reason-free
+        # waivers would show up as active waiver-syntax findings)
+        assert not any(f.rule == WAIVER_SYNTAX_RULE for f in res.active)
+
+    def test_seeded_violation_fails_with_anchor(self, tmp_path):
+        shadow = tmp_path / "src"
+        shutil.copytree(
+            REPO_ROOT / "src", shadow, ignore=shutil.ignore_patterns("__pycache__")
+        )
+        victim = shadow / "repro" / "core" / "rms.py"
+        victim.write_text(victim.read_text() + "\nimport jax\n")
+        proc = _run_cli(
+            "--root", str(shadow),
+            "--baseline", str(TOOLS_DIR / "contracts" / "baseline.json"),
+        )
+        assert proc.returncode == 1
+        assert "[import-boundary]" in proc.stdout
+        # the anchor names the seeded file and its line
+        n_lines = victim.read_text().count("\n")
+        assert f"repro/core/rms.py:{n_lines}" in proc.stdout
+
+    def test_list_rules(self):
+        proc = _run_cli("--list-rules")
+        assert proc.returncode == 0
+        for rid in RULES:
+            assert rid in proc.stdout
+
+    def test_single_rule_selection(self):
+        proc = _run_cli("--rule", "wall-clock", "-q")
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_unknown_rule_rejected(self, tmp_path):
+        root = make_tree(tmp_path, {"repro/core/x.py": "x = 1\n"})
+        with pytest.raises(ValueError, match="unknown rule"):
+            run_checks(root, rule_ids=["no-such-rule"])

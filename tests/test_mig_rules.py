@@ -102,3 +102,52 @@ class TestTpuSliceRules:
         for s, (h, w) in SLICE_SHAPES.items():
             assert h * w == s
             assert slice_mesh_shape(s) == (h, w)
+
+
+# -- regression: validate_partition_universe raises typed errors ----------------
+
+
+class _BrokenRules(tpu_slice_rules().__class__):
+    """Stub rule-set whose oracles can be bent one failure mode at a time."""
+
+    def __init__(self, partitions):
+        self._partitions = partitions
+
+    def legal_partitions(self):
+        return self._partitions
+
+    def is_legal_partition(self, partition):
+        return partition in self._partitions
+
+
+class TestValidatePartitionUniverse:
+    """PR 10 converted the validator's bare asserts (stripped under
+    ``python -O``) to ValueError with messages naming the offender."""
+
+    def test_empty_universe(self):
+        with pytest.raises(ValueError, match="no legal partitions"):
+            validate_partition_universe(_BrokenRules([]))
+
+    def test_unsorted_partition(self):
+        with pytest.raises(ValueError, match="not sorted"):
+            validate_partition_universe(_BrokenRules([(2, 1)]))
+
+    def test_oversubscribed_partition(self):
+        with pytest.raises(ValueError, match="oversubscribed"):
+            validate_partition_universe(_BrokenRules([(16, 16)]))
+
+    def test_size_outside_menu(self):
+        with pytest.raises(ValueError, match="size outside"):
+            validate_partition_universe(_BrokenRules([(3,)]))
+
+    def test_disagreeing_oracles(self):
+        class _Disagree(_BrokenRules):
+            def is_legal_partition(self, partition):
+                return False
+
+        with pytest.raises(ValueError, match="oracles disagree"):
+            validate_partition_universe(_Disagree([(4, 4)]))
+
+    def test_real_rule_sets_still_pass(self):
+        validate_partition_universe(a100_rules())
+        validate_partition_universe(tpu_slice_rules())

@@ -163,3 +163,70 @@ def test_use_kernels_matches_jnp_path(arch):
         lj, _ = mj.forward(params, embeds=emb)
     err = float(jnp.max(jnp.abs(lk.astype(jnp.float32) - lj.astype(jnp.float32))))
     assert err < 0.15  # bf16 accumulation-order differences only
+
+
+# -- regression: ModelConfig validation raises typed errors ---------------------
+
+
+class TestModelConfigValidation:
+    """PR 10 converted ``ModelConfig.__post_init__``'s bare asserts
+    (stripped under ``python -O``) to ValueError with messages."""
+
+    @staticmethod
+    def _cfg(**overrides):
+        from repro.models import ModelConfig
+
+        kw = dict(
+            name="tiny",
+            arch_type="dense",
+            num_layers=2,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=2,
+            d_ff=128,
+            vocab_size=256,
+        )
+        kw.update(overrides)
+        return ModelConfig(**kw)
+
+    def test_unknown_arch_type(self):
+        with pytest.raises(ValueError, match="unknown arch_type"):
+            self._cfg(arch_type="quantum")
+
+    def test_ssm_requires_no_attention(self):
+        with pytest.raises(ValueError, match="attention_kind='none'"):
+            self._cfg(arch_type="ssm", attention_kind="gqa", ssm_state=16)
+
+    def test_mla_requires_kv_lora_rank(self):
+        with pytest.raises(ValueError, match="kv_lora_rank"):
+            self._cfg(attention_kind="mla", kv_lora_rank=0)
+
+    def test_valid_config_unaffected(self):
+        cfg = self._cfg()
+        assert cfg.head_dim == 16  # derived d_model // num_heads
+
+    def test_modelconfig_importable_without_jax(self):
+        """``repro.models`` now exports ModelConfig eagerly and Model
+        lazily (PEP 562): importing the package must not pull in jax —
+        that is the import-boundary leak PR 10's checker caught."""
+        import subprocess
+        import sys
+
+        code = (
+            "import sys\n"
+            "from repro.models import ModelConfig\n"
+            "import repro.core.arch_bridge\n"
+            "assert not any(m == 'jax' or m.startswith('jax.') "
+            "for m in sys.modules), 'jax leaked'\n"
+            "from repro.models import Model\n"
+            "assert 'jax' in sys.modules\n"
+        )
+        root = __file__.rsplit("/tests/", 1)[0]
+        proc = subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True,
+            text=True,
+            cwd=root,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        )
+        assert proc.returncode == 0, proc.stderr

@@ -575,6 +575,55 @@ def test_report_rejects_cell_free_documents(tmp_path):
         mod.main(["--bench", str(bad), "--no-git"])
 
 
+def test_report_compare_mode_diffs_cell_by_cell(tmp_path):
+    """``--compare A B`` renders added/removed cells and per-metric deltas
+    as a deterministic HTML section."""
+    mod = _report_tool()
+    with open(os.path.join(REPO_ROOT, "BENCH_scenarios.json")) as f:
+        doc_a = json.load(f)
+
+    doc_b = json.loads(json.dumps(doc_a))  # deep copy
+    keys = sorted(doc_b["cells"])
+    changed_key, removed_key = keys[0], keys[1]
+    doc_b["cells"][changed_key]["gpus_peak"] += 2
+    doc_b["cells"][changed_key]["mean_attainment"] -= 0.125
+    del doc_b["cells"][removed_key]
+    added_key = "synthetic/extra/cell"
+    doc_b["cells"][added_key] = json.loads(
+        json.dumps(doc_a["cells"][changed_key])
+    )
+
+    path_a = tmp_path / "a.json"
+    path_b = tmp_path / "b.json"
+    path_a.write_text(json.dumps(doc_a))
+    path_b.write_text(json.dumps(doc_b))
+
+    # the structural diff is exact
+    diff = mod.compare_cells(doc_a, doc_b)
+    assert diff["added"] == [added_key]
+    assert diff["removed"] == [removed_key]
+    assert sorted(diff["changed"]) == [changed_key]
+    assert set(diff["changed"][changed_key]) == {"gpus_peak", "mean_attainment"}
+    assert len(diff["unchanged"]) == len(doc_a["cells"]) - 2
+
+    # the CLI writes a deterministic page naming every bucket
+    out1, out2 = str(tmp_path / "d1.html"), str(tmp_path / "d2.html")
+    assert mod.main(["--compare", str(path_a), str(path_b), "--out", out1]) == 0
+    assert mod.main(["--compare", str(path_a), str(path_b), "--out", out2]) == 0
+    with open(out1, "rb") as f1, open(out2, "rb") as f2:
+        page, page2 = f1.read(), f2.read()
+    assert page == page2, "the comparison must be byte-deterministic"
+    for needle in (added_key, removed_key, changed_key, "gpus_peak", "+2"):
+        assert needle.encode() in page, needle
+    assert b"1 added" in page and b"1 removed" in page and b"1 changed" in page
+
+    # default out path derives from B; identical docs report no drift
+    assert mod.main(["--compare", str(path_a), str(path_a)]) == 0
+    with open(str(tmp_path / "a_compare.html"), "rb") as f:
+        same = f.read()
+    assert b"No per-metric drift" in same and b"0 added" in same
+
+
 # -- engine stats speak the obs schema -------------------------------------------
 
 

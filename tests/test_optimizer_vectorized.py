@@ -272,9 +272,31 @@ def test_mcts_edges_only_touch_sampled_or_scored_configs():
 def test_core_and_sim_stay_jax_free():
     """The performance contract: repro.core, repro.sim, the control plane
     (repro.controlplane) and the flight recorder (repro.obs) import no
-    jax."""
+    jax.
+
+    Two complementary checks.  The runtime pin (subprocess below) proves
+    the modules it imports are clean as executed; the static pin walks the
+    whole transitive import graph — including modules this test does not
+    import and function-local lazy imports the runtime check can never
+    see (that is how it caught the ``arch_bridge -> configs -> models ->
+    transformer -> jax`` leak the subprocess missed for nine PRs)."""
     import subprocess
     import sys
+
+    # -- static: the import-boundary rule over the full graph ------------------
+    root = __file__.rsplit("/tests/", 1)[0]
+    sys.path.insert(0, root + "/tools")
+    try:
+        from contracts import load_project
+        from contracts.rules import ImportBoundaryRule
+    finally:
+        sys.path.pop(0)
+    from pathlib import Path
+
+    findings = ImportBoundaryRule().check(load_project(Path(root) / "src"))
+    assert not findings, "\n".join(str(f) for f in findings)
+
+    # -- runtime: the executed-module pin --------------------------------------
 
     code = (
         "import sys; import repro.core, repro.sim, repro.controlplane; "

@@ -314,3 +314,36 @@ class TestReoptimizeDriver:
         for s in driver.workload.services:
             assert provided[s.name] >= s.slo.throughput - 1e-6
         assert cluster.gpus_in_use() == dep.num_gpus
+
+
+# -- regression: margin construction order must not reach report bytes ----------
+
+
+class TestReoptimizeRegressions:
+    def test_margin_fix_keeps_report_bytes(self):
+        """PR 10 replaced the hash-order ``set(old) | set(new)`` margin-dict
+        construction in ``ReoptimizeDriver`` with a sorted union.  The fix
+        must be byte-invisible: this SHA was pinned on the pre-fix code and
+        the scenario drives 5 transitions with full transparency-margin maps,
+        so any serialization drift (now or later) lands here before it
+        reaches the golden matrix."""
+        import hashlib
+
+        prof, trace = day_night_scenario(seed=0, hours=4.0)
+        cfg = SimConfig(seed=3, reoptimize_every_s=1800.0)
+        rep = ClusterSimulator(a100_rules(), prof, trace, cfg).run()
+        assert [len(t.transparency_margin) for t in rep.transitions] == [5] * 5
+        assert (
+            hashlib.sha256(rep.to_json().encode()).hexdigest()
+            == "907866b707fabb671aa5213df4e78e2a229ac83d5ad087e4fae8f13bfde596a8"
+        )
+
+    def test_reoptimize_before_deploy_raises(self):
+        """The driver's old ``assert`` (stripped under ``python -O``) is now
+        a RuntimeError: reoptimize() without initial_deploy() has no deployed
+        workload to transition from."""
+        prof = SyntheticPaperProfiles(n_models=3, seed=9)
+        driver = ReoptimizeDriver(a100_rules(), prof)
+        cluster = SimulatedCluster(a100_rules(), 1)
+        with pytest.raises(RuntimeError, match="initial_deploy"):
+            driver.reoptimize(cluster, {s: 500.0 for s in prof.services()}, 0.0)

@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Contract checker CLI: static enforcement of the repo's invariants.
+
+Runs the AST-based rules in ``tools/contracts/`` over ``src/`` and exits
+non-zero on any violation that is neither inline-waived
+(``# contract-ok: <rule-id> <reason>``) nor recorded in the committed
+baseline (``tools/contracts/baseline.json``).  Stdlib-only: no PYTHONPATH,
+no installs — CI runs it before anything else.
+
+Usage::
+
+    python tools/check_contracts.py                   # the shipped tree
+    python tools/check_contracts.py --list-rules      # rule ids + scopes
+    python tools/check_contracts.py --rule wall-clock # one rule only
+    python tools/check_contracts.py --update-baseline # adopt current debt
+
+Rule ids, the waiver grammar, and the baseline workflow are documented in
+``docs/CONTRACTS.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+TOOLS_DIR = Path(__file__).resolve().parent
+REPO_ROOT = TOOLS_DIR.parent
+sys.path.insert(0, str(TOOLS_DIR))
+
+from contracts import run_checks, save_baseline  # noqa: E402
+from contracts.rules import RULES  # noqa: E402
+
+DEFAULT_ROOT = REPO_ROOT / "src"
+DEFAULT_BASELINE = TOOLS_DIR / "contracts" / "baseline.json"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument(
+        "--root",
+        default=str(DEFAULT_ROOT),
+        help="directory holding the top-level package(s) (default: src/)",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=str(DEFAULT_BASELINE),
+        help="baseline JSON (default: tools/contracts/baseline.json; a "
+        "missing file means an empty baseline)",
+    )
+    ap.add_argument(
+        "--rule",
+        action="append",
+        metavar="ID",
+        help="run only this rule id (repeatable; default: all rules)",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline to adopt every currently-active "
+        "violation, then exit 0",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print rule ids and exit"
+    )
+    ap.add_argument(
+        "-q", "--quiet", action="store_true", help="summary line only"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid:22s} {RULES[rid].description}")
+        return 0
+
+    root = Path(args.root)
+    if not root.is_dir():
+        print(f"contract-check: no such root: {root}", file=sys.stderr)
+        return 2
+    baseline = Path(args.baseline) if args.baseline else None
+    result = run_checks(root, baseline_path=baseline, rule_ids=args.rule)
+
+    if args.update_baseline:
+        if baseline is None:
+            print("contract-check: --update-baseline needs --baseline",
+                  file=sys.stderr)
+            return 2
+        save_baseline(baseline, result.active)
+        print(
+            f"contract-check: baseline rewritten with "
+            f"{len(result.active)} entr{'y' if len(result.active) == 1 else 'ies'}"
+            f" -> {baseline}"
+        )
+        return 0
+
+    if not args.quiet:
+        for f in result.active:
+            print(f)
+        for entry in result.stale_baseline:
+            print(
+                f"contract-check: stale baseline entry (fixed? regen with "
+                f"--update-baseline): {entry['rule']} at "
+                f"{entry['file']}:{entry['line']}"
+            )
+    print(
+        f"contract-check: {len(result.active)} violation"
+        f"{'' if len(result.active) == 1 else 's'} "
+        f"({len(result.waived)} waived, {len(result.baselined)} baselined, "
+        f"{len(result.stale_baseline)} stale baseline entr"
+        f"{'y' if len(result.stale_baseline) == 1 else 'ies'}) "
+        f"across {result.n_files} files"
+    )
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,291 @@
+"""Contract checker: AST-based static analysis for this repo's invariants.
+
+Every headline result in this repo — byte-identical ``SimReport.to_json()``
+per seed, the golden-pinned ``BENCH_scenarios.json`` cell SHAs, the §6
+transition-transparency story — rests on contracts that runtime tests can
+only spot-check: the jax-free import pin sees just the modules it imports,
+a grep cannot see a function-local lazy import, and goldens catch drift
+only after it happened.  This package is the static side of those
+contracts: a small, stdlib-only (``ast`` + ``pathlib``) analysis framework
+with
+
+* a **rule registry** (:mod:`contracts.rules` — one class per rule id),
+* per-rule :class:`Finding`\\ s with ``file:line`` anchors,
+* an **inline waiver grammar** — ``# contract-ok: <rule-id> <reason>`` on
+  the flagged line or the line directly above waives exactly that rule
+  there, and the reason is mandatory (a reason-free waiver is itself a
+  violation), and
+* a committed **baseline** (``tools/contracts/baseline.json``) so adoption
+  is incremental: pre-existing debt is named, new debt fails the build.
+
+``tools/check_contracts.py`` is the CLI; ``docs/CONTRACTS.md`` documents
+every rule id and the workflow.  The framework deliberately has no
+third-party dependencies so CI can run it before anything is installed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: ``# contract-ok: <rule-id> <reason>`` — the reason is mandatory.
+WAIVER_RE = re.compile(
+    r"#\s*contract-ok:\s*(?P<rule>[A-Za-z0-9_-]+)(?:\s+(?P<reason>\S.*?))?\s*$"
+)
+
+#: Rule id reserved for malformed waiver comments (it cannot be waived).
+WAIVER_SYNTAX_RULE = "waiver-syntax"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file and line."""
+
+    rule: str
+    file: str  # path relative to the scanned root's parent (e.g. src/...)
+    line: int
+    message: str
+
+    @property
+    def anchor(self) -> str:
+        return f"{self.file}:{self.line}"
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+    def key(self) -> Tuple[str, str, int]:
+        return (self.rule, self.file, self.line)
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed source file: text, AST, and its dotted module name."""
+
+    path: Path  # absolute
+    rel: str  # posix path relative to the scanned root's parent
+    module: str  # dotted name relative to the root (e.g. repro.core.ga)
+    text: str
+    tree: ast.Module
+
+    @property
+    def is_package_init(self) -> bool:
+        return self.path.name == "__init__.py"
+
+
+class Project:
+    """Every parsed ``*.py`` under one root directory (e.g. ``src/``)."""
+
+    def __init__(self, root: Path, files: Sequence[SourceFile]):
+        self.root = root
+        self.files: List[SourceFile] = sorted(files, key=lambda f: f.rel)
+        self.modules: Dict[str, SourceFile] = {f.module: f for f in self.files}
+
+    def file_of(self, module: str) -> Optional[SourceFile]:
+        return self.modules.get(module)
+
+
+def _module_name(py: Path, root: Path) -> str:
+    parts = list(py.relative_to(root).with_suffix("").parts)
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def load_project(root: Path) -> Project:
+    """Parse every ``*.py`` under ``root`` (sorted, deterministic).
+
+    A file that fails to parse is a hard error — the checker cannot vouch
+    for code it cannot read.
+    """
+    root = root.resolve()
+    base = root.parent
+    files: List[SourceFile] = []
+    for py in sorted(root.rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        text = py.read_text()
+        try:
+            tree = ast.parse(text, filename=str(py))
+        except SyntaxError as exc:
+            raise SyntaxError(f"{py}: {exc}") from exc
+        files.append(
+            SourceFile(
+                path=py,
+                rel=py.relative_to(base).as_posix(),
+                module=_module_name(py, root),
+                text=text,
+                tree=tree,
+            )
+        )
+    return Project(root, files)
+
+
+# -- waivers ---------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    rule: str
+    reason: str
+    file: str
+    line: int  # the line carrying the comment
+
+    def covers(self, finding: Finding) -> bool:
+        """A waiver covers its own line and the line directly below it
+        (standalone comment-above style)."""
+        return (
+            finding.rule == self.rule
+            and finding.file == self.file
+            and finding.line in (self.line, self.line + 1)
+        )
+
+
+def parse_waivers(sf: SourceFile) -> Tuple[List[Waiver], List[Finding]]:
+    """All waivers in one file, plus findings for malformed ones (a
+    ``contract-ok`` with no reason is debt pretending to be a decision)."""
+    waivers: List[Waiver] = []
+    malformed: List[Finding] = []
+    for i, line in enumerate(sf.text.splitlines(), start=1):
+        if "contract-ok" not in line:
+            continue
+        m = WAIVER_RE.search(line)
+        if m is None:
+            malformed.append(
+                Finding(
+                    WAIVER_SYNTAX_RULE,
+                    sf.rel,
+                    i,
+                    "unparsable contract-ok comment — expected "
+                    "'# contract-ok: <rule-id> <reason>'",
+                )
+            )
+            continue
+        if not m.group("reason"):
+            malformed.append(
+                Finding(
+                    WAIVER_SYNTAX_RULE,
+                    sf.rel,
+                    i,
+                    f"waiver for {m.group('rule')!r} carries no reason — "
+                    "every waiver must say why",
+                )
+            )
+            continue
+        waivers.append(Waiver(m.group("rule"), m.group("reason"), sf.rel, i))
+    return waivers, malformed
+
+
+# -- baseline --------------------------------------------------------------------
+
+
+def load_baseline(path: Optional[Path]) -> List[Dict]:
+    """Baseline entries (``[]`` when the file does not exist).  Each entry:
+    ``{"rule": ..., "file": ..., "line": ..., "note": ...}``."""
+    if path is None or not path.exists():
+        return []
+    doc = json.loads(path.read_text())
+    entries = doc.get("entries", [])
+    for e in entries:
+        for field in ("rule", "file", "line"):
+            if field not in e:
+                raise ValueError(f"baseline entry missing {field!r}: {e}")
+    return entries
+
+
+def save_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    entries = [
+        {
+            "rule": f.rule,
+            "file": f.file,
+            "line": f.line,
+            "note": f.message,
+        }
+        for f in sorted(findings, key=Finding.key)
+    ]
+    path.write_text(
+        json.dumps({"comment": BASELINE_COMMENT, "entries": entries}, indent=2)
+        + "\n"
+    )
+
+
+BASELINE_COMMENT = (
+    "Adopted pre-existing contract debt. Entries match on (rule, file, line); "
+    "shrink this list by fixing or waiving sites, never grow it silently "
+    "(regen: python tools/check_contracts.py --update-baseline)."
+)
+
+
+# -- the check pipeline ----------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CheckResult:
+    """The outcome of one full run: what fails the build and what does not."""
+
+    active: List[Finding]  # unwaived, unbaselined — these fail the build
+    waived: List[Tuple[Finding, Waiver]]
+    baselined: List[Finding]
+    stale_baseline: List[Dict]  # entries no longer matching any finding
+    n_files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.active
+
+
+def run_checks(
+    root: Path,
+    baseline_path: Optional[Path] = None,
+    rule_ids: Optional[Sequence[str]] = None,
+) -> CheckResult:
+    """Load the tree, run the (selected) rules, then subtract waivers and
+    baseline entries.  Deterministic: findings sorted by (file, line, rule)."""
+    from .rules import RULES  # local: avoids a cycle at package import
+
+    project = load_project(root)
+    ids = list(rule_ids) if rule_ids else sorted(RULES)
+    unknown = [i for i in ids if i not in RULES]
+    if unknown:
+        raise ValueError(
+            f"unknown rule id(s) {unknown}; known: {sorted(RULES)}"
+        )
+
+    findings: List[Finding] = []
+    for rid in ids:
+        findings.extend(RULES[rid]().check(project))
+
+    waivers: List[Waiver] = []
+    for sf in project.files:
+        ws, malformed = parse_waivers(sf)
+        waivers.extend(ws)
+        findings.extend(malformed)  # malformed waivers are violations
+    findings.sort(key=lambda f: (f.file, f.line, f.rule, f.message))
+
+    kept: List[Finding] = []
+    waived: List[Tuple[Finding, Waiver]] = []
+    for f in findings:
+        w = next((w for w in waivers if w.covers(f)), None)
+        if w is not None and f.rule != WAIVER_SYNTAX_RULE:
+            waived.append((f, w))
+        else:
+            kept.append(f)
+
+    entries = load_baseline(baseline_path)
+    keys = {(e["rule"], e["file"], int(e["line"])) for e in entries}
+    active = [f for f in kept if f.key() not in keys]
+    baselined = [f for f in kept if f.key() in keys]
+    matched = {f.key() for f in baselined}
+    stale = [
+        e for e in entries if (e["rule"], e["file"], int(e["line"])) not in matched
+    ]
+    return CheckResult(
+        active=active,
+        waived=waived,
+        baselined=baselined,
+        stale_baseline=stale,
+        n_files=len(project.files),
+    )

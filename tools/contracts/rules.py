@@ -1,0 +1,466 @@
+"""The contract rules.  One class per rule id; register with ``@rule``.
+
+Adding a rule (see ``docs/CONTRACTS.md``):
+
+1. subclass :class:`Rule`, set ``id`` (kebab-case) and ``description``,
+2. implement ``check(project) -> List[Finding]`` — pure ``ast`` walking,
+   deterministic output order,
+3. decorate with ``@rule`` so the registry picks it up,
+4. add fixture-snippet unit tests in ``tests/test_contracts.py`` and a row
+   to the rule table in ``docs/CONTRACTS.md``.
+
+Scopes used below:
+
+* **deterministic packages** — ``repro.core``, ``repro.sim``,
+  ``repro.obs``, ``repro.controlplane``: the numpy-only, sim-time,
+  seed-deterministic layers whose outputs are golden-pinned.
+* **serialization modules** — ``repro.sim.report`` / ``.scenarios`` /
+  ``.reoptimize`` and everything under ``repro.obs``: code whose iteration
+  order can reach ``SimReport.to_json()`` bytes.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Type
+
+from . import Finding, Project, SourceFile
+
+#: The numpy-only / sim-time / seed-deterministic packages.
+DETERMINISTIC_PACKAGES: Tuple[str, ...] = (
+    "repro.core",
+    "repro.sim",
+    "repro.obs",
+    "repro.controlplane",
+)
+
+#: Import roots that must never be reachable from the deterministic packages.
+FORBIDDEN_IMPORT_ROOTS: Tuple[str, ...] = ("jax", "jaxlib")
+
+#: Wall-clock modules banned inside the deterministic packages.
+WALL_CLOCK_MODULES: Tuple[str, ...] = ("time", "datetime")
+
+#: Modules whose iteration order feeds serialized report bytes.
+SERIALIZATION_MODULES: Tuple[str, ...] = (
+    "repro.sim.report",
+    "repro.sim.scenarios",
+    "repro.sim.reoptimize",
+)
+SERIALIZATION_PACKAGES: Tuple[str, ...] = ("repro.obs",)
+
+RULES: Dict[str, Type["Rule"]] = {}
+
+
+def rule(cls: Type["Rule"]) -> Type["Rule"]:
+    if cls.id in RULES:
+        raise ValueError(f"duplicate rule id {cls.id!r}")
+    RULES[cls.id] = cls
+    return cls
+
+
+class Rule:
+    id: str = ""
+    description: str = ""
+
+    def check(self, project: Project) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, sf: SourceFile, line: int, message: str) -> Finding:
+        return Finding(self.id, sf.rel, line, message)
+
+
+def _in_package(module: str, packages: Sequence[str]) -> bool:
+    return any(module == p or module.startswith(p + ".") for p in packages)
+
+
+# -- import graph (shared by import-boundary) ------------------------------------
+
+
+class ImportRecord:
+    """One import statement: where it is and whether it is lazy."""
+
+    __slots__ = ("target", "line", "local")
+
+    def __init__(self, target: str, line: int, local: bool):
+        self.target = target
+        self.line = line
+        self.local = local
+
+
+class _ImportCollector(ast.NodeVisitor):
+    """Collect every import in a module, tagging function-local (lazy) ones.
+
+    Class bodies execute at import time, so only function bodies count as
+    lazy scopes."""
+
+    def __init__(self, package: str):
+        self.package = package  # dotted package context for relative imports
+        self.records: List[ImportRecord] = []
+        self._depth = 0
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self.records.append(
+                ImportRecord(alias.name, node.lineno, self._depth > 0)
+            )
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        base = self._resolve_base(node)
+        if base is None:
+            return
+        local = self._depth > 0
+        self.records.append(ImportRecord(base, node.lineno, local))
+        for alias in node.names:
+            if alias.name != "*":
+                # ``from pkg import sub`` may bind a submodule: record the
+                # candidate; resolution keeps it only if it is a real module
+                self.records.append(
+                    ImportRecord(f"{base}.{alias.name}", node.lineno, local)
+                )
+
+    def _resolve_base(self, node: ast.ImportFrom) -> Optional[str]:
+        if node.level == 0:
+            return node.module
+        parts = self.package.split(".") if self.package else []
+        if node.level - 1 > len(parts):
+            return None  # beyond the root — unresolvable, skip
+        parts = parts[: len(parts) - (node.level - 1)]
+        if node.module:
+            parts.append(node.module)
+        return ".".join(parts) if parts else None
+
+
+def collect_imports(sf: SourceFile) -> List[ImportRecord]:
+    package = sf.module if sf.is_package_init else sf.module.rpartition(".")[0]
+    c = _ImportCollector(package)
+    c.visit(sf.tree)
+    return c.records
+
+
+@rule
+class ImportBoundaryRule(Rule):
+    """The deterministic packages must never reach jax — transitively.
+
+    Builds the full import graph over the scanned tree (including
+    function-local lazy imports, which the runtime jax-free pin cannot
+    see), then walks the closure of every module in a deterministic
+    package.  Edges are followed through *all* imports for modules inside
+    the deterministic packages (a lazy ``import jax`` there is still a
+    contract breach — it would fire on some code path), but only through
+    *module-level* imports for modules outside them: a function-local
+    import in an outside module (e.g. the PEP-562 ``__getattr__`` engine
+    export in ``repro/serving/__init__.py``) is exactly the sanctioned
+    lazy boundary, and it never executes during a deterministic-package
+    import.
+
+    The finding anchors at the import statement that directly pulls in the
+    forbidden root, with one example chain from a deterministic module."""
+
+    id = "import-boundary"
+    description = (
+        "repro.core/sim/obs/controlplane must never transitively import jax"
+    )
+
+    def check(self, project: Project) -> List[Finding]:
+        imports: Dict[str, List[ImportRecord]] = {
+            sf.module: collect_imports(sf) for sf in project.files
+        }
+
+        def resolve(target: str) -> Tuple[List[str], Optional[str]]:
+            """(internal modules this import executes, forbidden root or None)."""
+            root = target.split(".")[0]
+            if root in FORBIDDEN_IMPORT_ROOTS:
+                return [], root
+            internal: List[str] = []
+            # importing a.b.c executes a, a.b, and a.b.c (package __init__s)
+            parts = target.split(".")
+            for i in range(1, len(parts) + 1):
+                prefix = ".".join(parts[:i])
+                if prefix in project.modules:
+                    internal.append(prefix)
+            return internal, None
+
+        def edges(module: str) -> List[ImportRecord]:
+            recs = imports.get(module, [])
+            if _in_package(module, DETERMINISTIC_PACKAGES):
+                return recs  # lazy imports inside the contract scope count
+            return [r for r in recs if not r.local]
+
+        findings: List[Finding] = []
+        seen_sites: Set[Tuple[str, int]] = set()
+        roots = sorted(
+            m
+            for m in project.modules
+            if _in_package(m, DETERMINISTIC_PACKAGES)
+        )
+        for start in roots:
+            # BFS with parent pointers for the example chain
+            parent: Dict[str, Tuple[Optional[str], int]] = {start: (None, 0)}
+            queue = [start]
+            while queue:
+                mod = queue.pop(0)
+                for rec in edges(mod):
+                    internal, forbidden = resolve(rec.target)
+                    if forbidden is not None:
+                        site = (mod, rec.line)
+                        if site in seen_sites:
+                            continue
+                        seen_sites.add(site)
+                        chain = self._chain(parent, mod) + [forbidden]
+                        sf = project.modules[mod]
+                        findings.append(
+                            self.finding(
+                                sf,
+                                rec.line,
+                                f"import of {rec.target!r} puts {forbidden!r}"
+                                " in the import closure of deterministic "
+                                f"module {start!r} "
+                                f"({' -> '.join(chain)})",
+                            )
+                        )
+                        continue
+                    for nxt in internal:
+                        if nxt not in parent:
+                            parent[nxt] = (mod, rec.line)
+                            queue.append(nxt)
+        findings.sort(key=lambda f: (f.file, f.line, f.message))
+        return findings
+
+    @staticmethod
+    def _chain(parent: Dict[str, Tuple[Optional[str], int]], mod: str) -> List[str]:
+        chain = [mod]
+        while parent[chain[-1]][0] is not None:
+            chain.append(parent[chain[-1]][0])  # type: ignore[arg-type]
+        return list(reversed(chain))
+
+
+@rule
+class WallClockRule(Rule):
+    """No ``time``/``datetime`` imports inside the deterministic packages.
+
+    Everything in those layers runs on sim time; a wall-clock read is
+    nondeterminism that ends up in golden-pinned bytes.  The anytime-budget
+    deadline sites (greedy trim phase, GA round loop, optimizer timings)
+    are the sanctioned exceptions — each carries an inline waiver saying
+    why wall clock is allowed to *bound* work there but never to *steer*
+    deterministic output."""
+
+    id = "wall-clock"
+    description = (
+        "no time/datetime imports in sim-time packages "
+        "(repro.core/sim/obs/controlplane)"
+    )
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files:
+            if not _in_package(sf.module, DETERMINISTIC_PACKAGES):
+                continue
+            seen: Set[Tuple[int, str]] = set()
+            for rec in collect_imports(sf):
+                root = rec.target.split(".")[0]
+                if root in WALL_CLOCK_MODULES and (rec.line, root) not in seen:
+                    seen.add((rec.line, root))
+                    findings.append(
+                        self.finding(
+                            sf,
+                            rec.line,
+                            f"wall-clock module {root!r} imported inside "
+                            f"sim-time package module {sf.module!r}",
+                        )
+                    )
+        return findings
+
+
+#: np.random attributes that are part of the seeded-Generator API.
+_SAFE_NP_RANDOM = {
+    "default_rng",
+    "Generator",
+    "SeedSequence",
+    "BitGenerator",
+    "PCG64",
+    "Philox",
+    "SFC64",
+    "MT19937",
+}
+
+
+@rule
+class SeededRngRule(Rule):
+    """All randomness must flow from an explicit seed.
+
+    Flags (anywhere under the scanned tree):
+
+    * ``np.random.default_rng()`` with no arguments — OS-entropy seeding,
+      unreproducible by construction;
+    * legacy module-level draws (``np.random.<dist>(...)``,
+      ``np.random.seed``, ``np.random.RandomState``) — global mutable
+      stream shared across call sites."""
+
+    id = "seeded-rng"
+    description = (
+        "no argless default_rng() and no legacy np.random module calls"
+    )
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files:
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _dotted(node.func)
+                if chain is None:
+                    continue
+                hit = self._classify(chain, node)
+                if hit:
+                    findings.append(self.finding(sf, node.lineno, hit))
+        findings.sort(key=lambda f: (f.file, f.line))
+        return findings
+
+    @staticmethod
+    def _classify(chain: Tuple[str, ...], node: ast.Call) -> Optional[str]:
+        argless = not node.args and not node.keywords
+        # np.random.X(...) / numpy.random.X(...)
+        if len(chain) == 3 and chain[0] in ("np", "numpy") and chain[1] == "random":
+            attr = chain[2]
+            if attr == "default_rng":
+                if argless:
+                    return (
+                        "argless np.random.default_rng() draws OS entropy — "
+                        "derive the seed from the caller's config"
+                    )
+                return None
+            if attr not in _SAFE_NP_RANDOM:
+                return (
+                    f"legacy np.random.{attr}() uses the global stream — "
+                    "thread a seeded np.random.Generator instead"
+                )
+            return None
+        # bare default_rng() via `from numpy.random import default_rng`
+        if chain == ("default_rng",) and argless:
+            return (
+                "argless default_rng() draws OS entropy — "
+                "derive the seed from the caller's config"
+            )
+        return None
+
+
+def _dotted(node: ast.expr) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None for non-name chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+@rule
+class NoBareAssertRule(Rule):
+    """Runtime code must not rely on ``assert`` for validation.
+
+    ``python -O`` strips every assert, so an assert-guarded invariant
+    silently vanishes in optimized runs.  Raise a typed exception with a
+    message instead; trace-time shape preconditions in jit'd kernel/model
+    code may carry a waiver (they fire during tracing, where -O stripping
+    is an accepted trade)."""
+
+    id = "no-bare-assert"
+    description = "no assert statements in src/repro runtime code"
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files:
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Assert):
+                    findings.append(
+                        self.finding(
+                            sf,
+                            node.lineno,
+                            "bare assert vanishes under python -O — raise "
+                            "a typed exception (or waive with a reason)",
+                        )
+                    )
+        findings.sort(key=lambda f: (f.file, f.line))
+        return findings
+
+
+@rule
+class UnorderedIterationRule(Rule):
+    """No hash-order iteration in modules that feed serialization.
+
+    In ``repro.sim.report`` / ``.scenarios`` / ``.reoptimize`` and
+    ``repro.obs``, iterating a set (literal, ``set()``/``frozenset()``
+    call, set operator expression, or set-method result) without
+    ``sorted()`` builds hash-order-dependent structures that can reach
+    ``SimReport.to_json()`` bytes.  Python string hashing is randomized
+    per process unless PYTHONHASHSEED pins it — this is drift waiting for
+    an interpreter upgrade.  Membership tests are fine; only iteration is
+    flagged."""
+
+    id = "unordered-iteration"
+    description = (
+        "no unsorted set iteration in serialization-feeding modules "
+        "(sim/report, sim/scenarios, sim/reoptimize, obs/*)"
+    )
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for sf in project.files:
+            if sf.module not in SERIALIZATION_MODULES and not _in_package(
+                sf.module, SERIALIZATION_PACKAGES
+            ):
+                continue
+            for node in ast.walk(sf.tree):
+                iters: List[ast.expr] = []
+                if isinstance(node, ast.For):
+                    iters.append(node.iter)
+                elif isinstance(
+                    node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+                ):
+                    iters.extend(gen.iter for gen in node.generators)
+                for it in iters:
+                    if _set_like(it):
+                        findings.append(
+                            self.finding(
+                                sf,
+                                it.lineno,
+                                "iterating a set in a serialization-feeding "
+                                "module — wrap the iterable in sorted()",
+                            )
+                        )
+        findings.sort(key=lambda f: (f.file, f.line))
+        return findings
+
+
+def _set_like(node: ast.expr) -> bool:
+    """Syntactically-recognizable set expressions (conservative)."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(node.func, ast.Attribute) and node.func.attr in (
+            "union",
+            "intersection",
+            "difference",
+            "symmetric_difference",
+        ):
+            # these four names are set-API-specific enough to flag even
+            # when the receiver is a plain name
+            return True
+        return False
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.BitOr, ast.BitAnd, ast.BitXor, ast.Sub)
+    ):
+        return _set_like(node.left) or _set_like(node.right)
+    return False

@@ -2,9 +2,10 @@
 """Docs smoke: execute documented quickstart blocks verbatim so they cannot rot.
 
 Extracts tagged fenced code blocks from the docs — the ``bash quickstart``
-block in the top-level ``README.md`` and the ``bash obs-quickstart`` block
-in ``docs/OBSERVABILITY.md`` — and runs each command line (comments
-skipped) from the repo root, failing on the first non-zero exit.  CI runs
+block in the top-level ``README.md``, the ``bash obs-quickstart`` block in
+``docs/OBSERVABILITY.md``, and the ``bash contracts-quickstart`` block in
+``docs/CONTRACTS.md`` — and runs each command line (comments skipped) from
+the repo root, failing on the first non-zero exit.  CI runs
 this in both test jobs — if someone edits a quickstart into something that
 no longer works, or renames a flag a quickstart uses, the build breaks
 instead of the docs silently lying.
@@ -30,6 +31,7 @@ FENCE_TAG = "bash quickstart"
 SOURCES: list[tuple[str, str]] = [
     (README, FENCE_TAG),
     (os.path.join(REPO_ROOT, "docs", "OBSERVABILITY.md"), "bash obs-quickstart"),
+    (os.path.join(REPO_ROOT, "docs", "CONTRACTS.md"), "bash contracts-quickstart"),
 ]
 
 

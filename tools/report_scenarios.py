@@ -25,6 +25,8 @@ Usage::
     PYTHONPATH=src python tools/report_scenarios.py                # repo doc
     PYTHONPATH=src python tools/report_scenarios.py \\
         --bench /tmp/BENCH_scenarios_smoke.json --out /tmp/report.html --no-git
+    python tools/report_scenarios.py --compare old.json new.json \\
+        --out /tmp/diff.html   # cell-by-cell diff of two benchmark documents
 """
 
 from __future__ import annotations
@@ -305,6 +307,126 @@ def trend_section(
     return parts
 
 
+#: Metrics diffed per cell by ``--compare`` (name, display decimals).
+COMPARE_METRICS: Tuple[Tuple[str, int], ...] = (
+    ("gpus_peak", 0),
+    ("gpus_saved", 0),
+    ("mean_attainment", 3),
+    ("served_fraction", 3),
+    ("power_w", 0),
+    ("availability", 3),
+)
+
+
+def compare_cells(doc_a: Dict, doc_b: Dict) -> Dict:
+    """Cell-by-cell structural diff of two benchmark documents.
+
+    Returns ``{"added": [...], "removed": [...], "changed": {key: {metric:
+    (a, b)}}, "unchanged": [...]}`` — keys sorted, so downstream rendering
+    is deterministic."""
+    ca, cb = doc_a["cells"], doc_b["cells"]
+    added = sorted(k for k in cb if k not in ca)
+    removed = sorted(k for k in ca if k not in cb)
+    changed: Dict[str, Dict[str, Tuple[float, float]]] = {}
+    unchanged: List[str] = []
+    for key in sorted(set(ca) & set(cb)):
+        deltas: Dict[str, Tuple[float, float]] = {}
+        for metric, _ in COMPARE_METRICS:
+            va = ca[key].get(metric)
+            vb = cb[key].get(metric)
+            if va != vb:
+                deltas[metric] = (va, vb)
+        if ca[key].get("transparent") != cb[key].get("transparent"):
+            deltas["transparent"] = (
+                ca[key].get("transparent"),
+                cb[key].get("transparent"),
+            )
+        if deltas:
+            changed[key] = deltas
+        else:
+            unchanged.append(key)
+    return {
+        "added": added,
+        "removed": removed,
+        "changed": changed,
+        "unchanged": unchanged,
+    }
+
+
+def compare_section(
+    doc_a: Dict, doc_b: Dict, label_a: str, label_b: str
+) -> List[str]:
+    diff = compare_cells(doc_a, doc_b)
+    nd = {m: d for m, d in COMPARE_METRICS}
+    parts = [
+        "<h2>Document comparison</h2>",
+        f'<p class="small">A = <code>{html.escape(label_a)}</code> '
+        f"({len(doc_a['cells'])} cells) &middot; "
+        f"B = <code>{html.escape(label_b)}</code> "
+        f"({len(doc_b['cells'])} cells) &middot; "
+        f"{len(diff['changed'])} changed, {len(diff['unchanged'])} "
+        f"unchanged, {len(diff['added'])} added, "
+        f"{len(diff['removed'])} removed</p>",
+    ]
+    for title, keys in (("Added in B", diff["added"]),
+                        ("Removed in B", diff["removed"])):
+        if keys:
+            parts.append(f"<h3>{title}</h3><ul>")
+            parts.extend(
+                f"<li><code>{html.escape(k)}</code></li>" for k in keys
+            )
+            parts.append("</ul>")
+    if diff["changed"]:
+        parts.append("<h3>Per-metric deltas</h3>")
+        parts.append(
+            "<table><tr><th class='name'>cell</th><th class='name'>metric"
+            "</th><th>A</th><th>B</th><th>delta</th></tr>"
+        )
+        for key, deltas in diff["changed"].items():  # already key-sorted
+            first = True
+            for metric in sorted(deltas):
+                va, vb = deltas[metric]
+                if metric == "transparent":
+                    a_s, b_s, d_s = str(va), str(vb), "flip"
+                else:
+                    d = nd.get(metric, 3)
+                    a_s, b_s = fmt(float(va), d), fmt(float(vb), d)
+                    d_s = f"{float(vb) - float(va):+.{d}f}"
+                parts.append(
+                    "<tr>"
+                    + (
+                        f"<td class='name' rowspan='{len(deltas)}'>"
+                        f"{html.escape(key)}</td>"
+                        if first
+                        else ""
+                    )
+                    + f"<td class='name'>{html.escape(metric)}</td>"
+                    f"<td>{a_s}</td><td>{b_s}</td><td>{d_s}</td></tr>"
+                )
+                first = False
+        parts.append("</table>")
+    else:
+        parts.append(
+            '<p class="small">No per-metric drift across common cells.</p>'
+        )
+    return parts
+
+
+def render_compare(
+    doc_a: Dict, doc_b: Dict, label_a: str, label_b: str
+) -> str:
+    parts = [
+        "<!DOCTYPE html>",
+        '<html lang="en"><head><meta charset="utf-8">',
+        "<title>MIG-serving scenario comparison</title>",
+        f"<style>{_CSS}</style></head><body>",
+        "<h1>MIG-serving scenario comparison</h1>",
+    ]
+    parts += compare_section(doc_a, doc_b, label_a, label_b)
+    parts.append("</body></html>")
+    return "\n".join(parts) + "\n"
+
+
 def render(doc: Dict, history: List[Tuple[str, Dict]]) -> str:
     cells = doc["cells"]
     parts = [
@@ -336,7 +458,34 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="skip the cross-PR trend section (hermetic runs)")
     ap.add_argument("--history", type=int, default=12, metavar="N",
                     help="max prior revisions in the trend (default 12)")
+    ap.add_argument("--compare", nargs=2, metavar=("A", "B"), default=None,
+                    help="diff two benchmark documents cell by cell "
+                         "(added/removed cells, per-metric deltas) instead "
+                         "of rendering the leaderboard; --bench is ignored")
     args = ap.parse_args(argv)
+
+    if args.compare is not None:
+        path_a, path_b = args.compare
+        docs = []
+        for p in (path_a, path_b):
+            with open(p) as f:
+                d = json.load(f)
+            if "cells" not in d or not d["cells"]:
+                raise SystemExit(f"{p}: no cells — not a scenario benchmark doc")
+            docs.append(d)
+        out_path = args.out or (os.path.splitext(path_b)[0] + "_compare.html")
+        text = render_compare(
+            docs[0], docs[1], os.path.basename(path_a), os.path.basename(path_b)
+        )
+        with open(out_path, "w") as f:
+            f.write(text)
+        diff = compare_cells(docs[0], docs[1])
+        print(
+            f"wrote {out_path} ({len(diff['changed'])} changed, "
+            f"{len(diff['unchanged'])} unchanged, {len(diff['added'])} added, "
+            f"{len(diff['removed'])} removed)"
+        )
+        return 0
 
     with open(args.bench) as f:
         doc = json.load(f)
